@@ -1,0 +1,41 @@
+"""Table: dispatch-plan throughput (the TPU-side hot path: cumsum-of-one-hot
+positions + scatter), jnp/XLA vs Pallas interpret — this is the ingest path
+of every training step and the MoE dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.kernels import ops, ref
+
+
+def run():
+    rng = np.random.default_rng(0)
+    n, m, cap = 8192, 32, 512
+    member = jnp.asarray(rng.integers(0, m, n).astype(np.int32))
+    payload = jnp.asarray(rng.normal(size=(n, 64)).astype(np.float32))
+
+    plan_ref = jax.jit(lambda mm: ref.dispatch_plan_ref(mm, n_members=m))
+    jax.block_until_ready(plan_ref(member))
+    us = timeit(lambda: jax.block_until_ready(plan_ref(member)))
+    row("dispatch_plan_jnp_xla", us, f"{n/(us/1e6)/1e6:.2f} M-events/s")
+
+    combine = jax.jit(lambda p, mm, pos: ops.combine_payloads(
+        p, mm, pos, n_members=m, capacity=cap))
+    pos, _ = plan_ref(member)
+    jax.block_until_ready(combine(payload, member, pos))
+    us2 = timeit(lambda: jax.block_until_ready(combine(payload, member, pos)))
+    gb = payload.size * 4 / 1e9
+    row("dispatch_combine_scatter", us2,
+        f"{gb/(us2/1e6):.2f} GB/s payload scatter")
+
+    us3 = timeit(lambda: jax.block_until_ready(
+        ops.plan_dispatch(member, m, use_pallas=True, interpret=True)), iters=3)
+    row("dispatch_plan_pallas_interpret", us3,
+        f"{n/(us3/1e6)/1e6:.3f} M-events/s (functional model)")
+
+
+if __name__ == "__main__":
+    run()

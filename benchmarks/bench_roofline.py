@@ -1,0 +1,32 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+Prints one CSV row per compiled (arch x shape x mesh) cell; us_per_call is
+the projected step time (max of the three terms) in microseconds."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import row
+from repro.analysis import roofline as RL
+
+ART_DIR = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+
+
+def run():
+    if not os.path.isdir(ART_DIR):
+        row("roofline", 0.0, f"no artifacts under {ART_DIR}; run "
+            "`python -m repro.launch.dryrun --all --mesh both` first")
+        return
+    arts = [a for a in RL.load_artifacts(ART_DIR) if "skipped" not in a]
+    for a in sorted(arts, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        r = RL.analyze(a)
+        name = f"roofline_{r.arch}_{r.shape}_{r.mesh}"
+        if a.get("variant", "baseline") != "baseline":
+            name += f"_{a['variant']}"
+        row(name, r.step_time_s * 1e6,
+            f"bottleneck={r.bottleneck} util={r.hw_utilization:.3f} "
+            f"compute_s={r.compute_s:.4g} memory_s={r.memory_s:.4g} "
+            f"collective_s={r.collective_s:.4g}")
+
+
+if __name__ == "__main__":
+    run()

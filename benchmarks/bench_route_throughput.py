@@ -1,0 +1,53 @@
+"""Paper fig. 5/7: LB data-plane line rate (98 Gbps at 9KB packets on the
+U280). Here: routed packets/s through the jnp data plane and the Pallas
+kernel (interpret mode — CPU functional model; the TPU-projected figure uses
+the kernel's VMEM-resident table reads, see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import EpochManager, MemberSpec, encode_headers
+from repro.kernels import ops, ref
+
+N_PACKETS = 16_384
+PACKET_BYTES = 9000
+
+
+def _setup():
+    em = EpochManager(max_members=64)
+    em.initialize({i: MemberSpec(node_id=i, lane_bits=2) for i in range(10)},
+                  {i: 1.0 for i in range(10)})
+    t = em.device_tables()
+    rng = np.random.default_rng(0)
+    ev = rng.integers(0, 1 << 48, N_PACKETS).astype(np.uint64)
+    en = rng.integers(0, 1 << 16, N_PACKETS).astype(np.uint32)
+    return t, jnp.asarray(encode_headers(ev, en))
+
+
+def run():
+    tables, headers = _setup()
+    tt = ref.tables_tuple(tables)
+
+    jit_ref = jax.jit(lambda h: ref.lb_route_ref(h, tt))
+    out = jit_ref(headers)
+    jax.block_until_ready(out)
+    us = timeit(lambda: jax.block_until_ready(jit_ref(headers)))
+    pps = N_PACKETS / (us / 1e6)
+    gbps = pps * PACKET_BYTES * 8 / 1e9
+    row("route_throughput_jnp_xla", us,
+        f"{pps/1e6:.2f} Mpps = {gbps:.1f} Gbps at 9KB (paper: 98 Gbps line rate)")
+
+    out = ops.route_packets(headers, tables, use_pallas=True, interpret=True)
+    jax.block_until_ready(out)
+    us2 = timeit(lambda: jax.block_until_ready(
+        ops.route_packets(headers, tables, use_pallas=True, interpret=True)),
+        iters=3)
+    row("route_throughput_pallas_interpret", us2,
+        f"{N_PACKETS/(us2/1e6)/1e6:.3f} Mpps (functional model on CPU)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Shared benchmark utilities. Every bench prints ``name,us_per_call,derived``
+CSV rows (derived = the paper-comparable figure)."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *, warmup: int = 2, iters: int = 10) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def row(name: str, us: float, derived: str) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

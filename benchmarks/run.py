@@ -1,0 +1,32 @@
+"""Benchmark harness — one bench per paper table/figure (+ the roofline
+table from the dry-run artifacts). Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_dispatch, bench_epoch_switch,
+                            bench_fairness, bench_reassembly,
+                            bench_route_throughput, bench_roofline)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in (bench_route_throughput, bench_epoch_switch, bench_fairness,
+                bench_reassembly, bench_dispatch, bench_roofline):
+        try:
+            mod.run()
+        except Exception as e:  # pragma: no cover
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

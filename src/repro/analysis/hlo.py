@@ -1,0 +1,197 @@
+"""Collective-byte accounting over compiled (post-SPMD) HLO text —
+computation-aware: ops inside while bodies (scan-over-layers, q-chunk scans)
+are multiplied by the loop trip count (XLA annotates scheduled whiles with
+backend_config known_trip_count).
+
+In scheduled HLO text operands are bare value names, so sizes derive from the
+*output* shape + the replica-group size, with ring-algorithm wire factors
+(per participating device):
+
+    all-gather:         out = full gathered buffer F;  wire = F*(g-1)/g
+    all-reduce:         out = F;                       wire = 2*F*(g-1)/g
+    reduce-scatter:     out = shard s, F = s*g;        wire = F*(g-1)/g
+    all-to-all:         out = F;                       wire = F*(g-1)/g
+    collective-permute: out = F;                       wire = F
+
+NOTE (documented in EXPERIMENTS.md): the CPU backend's float normalization
+widens bf16 buffers to f32, so byte figures are ~2x the TPU bf16 values;
+the roofline applies the bf16 correction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"=\s*(?P<out>.*?)\s*"
+    r"\b(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?(?:\.\d+)?\("
+)
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_BODY_RE = re.compile(r"\bbody=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"\bcondition=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{"n"\s*:\s*"(\d+)"')
+_CALL_RE = re.compile(r"\b(?:to_apply|true_computation|false_computation)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^\}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 2
+
+
+def _parse_computations(hlo_text: str):
+    """Split text into {comp_name: [lines]}, and find the entry name."""
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps, entry
+
+
+def _multipliers(comps, entry):
+    """Effective execution count per computation (trip-count propagation)."""
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            mb = _BODY_RE.search(line)
+            if mb and "while(" in line:
+                trip = _TRIP_RE.search(line)
+                n = float(trip.group(1)) if trip else 1.0
+                edges[name].append((mb.group(1), n))
+                mc = _COND_RE.search(line)
+                if mc:
+                    edges[name].append((mc.group(1), n + 1))
+                continue
+            for callee in _CALL_RE.findall(line):
+                edges[name].append((callee, 1.0))
+            mbr = _BRANCH_RE.search(line)
+            if mbr:
+                for c in mbr.group(1).split(","):
+                    c = c.strip().lstrip("%")
+                    if c:
+                        edges[name].append((c, 1.0))
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        return {k: 1.0 for k in comps}
+    mult[entry] = 1.0
+    # propagate (graph is a DAG of computations)
+    changed = True
+    it = 0
+    while changed and it < 100:
+        changed = False
+        it += 1
+        snapshot = dict(mult)
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for src, outs in edges.items():
+            for dst, n in outs:
+                new[dst] += snapshot.get(src, 0.0) * n
+        new[entry] = 1.0
+        if dict(new) != dict(snapshot):
+            changed = True
+        mult = new
+    return mult
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict            # op kind -> static count
+    dynamic_ops: dict    # op kind -> trip-weighted count
+    payload_bytes: dict  # op kind -> full-buffer bytes (per device, weighted)
+    wire_bytes: dict     # op kind -> ring-model wire bytes (per device, weighted)
+    total_payload: float
+    total_wire: float
+
+    def to_json(self):
+        return {
+            "ops": dict(self.ops),
+            "dynamic_ops": {k: float(v) for k, v in self.dynamic_ops.items()},
+            "payload_bytes": {k: float(v) for k, v in self.payload_bytes.items()},
+            "wire_bytes": {k: float(v) for k, v in self.wire_bytes.items()},
+            "total_payload_bytes": float(self.total_payload),
+            "total_wire_bytes": float(self.total_wire),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    comps, entry = _parse_computations(hlo_text)
+    mult = _multipliers(comps, entry)
+    ops = defaultdict(int)
+    dyn = defaultdict(float)
+    payload = defaultdict(float)
+    wire = defaultdict(float)
+    for cname, lines in comps.items():
+        k = mult.get(cname, 0.0)
+        if k <= 0:
+            continue
+        for line in lines:
+            m = _OP_RE.search(line)
+            if not m:
+                continue
+            kind = m.group("kind")
+            shapes = _SHAPE_RE.findall(m.group("out"))
+            if not shapes:
+                continue
+            out_bytes = sum(_shape_bytes(d, s) for d, s in shapes)
+            if m.group("start"):
+                out_bytes //= 2  # async tuple aliases (in, out)
+            g = _group_size(line)
+            if g <= 1:
+                continue
+            frac = (g - 1) / g
+            if kind == "all-gather":
+                full, w = out_bytes, out_bytes * frac
+            elif kind == "all-reduce":
+                full, w = out_bytes, 2.0 * out_bytes * frac
+            elif kind == "reduce-scatter":
+                full = out_bytes * g
+                w = full * frac
+            elif kind == "all-to-all":
+                full, w = out_bytes, out_bytes * frac
+            else:  # collective-permute
+                full, w = out_bytes, float(out_bytes)
+            ops[kind] += 1
+            dyn[kind] += k
+            payload[kind] += k * full
+            wire[kind] += k * w
+    return CollectiveStats(
+        ops=ops, dynamic_ops=dyn, payload_bytes=payload, wire_bytes=wire,
+        total_payload=float(sum(payload.values())),
+        total_wire=float(sum(wire.values())),
+    )

@@ -1,0 +1,101 @@
+"""Three-term roofline from dry-run artifacts (TPU v5e constants).
+
+    compute term    = FLOPs_global   / (chips * 197e12)      [bf16 peak]
+    memory term     = bytes_global   / (chips * 819e9)       [HBM bw]
+    collective term = wire_bytes_gbl / (chips * 50e9)        [per-link ICI]
+
+cost_analysis() on the partitioned module reports *per-device* flops/bytes;
+global = per_device * chips, so each term equals per_device_quantity /
+per_chip_rate. MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (prefill/decode);
+the ratio MODEL_FLOPS / HLO_FLOPs_global exposes remat/padding/redundancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+PEAK_FLOPS = 197e12   # bf16 / chip
+HBM_BW = 819e9        # bytes/s / chip
+ICI_BW = 50e9         # bytes/s / link (1 effective link assumed; see notes)
+BF16_CORRECTION = 0.5  # CPU backend widens bf16 buffers to f32 in HLO text
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    useful_ratio: float
+    step_time_s: float
+    hw_utilization: float  # model_flops / (step_time * chips * peak)
+    roofline_fraction: float  # max(compute, memory) / step — how close the
+    # projected step sits to its unavoidable (compute|memory) bound; the
+    # right score for memory-bound decode shapes where compute-MFU ~ 0.
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def analyze(artifact: dict) -> Roofline:
+    """Terms: compute/memory from the analytic per-device model
+    (analysis/perfmodel.py — HLO cost_analysis counts scan bodies once, see
+    module docstring), collectives measured from trip-count-aware HLO parsing
+    with the bf16 correction (CPU HLO stores would-be-bf16 buffers as f32)."""
+    chips = artifact["chips"]
+    fpd = float(artifact["analytic"]["flops"])
+    bpd = float(artifact["analytic"]["bytes_hbm"])
+    wire = float(artifact["collectives"]["total_wire_bytes"]) * BF16_CORRECTION
+    model_flops = float(artifact.get("model_flops", 0.0))
+
+    compute_s = fpd / PEAK_FLOPS
+    memory_s = bpd / HBM_BW
+    collective_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    useful = model_flops / (fpd * chips) if fpd else 0.0
+    hw_util = model_flops / (step * chips * PEAK_FLOPS) if step > 0 else 0.0
+    bound = max(compute_s, memory_s)
+    return Roofline(
+        arch=artifact["arch"].replace("-", "_").replace(".", "_"),
+        shape=artifact["shape"], mesh=artifact["mesh"],
+        chips=chips, flops_per_device=fpd, bytes_per_device=bpd,
+        wire_bytes_per_device=wire, model_flops=model_flops,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, useful_ratio=useful, step_time_s=step,
+        hw_utilization=hw_util,
+        roofline_fraction=bound / step if step > 0 else 0.0,
+    )
+
+
+def load_artifacts(art_dir: str) -> list[dict]:
+    out = []
+    for f in sorted(os.listdir(art_dir)):
+        if f.endswith(".json"):
+            with open(os.path.join(art_dir, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def markdown_table(rooflines: list[Roofline]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | useful FLOP ratio | roofline util |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in rooflines:
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.4g} | "
+            f"{r.memory_s:.4g} | {r.collective_s:.4g} | **{r.bottleneck}** | "
+            f"{r.useful_ratio:.3f} | {r.hw_utilization:.3f} |"
+        )
+    return hdr + "\n".join(rows) + "\n"

@@ -1,0 +1,35 @@
+"""Assigned architecture registry: --arch <id> selects one of these.
+
+Each module defines CONFIG (exact assigned config) and smoke_config()
+(reduced same-family config for CPU tests). Sources per the assignment
+table; see DESIGN.md §4 for applicability notes.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "llama_3_2_vision_90b",
+    "arctic_480b",
+    "mixtral_8x22b",
+    "granite_20b",
+    "stablelm_3b",
+    "chatglm3_6b",
+    "yi_6b",
+    "hubert_xlarge",
+    "zamba2_2_7b",
+    "rwkv6_7b",
+]
+
+def _normalize(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{_normalize(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{_normalize(arch)}")
+    return mod.smoke_config()

@@ -1,0 +1,35 @@
+"""EJ-FAT core: the paper's contribution as a composable JAX module."""
+
+from repro.core.calendar import build_calendar, calendar_counts, quotas_from_weights
+from repro.core.control_plane import (
+    ControlPolicy,
+    LoadBalancerControlPlane,
+    MemberTelemetry,
+)
+from repro.core.epoch import EpochManager, ReconfigurationError
+from repro.core.instance import N_INSTANCES, VirtualLoadBalancer
+from repro.core.lpm import LPMTable, Prefix, range_to_prefixes
+from repro.core.protocol import (
+    CALENDAR_SLOTS,
+    LB_SERVICE_PORT,
+    LBHeader,
+    MAGIC,
+    decode_fields,
+    encode_headers,
+    join64,
+    split64,
+    validate,
+)
+from repro.core.router import Route, dispatch, make_redistribute, member_positions, route
+from repro.core.tables import DeviceTables, MemberSpec, RouterState, TableError
+
+__all__ = [
+    "CALENDAR_SLOTS", "ControlPolicy", "DeviceTables", "EpochManager",
+    "LBHeader", "LB_SERVICE_PORT", "LPMTable", "LoadBalancerControlPlane",
+    "MAGIC", "MemberSpec", "MemberTelemetry", "N_INSTANCES", "Prefix",
+    "ReconfigurationError", "Route", "RouterState", "TableError",
+    "VirtualLoadBalancer", "build_calendar", "calendar_counts",
+    "decode_fields", "dispatch", "encode_headers", "join64",
+    "make_redistribute", "member_positions", "quotas_from_weights",
+    "range_to_prefixes", "route", "split64", "validate",
+]

@@ -1,0 +1,142 @@
+"""Control plane: telemetry-driven dynamic load balancing (paper §I-B.4/5).
+
+"Once an experiment starts running, for various reasons some compute nodes
+will be faster or slower than others. The load balancer needs a mechanism to
+change the weighting of the work it is delivering to each compute node."
+
+The controller consumes per-member telemetry (receive-queue fill fraction and
+processing rate — what the real EJ-FAT CP reads from CN daemons; in this
+framework: per-DP-worker step time and backlog from telemetry/metrics.py),
+produces new calendar weights with a PI controller per member, and schedules
+hit-less epoch switches through the EpochManager. It also handles elastic
+membership (add/remove CNs mid-run) and straggler mitigation (weight decay
+for slow members).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.epoch import EpochManager
+from repro.core.tables import MemberSpec
+
+
+@dataclasses.dataclass
+class MemberTelemetry:
+    """One feedback sample from a member (CN / DP worker)."""
+
+    fill: float = 0.0          # receive-queue fill fraction in [0, 1]
+    rate: float = 1.0          # events/s processed (relative ok)
+    healthy: bool = True
+
+
+@dataclasses.dataclass
+class ControlPolicy:
+    target_fill: float = 0.5   # setpoint for receive-queue occupancy
+    kp: float = 0.5            # proportional gain on (target - fill)
+    ki: float = 0.1            # integral gain
+    min_weight: float = 0.05   # floor so a member stays reachable
+    max_weight: float = 8.0
+    epoch_horizon: int = 1024  # events in the future to place the boundary
+
+
+class LoadBalancerControlPlane:
+    """Monitors telemetry, recomputes weights, drives epoch transitions."""
+
+    def __init__(self, manager: EpochManager, policy: ControlPolicy | None = None):
+        self.manager = manager
+        self.policy = policy or ControlPolicy()
+        self.weights: dict[int, float] = {}
+        self._integral: dict[int, float] = {}
+        self.members: dict[int, MemberSpec] = {}
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self, members: dict[int, MemberSpec], weights: Optional[dict] = None) -> int:
+        self.members = dict(members)
+        self.weights = {m: 1.0 for m in members} if weights is None else dict(weights)
+        self._integral = {m: 0.0 for m in members}
+        return self.manager.initialize(self.members, self.weights)
+
+    # -- feedback ------------------------------------------------------------
+    def update_weights(self, telemetry: dict[int, MemberTelemetry]) -> dict[int, float]:
+        """PI update: slow/full members shed slots, fast/empty members gain."""
+        p = self.policy
+        new = {}
+        for mid, w in self.weights.items():
+            t = telemetry.get(mid)
+            if t is None or not t.healthy:
+                new[mid] = 0.0 if (t is not None and not t.healthy) else w
+                continue
+            err = p.target_fill - t.fill  # positive => under-filled => send more
+            self._integral[mid] = float(
+                np.clip(self._integral[mid] + p.ki * err, -1.0, 1.0)
+            )
+            factor = 1.0 + p.kp * err + self._integral[mid]
+            # Organic decay never reaches zero — weight 0 is reserved for a
+            # deliberate drain (mark_failed / explicit weights).
+            new[mid] = w * max(factor, 0.1)
+        # Weights are only meaningful relatively (calendar share = w / sum w):
+        # renormalize to mean 1 so healthy members don't all saturate the
+        # ceiling and erase the straggler signal.
+        live = [v for v in new.values() if v > 0]
+        mean = float(np.mean(live)) if live else 1.0
+        for mid in new:
+            if new[mid] > 0:
+                new[mid] = float(np.clip(new[mid] / max(mean, 1e-9),
+                                         p.min_weight, p.max_weight))
+        self.weights = new
+        return new
+
+    # -- elastic membership ----------------------------------------------------
+    def add_members(self, members: dict[int, MemberSpec], weight: float = 1.0) -> None:
+        for mid, spec in members.items():
+            self.members[mid] = spec
+            self.weights[mid] = weight
+            self._integral[mid] = 0.0
+
+    def remove_members(self, member_ids) -> None:
+        for mid in member_ids:
+            self.members.pop(mid, None)
+            self.weights.pop(mid, None)
+            self._integral.pop(mid, None)
+
+    def mark_failed(self, member_ids) -> None:
+        """Fault handling: failed members are removed from the *next* epoch;
+        the current epoch is immutable (stateless data plane keeps running)."""
+        self.remove_members(member_ids)
+
+    # -- quiesce / garbage collection ---------------------------------------------
+    def garbage_collect(self, processed_event: int) -> list[int]:
+        """Quiesce every drained epoch (end_event <= high-watermark of
+        processed events). The paper's 'after waiting an appropriate time
+        for all events from the previous Epoch to have quiesced' — here the
+        watermark is explicit. Frees calendar rows + member entries."""
+        freed = []
+        for eid, rec in sorted(self.manager.records.items()):
+            if (rec.active and rec.end_event is not None
+                    and rec.end_event <= processed_event
+                    and eid != self.manager.current_epoch):
+                try:
+                    self.manager.quiesce(eid)
+                    freed.append(eid)
+                except Exception:
+                    pass
+        return freed
+
+    # -- epoch scheduling --------------------------------------------------------
+    def schedule_epoch(self, current_event: int, boundary: Optional[int] = None) -> int:
+        """Activate the new weighting/membership at a near-future boundary."""
+        if boundary is None:
+            boundary = current_event + self.policy.epoch_horizon
+        # Rapid successive reconfigurations: the boundary must stay strictly
+        # ahead of the (possibly just-created) current epoch's start.
+        cur = self.manager.records.get(self.manager.current_epoch)
+        if cur is not None:
+            boundary = max(boundary, cur.start_event + 1)
+        live = {m: s for m, s in self.members.items() if self.weights.get(m, 0.0) > 0.0}
+        live_w = {m: self.weights[m] for m in live}
+        if not live:
+            raise RuntimeError("no healthy members to schedule")
+        return self.manager.reconfigure(live, live_w, boundary)

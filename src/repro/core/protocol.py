@@ -1,0 +1,136 @@
+"""EJ-FAT Load Balancer protocol header (paper fig. 2).
+
+Wire layout (16 bytes, network order), carried after the UDP header::
+
+    0               1               2               3
+    +-------+-------+-------+-------+-------+-------+-------+-------+
+    | 'L'   | 'B'   |Version|Proto  |     rsvd      |    Entropy    |
+    +-------+-------+-------+-------+-------+-------+-------+-------+
+    |                     Event Number (64 bit)                     |
+    +---------------------------------------------------------------+
+
+Device-side representation: packets are carried as ``uint32[..., 4]`` words
+
+    word0 = magic(16) << 16 | version(8) << 8 | protocol(8)
+    word1 = rsvd(16)  << 16 | entropy(16)
+    word2 = event number high 32 bits
+    word3 = event number low  32 bits
+
+JAX runs with 32-bit ints by default, so 64-bit event numbers live as
+(hi, lo) uint32 pairs on device; host code uses python ints / np.uint64.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+# 'L' << 8 | 'B'  — also the LB UDP service port (paper §III-A: 19522 = 0x4C42).
+MAGIC = 0x4C42
+VERSION = 1
+PROTOCOL = 1
+LB_SERVICE_PORT = 19522
+
+HEADER_WORDS = 4
+HEADER_BYTES = 16
+# Paper §II-C: 9KB max network packet size bounds a segment (headers included).
+MAX_PACKET_BYTES = 9000
+MAX_SEGMENT_PAYLOAD = MAX_PACKET_BYTES - HEADER_BYTES - 28  # IP(20) + UDP(8)
+
+# Paper §III fig. 4: the 9 LSBs of the event number select the calendar slot.
+CALENDAR_SLOT_BITS = 9
+CALENDAR_SLOTS = 1 << CALENDAR_SLOT_BITS
+SLOT_MASK = CALENDAR_SLOTS - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class LBHeader:
+    """Host-side view of one LB protocol header."""
+
+    event_number: int
+    entropy: int
+    version: int = VERSION
+    protocol: int = PROTOCOL
+    rsvd: int = 0
+
+    def words(self) -> np.ndarray:
+        return encode_headers(
+            np.asarray([self.event_number], dtype=np.uint64),
+            np.asarray([self.entropy], dtype=np.uint32),
+            version=self.version,
+            protocol=self.protocol,
+            rsvd=self.rsvd,
+        )[0]
+
+
+def split64(x) -> tuple[np.ndarray, np.ndarray]:
+    """Split uint64 -> (hi, lo) uint32. Host-side helper."""
+    x = np.asarray(x, dtype=np.uint64)
+    hi = (x >> np.uint64(32)).astype(np.uint32)
+    lo = (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    return hi, lo
+
+
+def join64(hi, lo) -> np.ndarray:
+    hi = np.asarray(hi, dtype=np.uint64)
+    lo = np.asarray(lo, dtype=np.uint64)
+    return (hi << np.uint64(32)) | lo
+
+
+def encode_headers(
+    event_numbers: np.ndarray,
+    entropy: np.ndarray,
+    *,
+    version: int = VERSION,
+    protocol: int = PROTOCOL,
+    rsvd: int = 0,
+) -> np.ndarray:
+    """Encode N headers into uint32[N, 4] wire words (host side, numpy)."""
+    event_numbers = np.asarray(event_numbers, dtype=np.uint64)
+    entropy = np.asarray(entropy, dtype=np.uint32)
+    if event_numbers.shape != entropy.shape:
+        raise ValueError("event_numbers and entropy must have matching shapes")
+    n = event_numbers.shape[0]
+    out = np.empty((n, HEADER_WORDS), dtype=np.uint32)
+    out[:, 0] = (MAGIC << 16) | ((version & 0xFF) << 8) | (protocol & 0xFF)
+    out[:, 1] = ((rsvd & 0xFFFF) << 16) | (entropy & 0xFFFF)
+    hi, lo = split64(event_numbers)
+    out[:, 2] = hi
+    out[:, 3] = lo
+    return out
+
+
+def decode_fields(words):
+    """Decode header words -> dict of field arrays. Works on jnp or np arrays.
+
+    Returns uint32 arrays: magic, version, protocol, rsvd, entropy,
+    event_hi, event_lo.
+    """
+    w = words
+    w0 = w[..., 0]
+    w1 = w[..., 1]
+    return {
+        "magic": (w0 >> 16) & 0xFFFF,
+        "version": (w0 >> 8) & 0xFF,
+        "protocol": w0 & 0xFF,
+        "rsvd": (w1 >> 16) & 0xFFFF,
+        "entropy": w1 & 0xFFFF,
+        "event_hi": w[..., 2],
+        "event_lo": w[..., 3],
+    }
+
+
+def validate(words):
+    """Parser validation (paper §III-A): magic and version must match.
+
+    Returns a bool array; packets failing validation are discarded upstream.
+    No parsing is done on any bytes beyond the LB header.
+    """
+    f = decode_fields(words)
+    return jnp.logical_and(f["magic"] == MAGIC, f["version"] == VERSION)
+
+
+def event_slot(event_lo):
+    """Calendar slot = 9 LSBs of the event number (paper fig. 4)."""
+    return event_lo & SLOT_MASK

@@ -1,0 +1,187 @@
+"""Stateless data-plane routing (jnp) + on-mesh redistribution (shard_map).
+
+This is the TPU mapping of the paper's data plane: the routing decision for a
+packet is a pure function of (header fields, programmed tables) — examine a
+single packet with no other history and determine its final destination
+(paper §I-B.3). The Pallas kernel in kernels/lb_route.py implements the same
+math with explicit VMEM tiling; this module is the reference semantics and
+the default path, and also provides the dispatch/redistribution collectives
+that realize "delivery to the selected compute node" over the TPU ICI fabric.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.protocol import SLOT_MASK, validate
+from repro.core.tables import DeviceTables
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Route:
+    member: jnp.ndarray  # int32[N]  (-1 => discard)
+    node: jnp.ndarray    # int32[N]  destination node / DP slice
+    lane: jnp.ndarray    # int32[N]  receive lane (UDP port analogue)
+    valid: jnp.ndarray   # bool[N]
+
+
+def _ge_u64(e_hi, e_lo, s_hi, s_lo):
+    """(e_hi, e_lo) >= (s_hi, s_lo) on uint32 pairs, broadcasting."""
+    return (e_hi > s_hi) | ((e_hi == s_hi) & (e_lo >= s_lo))
+
+
+def epoch_row(tables: DeviceTables, event_hi, event_lo):
+    """Sorted-boundary segment lookup: row index into the calendar table.
+
+    Equivalent to the P4 LPM 'Calendar Epoch Assignment' (equivalence is
+    property-tested against core/lpm.py). idx = (#segments with start <= e) - 1.
+    """
+    e_hi = event_hi[..., None].astype(jnp.uint32)
+    e_lo = event_lo[..., None].astype(jnp.uint32)
+    ge = _ge_u64(e_hi, e_lo, tables.seg_start_hi, tables.seg_start_lo)
+    idx = jnp.sum(ge.astype(jnp.int32), axis=-1) - 1
+    idx = jnp.clip(idx, 0, tables.seg_row.shape[-1] - 1)
+    return tables.seg_row[idx]
+
+
+def route(
+    tables: DeviceTables,
+    event_hi: jnp.ndarray,
+    event_lo: jnp.ndarray,
+    entropy: jnp.ndarray,
+    header_words: jnp.ndarray | None = None,
+) -> Route:
+    """Route N packets. All lookups are vectorized gathers on small tables."""
+    event_hi = event_hi.astype(jnp.uint32)
+    event_lo = event_lo.astype(jnp.uint32)
+    row = epoch_row(tables, event_hi, event_lo)
+    slot = (event_lo & SLOT_MASK).astype(jnp.int32)
+    member = tables.calendars[jnp.clip(row, 0, tables.calendars.shape[0] - 1), slot]
+
+    m = jnp.clip(member, 0, tables.member_node.shape[0] - 1)
+    node = tables.member_node[m]
+    lane = tables.member_base_lane[m] + (
+        entropy.astype(jnp.int32) & tables.member_lane_mask[m]
+    )
+    ok = (row >= 0) & (tables.member_valid[m] > 0) & (member >= 0)
+    if header_words is not None:
+        ok = ok & validate(header_words)
+    member = jnp.where(ok, member, -1)
+    node = jnp.where(ok, node, -1)
+    lane = jnp.where(ok, lane, -1)
+    return Route(member=member, node=node, lane=lane, valid=ok)
+
+
+def route_instances(
+    stacked: DeviceTables,
+    instance_id: jnp.ndarray,
+    event_hi, event_lo, entropy,
+    header_words=None,
+) -> Route:
+    """Route packets across virtual LB instances (paper §I-C, 4 instances).
+
+    ``stacked`` carries a leading instance dim (tables.stack_tables); each
+    packet's tables are selected by its instance id (from the L3 filter).
+    """
+    n_inst = stacked.seg_row.shape[0]
+    iid = jnp.clip(instance_id.astype(jnp.int32), 0, n_inst - 1)
+
+    def one(i):
+        sub = DeviceTables(
+            **{f.name: getattr(stacked, f.name)[i] for f in dataclasses.fields(DeviceTables)}
+        )
+        return route(sub, event_hi, event_lo, entropy, header_words)
+
+    routes = [one(i) for i in range(n_inst)]
+    sel = lambda field: jnp.select(
+        [iid == i for i in range(n_inst)], [getattr(r, field) for r in routes]
+    )
+    return Route(member=sel("member"), node=sel("node"), lane=sel("lane"),
+                 valid=jnp.select([iid == i for i in range(n_inst)],
+                                  [r.valid for r in routes]))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: pack routed packets into per-member buffers (capacity model).
+# ---------------------------------------------------------------------------
+
+def member_positions(member: jnp.ndarray, n_members: int, capacity: int):
+    """Position of each packet within its member's buffer (cumsum of one-hot).
+
+    Returns (pos int32[N], keep bool[N], counts int32[n_members]). Packets
+    beyond ``capacity`` are dropped — the analogue of the paper's note that
+    events targeting an unprogrammed slot are discarded, except here we
+    account for every drop (tested).
+    """
+    onehot = jax.nn.one_hot(member, n_members, dtype=jnp.int32)  # [N, M]
+    pos_in_member = jnp.cumsum(onehot, axis=0) - onehot  # exclusive cumsum
+    pos = jnp.sum(pos_in_member * onehot, axis=-1)
+    counts = jnp.sum(onehot, axis=0)
+    keep = (member >= 0) & (pos < capacity)
+    return pos, keep, counts
+
+
+def dispatch(
+    payload: jnp.ndarray,  # [N, ...]
+    member: jnp.ndarray,   # int32[N], -1 = dropped
+    n_members: int,
+    capacity: int,
+):
+    """Scatter payloads into [n_members, capacity, ...] buffers + occupancy."""
+    pos, keep, counts = member_positions(member, n_members, capacity)
+    buf = jnp.zeros((n_members, capacity) + payload.shape[1:], payload.dtype)
+    # Masked packets go to an out-of-bounds index; mode='drop' discards the
+    # write (an in-bounds dummy index would clobber a real packet's slot).
+    m_idx = jnp.where(keep, member, n_members)
+    p_idx = jnp.where(keep, pos, capacity)
+    buf = buf.at[m_idx, p_idx].set(payload, mode="drop")
+    occ = jnp.zeros((n_members, capacity), jnp.int32).at[m_idx, p_idx].set(
+        jnp.ones_like(member, jnp.int32), mode="drop"
+    )
+    return buf, occ, counts
+
+
+# ---------------------------------------------------------------------------
+# On-mesh redistribution: the "LB -> CN delivery" as an all_to_all collective.
+# ---------------------------------------------------------------------------
+
+def make_redistribute(mesh, axis_names, capacity_per_src: int):
+    """Build a shard_map fn exchanging event payloads between DP members.
+
+    Each data-parallel shard plays both DAQ-aggregation point (arrival order)
+    and CN (event owner). Within a shard: pack local events into per-member
+    send buffers sized ``capacity_per_src``; ``lax.all_to_all`` swaps the
+    member dim across shards; each member then holds every event routed to it.
+
+    Returns fn(payload[B_local*W, ...], member[B_local*W]) ->
+      (recv[W*capacity_per_src, ...], occ[W*capacity_per_src]) per shard.
+    """
+    axis = axis_names if isinstance(axis_names, (tuple, list)) else (axis_names,)
+
+    def _local(payload, member):
+        n_members = 1
+        for a in axis:
+            n_members *= mesh.shape[a]
+        buf, occ, _ = dispatch(payload, member, n_members, capacity_per_src)
+        # [M, cap, ...] -> all_to_all over member dim -> [M, cap, ...] where
+        # dim0 is now the source shard index.
+        recv = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0, tiled=False)
+        rocc = jax.lax.all_to_all(occ, axis, split_axis=0, concat_axis=0, tiled=False)
+        flat = recv.reshape((-1,) + recv.shape[2:])
+        return flat, rocc.reshape(-1)
+
+    from jax.experimental.shard_map import shard_map
+
+    pspec = P(axis if len(axis) > 1 else axis[0])
+    return shard_map(
+        _local,
+        mesh=mesh,
+        in_specs=(pspec, pspec),
+        out_specs=(pspec, pspec),
+        check_rep=False,
+    )

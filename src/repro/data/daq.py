@@ -1,0 +1,74 @@
+"""Synthetic DAQ event sources.
+
+Models the paper's traffic: several DAQs observing the same triggers emit
+Event Data Bundles tagged with a *common*, monotonically increasing Event
+Number (hardware-trigger-synchronized, §II-A: "a common method to assign an
+Event Number is to use the high resolution timestamp from the DAQ trigger").
+Payloads here are token sequences (the framework trains LMs on the streamed
+events), with per-DAQ variable bundle sizes as in fig. 7a.
+
+Event numbers advance by a random stride (timestamp-like) while keeping the
+9 LSBs uniform — the paper's requirement for statistically even balancing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EventBundle:
+    event_number: int
+    daq_id: int
+    entropy: int
+    payload: np.ndarray  # uint8 bytes (serialized tokens)
+
+
+@dataclasses.dataclass
+class DAQConfig:
+    n_daqs: int = 5
+    seq_len: int = 128
+    vocab: int = 256
+    mean_bundle_bytes: int = 24_000  # > 9KB MTU => multiple segments
+    seed: int = 0
+    timestamp_stride: tuple[int, int] = (1, 7)  # uniform stride range
+
+
+class DAQFleet:
+    """Generates per-trigger bundles from all DAQs (synchronized numbers)."""
+
+    def __init__(self, cfg: DAQConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.event_number = int(self.rng.integers(1, 1 << 20))
+
+    def tokens_for_event(self, event_number: int) -> np.ndarray:
+        r = np.random.default_rng(event_number)  # reproducible per event
+        return r.integers(0, self.cfg.vocab, self.cfg.seq_len).astype(np.int32)
+
+    def next_trigger(self) -> list[EventBundle]:
+        """One hardware trigger: every DAQ emits a bundle for this event."""
+        ev = self.event_number
+        lo, hi = self.cfg.timestamp_stride
+        self.event_number += int(self.rng.integers(lo, hi + 1))
+        entropy = int(self.rng.integers(0, 1 << 16))
+        tokens = self.tokens_for_event(ev)
+        out = []
+        for d in range(self.cfg.n_daqs):
+            nbytes = int(self.rng.normal(self.cfg.mean_bundle_bytes,
+                                         self.cfg.mean_bundle_bytes / 8))
+            nbytes = max(1024, nbytes)
+            r = np.random.default_rng((ev << 3) ^ d)
+            payload = r.integers(0, 256, nbytes).astype(np.uint8)
+            # First bytes carry the token payload so CN-side reassembly can
+            # rebuild the training sample.
+            tok_bytes = tokens.astype("<i4").tobytes()
+            payload[: len(tok_bytes)] = np.frombuffer(tok_bytes, np.uint8)
+            out.append(EventBundle(ev, d, entropy, payload))
+        return out
+
+    def stream(self, n_triggers: int) -> Iterator[list[EventBundle]]:
+        for _ in range(n_triggers):
+            yield self.next_trigger()

@@ -1,0 +1,101 @@
+"""End-to-end data pipeline: DAQs -> segmentation -> WAN transport -> LB
+route -> per-member receive lanes -> reassembly -> training batches.
+
+This is the host-side of the system (what runs on CN ingest daemons); the
+device-side ingest (all_to_all redistribution inside train_step) consumes
+the batches this pipeline emits. The pipeline is also the test harness for
+the paper's fig. 7 experiments (benchmarks/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.epoch import EpochManager
+from repro.core.protocol import decode_fields, join64
+from repro.core.router import route
+from repro.data.daq import DAQConfig, DAQFleet
+from repro.data.segmentation import Reassembler, Segment, segment_bundle
+from repro.data.transport import TransportConfig, WANTransport
+
+
+@dataclasses.dataclass
+class PipelineStats:
+    n_packets: int = 0
+    n_routed: int = 0
+    n_discarded: int = 0
+    per_member: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+    per_lane: dict = dataclasses.field(default_factory=lambda: defaultdict(int))
+
+
+class StreamingPipeline:
+    """Drives DAQ traffic through the LB into per-member reassembly lanes."""
+
+    def __init__(self, daq_cfg: DAQConfig, transport_cfg: TransportConfig,
+                 manager: EpochManager):
+        self.fleet = DAQFleet(daq_cfg)
+        self.wan = WANTransport(transport_cfg)
+        self.manager = manager
+        # lane-indexed reassemblers per member (entropy RSS lanes)
+        self.lanes: dict[tuple[int, int], Reassembler] = defaultdict(Reassembler)
+        self.stats = PipelineStats()
+        self.routed_log: list[tuple[int, int, int]] = []  # (event, member, lane)
+
+    def _route_batch(self, segments: list[Segment]):
+        tables = self.manager.device_tables()
+        words = np.stack([s.lb_words for s in segments])
+        import jax.numpy as jnp
+        f = decode_fields(jnp.asarray(words))
+        r = route(tables, f["event_hi"], f["event_lo"], f["entropy"],
+                  header_words=jnp.asarray(words))
+        return (np.asarray(r.member), np.asarray(r.node),
+                np.asarray(r.lane), np.asarray(r.valid))
+
+    def pump(self, n_triggers: int) -> list[np.ndarray]:
+        """Run n triggers end to end; returns completed bundle payloads."""
+        segments: list[Segment] = []
+        for bundles in self.fleet.stream(n_triggers):
+            for b in bundles:
+                segments.extend(segment_bundle(b))
+        arrived = self.wan.deliver(segments)
+        if not arrived:
+            return []
+        member, node, lane, valid = self._route_batch(arrived)
+        done = []
+        for seg, m, l, ok in zip(arrived, member, lane, valid):
+            self.stats.n_packets += 1
+            if not ok:
+                self.stats.n_discarded += 1
+                continue
+            self.stats.n_routed += 1
+            self.stats.per_member[int(m)] += 1
+            self.stats.per_lane[(int(m), int(l))] += 1
+            self.routed_log.append((seg.event_number, int(m), int(l)))
+            got = self.lanes[(int(m), int(l))].push(seg)
+            if got is not None:
+                done.append(got)
+        return done
+
+    def event_member_map(self) -> dict[int, set[int]]:
+        """event number -> set of members that received any of its packets.
+        The paper's atomicity invariant: every set has size 1."""
+        out: dict[int, set[int]] = defaultdict(set)
+        for ev, m, _l in self.routed_log:
+            out[ev].add(m)
+        return out
+
+
+def batches_from_bundles(payloads: list[np.ndarray], seq_len: int,
+                         batch_size: int) -> list[np.ndarray]:
+    """Decode token payloads (first seq_len*4 bytes) into [B, T] batches."""
+    toks = []
+    for p in payloads:
+        t = np.frombuffer(p[: seq_len * 4].tobytes(), "<i4")
+        if len(t) == seq_len:
+            toks.append(t)
+    out = []
+    for i in range(0, len(toks) - batch_size + 1, batch_size):
+        out.append(np.stack(toks[i : i + batch_size]))
+    return out

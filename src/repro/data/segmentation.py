@@ -1,0 +1,94 @@
+"""Application-layer segmentation & reassembly protocol (paper §II-C).
+
+"A dedicated, application layer segmentation and reassembly protocol is
+required. This protocol runs between the DAQ and the compute node. The load
+balancer does not participate." Each segment carries the LB header (same
+Event Number + same Entropy for all segments of a bundle => same CN, same
+receive lane) plus an opaque-to-the-LB segmentation header:
+
+    seg_hdr = (daq_id u16, seg_index u16, n_segs u16, payload_len u16)
+
+Reassembly is stateless per (event, daq): a buffer keyed by
+(event_number, daq_id) fills as segments arrive in any order; completion is
+detected by count. Losses surface as incomplete buffers (accounted + timed
+out), never as corrupt bundles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.protocol import MAX_SEGMENT_PAYLOAD, encode_headers
+from repro.data.daq import EventBundle
+
+SEG_HDR_BYTES = 8
+
+
+@dataclasses.dataclass
+class Segment:
+    """One wire packet: LB header words + segmentation header + payload."""
+
+    lb_words: np.ndarray  # uint32[4]
+    daq_id: int
+    seg_index: int
+    n_segs: int
+    payload: np.ndarray   # uint8
+    event_number: int     # host-side convenience (also in lb_words)
+    entropy: int
+
+
+def segment_bundle(bundle: EventBundle,
+                   mtu_payload: int = MAX_SEGMENT_PAYLOAD - SEG_HDR_BYTES) -> list[Segment]:
+    """Split one Event Data Bundle into <=9KB segments, all sharing the
+    bundle's (Event Number, Entropy)."""
+    data = bundle.payload
+    n_segs = max(1, -(-len(data) // mtu_payload))
+    words = encode_headers(
+        np.asarray([bundle.event_number], np.uint64),
+        np.asarray([bundle.entropy], np.uint32),
+    )[0]
+    return [
+        Segment(
+            lb_words=words, daq_id=bundle.daq_id, seg_index=i, n_segs=n_segs,
+            payload=data[i * mtu_payload : (i + 1) * mtu_payload],
+            event_number=bundle.event_number, entropy=bundle.entropy,
+        )
+        for i in range(n_segs)
+    ]
+
+
+class Reassembler:
+    """CN-side reassembly, one instance per receive lane (entropy/RSS lane:
+    the paper's fix for the single-core reassembly bottleneck)."""
+
+    def __init__(self):
+        self.buffers: dict[tuple[int, int], dict] = {}
+        self.completed: list[tuple[tuple[int, int], np.ndarray]] = []
+        self.n_duplicate = 0
+
+    def push(self, seg: Segment) -> Optional[np.ndarray]:
+        key = (seg.event_number, seg.daq_id)
+        buf = self.buffers.get(key)
+        if buf is None:
+            buf = {"parts": {}, "n_segs": seg.n_segs}
+            self.buffers[key] = buf
+        if seg.seg_index in buf["parts"]:
+            self.n_duplicate += 1
+            return None
+        buf["parts"][seg.seg_index] = seg.payload
+        if len(buf["parts"]) == buf["n_segs"]:
+            data = np.concatenate([buf["parts"][i] for i in range(buf["n_segs"])])
+            del self.buffers[key]
+            self.completed.append((key, data))
+            return data
+        return None
+
+    @property
+    def n_incomplete(self) -> int:
+        return len(self.buffers)
+
+    def drain_completed(self):
+        out, self.completed = self.completed, []
+        return out

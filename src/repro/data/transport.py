@@ -1,0 +1,46 @@
+"""UDP-over-WAN simulation: serialization, random path delay, reordering and
+loss injection (paper fig. 7b shows exactly this at the LB input: "packet
+serialization and random path delays are built into the traffic generator").
+Unidirectional, no backpressure, no retransmit (paper §I-B.6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TransportConfig:
+    reorder_window: int = 32      # max positions a packet can be displaced
+    loss_prob: float = 0.0
+    duplicate_prob: float = 0.0
+    seed: int = 0
+
+
+class WANTransport:
+    """Applies loss/duplication/reordering to a packet sequence."""
+
+    def __init__(self, cfg: TransportConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.n_lost = 0
+        self.n_dup = 0
+
+    def deliver(self, packets: list) -> list:
+        out = []
+        for p in packets:
+            if self.rng.random() < self.cfg.loss_prob:
+                self.n_lost += 1
+                continue
+            out.append(p)
+            if self.rng.random() < self.cfg.duplicate_prob:
+                out.append(p)
+                self.n_dup += 1
+        if len(out) > 1 and self.cfg.reorder_window > 0:
+            # bounded displacement: sort by (index + jitter)
+            idx = np.arange(len(out), dtype=np.float64)
+            jitter = self.rng.uniform(0, self.cfg.reorder_window, len(out))
+            order = np.argsort(idx + jitter, kind="stable")
+            out = [out[i] for i in order]
+        return out

@@ -1,0 +1,65 @@
+"""Logical-axis sharding context.
+
+Model code annotates activations with *logical* axis names
+(``constrain(x, ("batch", None, "embed"))``); the active `ShardingRules`
+maps logical names to physical mesh axes. With no mesh set, annotations are
+no-ops — the same model code runs in single-device smoke tests and in the
+512-chip dry-run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> physical mesh axis (or tuple of axes, or None)."""
+
+    mesh: object
+    rules: dict
+
+    def spec(self, logical) -> P:
+        phys = []
+        for name in logical:
+            if name is None:
+                phys.append(None)
+            else:
+                phys.append(self.rules.get(name))
+        return P(*phys)
+
+    def sharding(self, logical) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def set_rules(rules: Optional[ShardingRules]) -> None:
+    _state.rules = rules
+
+
+def get_rules() -> Optional[ShardingRules]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = get_rules()
+    set_rules(rules)
+    try:
+        yield
+    finally:
+        set_rules(prev)
+
+
+def constrain(x, logical):
+    """with_sharding_constraint by logical axes; no-op without active rules."""
+    r = get_rules()
+    if r is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, r.sharding(logical))

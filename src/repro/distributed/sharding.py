@@ -1,0 +1,163 @@
+"""Parameter/activation sharding rules per architecture family.
+
+Physical mesh axes: ("pod", "data", "model") multi-pod or ("data", "model")
+single-pod (launch/mesh.py). Policy:
+
+  * TP on "model" for: q-head projections, d_ff, expert d_ff, vocab — only
+    when the dim is divisible by the model-axis size (checked per param; the
+    fallback is FSDP-only for that param).
+  * FSDP (ZeRO-3 flavored) on "data" (+"pod") for the largest remaining dim
+    of every large param — XLA inserts per-layer all-gathers; with
+    scan-over-layers these batch across the stack.
+  * Activations: batch on ("pod","data"); long-context decode shards the KV
+    cache sequence dim on "data" when batch < data-axis size.
+
+The rules are *logical name -> physical axes* maps consumed by
+distributed.context.ShardingRules plus a param-pytree annotator keyed on
+path names. Divisibility is decided at annotation time so awkward head
+counts (arctic 56H on 16-way model axis) degrade gracefully instead of
+padding silently.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.context import ShardingRules
+from repro.models.config import ModelConfig
+
+
+def data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def logical_rules(mesh: Mesh, *, seq_axis: Optional[str] = None) -> ShardingRules:
+    """seq_axis="model" => Megatron-style sequence-parallel activations (the
+    residual stream stays seq-sharded on the model axis between blocks, so
+    row-parallel outputs reduce-scatter instead of all-reduce)."""
+    d_ax = data_axes(mesh)
+    batch = d_ax if len(d_ax) > 1 else (d_ax[0] if d_ax else None)
+    return ShardingRules(
+        mesh=mesh,
+        rules={
+            "batch": batch,
+            "vocab": model_axis(mesh),
+            "ff": model_axis(mesh),
+            "heads": model_axis(mesh),
+            "seq": (model_axis(mesh) if seq_axis == "model" else None),
+        },
+    )
+
+
+# -- parameter annotation -----------------------------------------------------
+
+_TP_RULES = [
+    # (path regex, dim index (negative ok), logical group)
+    (r".*attn/w[qkv]$", -1, "tp_out"),     # [*, d, H*hd] shard H*hd
+    (r".*attn/wo$", -2, "tp_in"),          # [*, H*hd, d] shard H*hd (input dim)
+    (r".*(mlp|dense)/w_(gate|up)$", -1, "tp_out"),
+    (r".*(mlp|dense)/w_down$", -2, "tp_in"),
+    (r".*moe/w_(gate|up)$", -1, "tp_out"),  # [L, E, d, ff]
+    (r".*moe/w_down$", -2, "tp_in"),        # [L, E, ff, d]
+    (r".*embed$", 0, "vocab"),
+    (r".*head$", -1, "vocab"),
+    (r".*rwkv/(ck)$", -1, "tp_out"),
+    (r".*rwkv/(cv)$", -2, "tp_in"),
+    (r".*rwkv/w[rkvg]$|.*rwkv/wo$", -1, "tp_out_sq"),
+    (r".*mamba/w_in$", -1, "tp_out"),
+    (r".*mamba/w_out$", -2, "tp_in"),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_sharding(
+    params,
+    mesh: Mesh,
+    cfg: ModelConfig,
+    *,
+    fsdp: bool = True,
+    min_fsdp_size: int = 2**16,
+    wide_tp: bool = False,
+    tp_enabled: bool = True,
+):
+    """Returns a pytree of NamedSharding matching ``params``.
+
+    TP where divisible; optional FSDP on the largest remaining dim (prefers
+    dims already unsharded). kv-head projections smaller than the model axis
+    stay replicated across "model" (GQA kv<TP: MQA/GQA-friendly).
+
+    ``wide_tp`` (beyond-paper, serving): TP dims shard over ALL mesh axes
+    (data+model combined) when divisible — params are read from local HBM
+    with zero per-token gathers; used by the decode perf variants.
+    ``tp_enabled=False``: pure-DP/FSDP layout (no model-axis param sharding).
+    """
+    m_ax = model_axis(mesh)
+    m_size = mesh.shape[m_ax] if m_ax else 1
+    d_ax = data_axes(mesh)
+    d_size = int(np.prod([mesh.shape[a] for a in d_ax])) if d_ax else 1
+    all_ax = tuple(d_ax) + ((m_ax,) if m_ax else ())
+    all_size = d_size * m_size
+
+    def one(path, x):
+        pstr = _path_str(path)
+        ndim = x.ndim
+        spec = [None] * ndim
+        if tp_enabled and m_ax and m_size > 1:
+            for pat, dim, _group in _TP_RULES:
+                if re.match(pat, pstr):
+                    di = dim % ndim
+                    # wide TP only where no head-reshape follows the matmul
+                    # (attention projections reshape H*hd -> [H, hd]; a
+                    # 256-way shard of that dim would force regathers).
+                    wide_ok = wide_tp and "attn/" not in pstr
+                    if wide_ok and x.shape[di] % all_size == 0:
+                        spec[di] = all_ax
+                    elif x.shape[di] % m_size == 0:
+                        spec[di] = m_ax
+                    break
+        if fsdp and d_ax and d_size > 1 and x.size >= min_fsdp_size:
+            # largest unsharded dim divisible by the data extent
+            used = {a for s in spec if s for a in (s if isinstance(s, tuple) else (s,))}
+            if not (used & set(d_ax)):
+                cand = sorted(
+                    (i for i in range(ndim) if spec[i] is None),
+                    key=lambda i: -x.shape[i],
+                )
+                for i in cand:
+                    if x.shape[i] % d_size == 0:
+                        spec[i] = d_ax if len(d_ax) > 1 else d_ax[0]
+                        break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_sharding(mesh: Mesh, ndim: int, *, batch_dim: int = 0):
+    d_ax = data_axes(mesh)
+    spec = [None] * ndim
+    if d_ax:
+        spec[batch_dim] = d_ax if len(d_ax) > 1 else d_ax[0]
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

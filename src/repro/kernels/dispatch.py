@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: dispatch planning — per-packet buffer positions.
+
+The FPGA forwards each packet the moment it is routed; a TPU instead *packs*
+routed packets into per-member contiguous buffers and ships them with one
+``all_to_all`` (DESIGN.md §2). The packing plan (position of each packet
+inside its member's buffer) is a cross-block running count: for packet i with
+member m, pos_i = #packets j<i with member j == m.
+
+Kernel structure: grid over packet blocks (TPU grid steps run sequentially),
+with an f32[1, M] VMEM scratch carrying per-member running counts across
+blocks. Within a block the exclusive cumsum of the one-hot membership matrix
+is an (B x M) matrix op that maps onto the MXU (one-hot matmul dispatch, the
+standard TPU MoE trick) — here expressed as jnp.cumsum on the one-hot which
+Mosaic lowers to vector adds/rolls.
+
+Capacity semantics: pos >= capacity => packet dropped (accounted, never
+silently lost) — the bounded-buffer analogue of the paper's discard rule for
+unprogrammed calendar slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_N = 1024
+
+
+def _plan_kernel(member_ref, pos_out, counts_out, carry_ref, *, n_members):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    member = member_ref[:]  # i32[B]
+    onehot = (member[:, None] == jnp.arange(n_members, dtype=jnp.int32)[None, :])
+    onehot = onehot.astype(jnp.float32)  # [B, M]
+    excl = jnp.cumsum(onehot, axis=0) - onehot  # exclusive within-block count
+    carry = carry_ref[0, :]  # f32[M]
+    pos = jnp.sum((excl + carry[None, :]) * onehot, axis=1).astype(jnp.int32)
+    pos = jnp.where(member >= 0, pos, -1)
+    pos_out[:] = pos
+    new_carry = carry + jnp.sum(onehot, axis=0)
+    carry_ref[0, :] = new_carry
+    counts_out[0, :] = new_carry.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_members", "block_n", "interpret"))
+def dispatch_plan(member, *, n_members: int, block_n: int = BLOCK_N, interpret: bool = True):
+    """Positions of each packet within its member's buffer.
+
+    Returns (pos int32[N] — -1 for invalid members, counts int32[n_members]
+    total per member). Combine with a capacity to build send buffers (ops.py).
+    """
+    n = member.shape[0]
+    n_pad = -(-n // block_n) * block_n
+    mem = jnp.full((n_pad,), -1, jnp.int32).at[:n].set(member.astype(jnp.int32))
+    grid = (n_pad // block_n,)
+    pos, counts = pl.pallas_call(
+        functools.partial(_plan_kernel, n_members=n_members),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1, n_members), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_members), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, n_members), jnp.float32)],
+        interpret=interpret,
+    )(mem)
+    return pos[:n], counts[0]

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: causal flash attention forward (beyond-paper compute
+hot-spot; the LB data plane is the paper's kernel, this one serves the
+prefill/serving path of the model substrate).
+
+Tiling: grid = (batch*heads, T/BLOCK_Q). Each grid step holds one query tile
+[BLOCK_Q, d] in VMEM and streams K/V tiles [BLOCK_K, d] with an online
+softmax (m, l, acc) — the HBM<->VMEM traffic is O(T*d) per head instead of
+O(T^2). MXU dims: BLOCK_Q x d x BLOCK_K matmuls with d, BLOCK_* multiples
+of 128 on hardware (any size in interpret mode). Causality is enforced by
+absolute position masks; the K loop is truncated at the query tile's end
+(never reads future tiles at all).
+
+Validated in interpret mode against kernels/ref.flash_attention_ref across
+shape/dtype sweeps (tests/test_kernels_flash.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, scale,
+                  seq_len, causal):
+    j = pl.program_id(1)
+    q = q_ref[0, :, :].astype(jnp.float32) * scale  # [Bq, d]
+    q_pos = j * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    n_k = seq_len // block_k
+    # causal: K tiles strictly after this query tile contribute nothing
+    k_hi = jax.lax.min(n_k, (j + 1) * block_q // block_k + 1) if causal else n_k
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k_tile = k_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v_tile = v_ref[0, pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k_tile.T  # [Bq, Bk]
+        if causal:
+            k_pos = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[:, None] + p @ v_tile
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc0 = jnp.zeros((block_q, q_ref.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, k_hi, body, (m0, l0, acc0))
+    out = jnp.where(l[:, None] > 0, acc / jnp.maximum(l, 1e-30)[:, None], 0.0)
+    o_ref[0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = BLOCK_Q,
+                    block_k: int = BLOCK_K, interpret: bool = True):
+    """q, k, v: [B, T, H, d] (MHA; GQA callers repeat kv heads). -> [B,T,H,d]."""
+    b, t, h, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    bq = min(block_q, t)
+    bk = min(block_k, t)
+    pad = (-t) % max(bq, bk)
+    tp = t + pad
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    # [B, T, H, d] -> [B*H, T, d]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, tp, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, tp, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, tp, d)
+
+    kernel = functools.partial(_flash_kernel, block_q=bq, block_k=bk,
+                               scale=scale, seq_len=tp, causal=causal)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, tp // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, tp, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, tp, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, tp, d), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, tp, d).transpose(0, 2, 1, 3)
+    return out[:, :t]

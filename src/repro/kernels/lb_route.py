@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: the EJ-FAT data plane (parse -> validate -> epoch ->
+calendar -> member rewrite) for a block of packets.
+
+TPU adaptation of the paper's P4 pipeline (DESIGN.md §2): instead of one
+packet per clock through match-action stages, we route a *block* of packet
+headers per grid step on the VPU. All tables (epoch segments, calendars,
+member rewrite) are small — a few KB — and live in VMEM for every block
+(constant index_map), exactly mirroring the paper's point that EJ-FAT table
+state is O(#compute-nodes), "a very small number of FPGA block RAM, with no
+need for HBM". Header words stream through VMEM field-major (u32[4, N]) so
+the packet dimension is lane-aligned (multiples of 128).
+
+Layout notes (TPU target):
+  * BLOCK_N = 2048 packets/block => header block 4*2048*4B = 32KB VMEM,
+    outputs 4*2048*4B = 32KB; tables < 64KB. Comfortably inside 16MB VMEM.
+  * All per-packet math is elementwise/compare/sum on int32 vectors (VPU);
+    the only gathers index 512-entry VMEM tables.
+Validated in interpret mode on CPU against kernels/ref.py + core/router.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.protocol import MAGIC, SLOT_MASK, VERSION
+
+BLOCK_N = 2048
+
+
+def _route_kernel(
+    hdr_ref,        # u32[4, B]   field-major header words
+    seg_hi_ref,     # u32[S]
+    seg_lo_ref,     # u32[S]
+    seg_row_ref,    # i32[S]
+    cal_ref,        # i32[R, 512]
+    node_ref,       # i32[M]
+    base_ref,       # i32[M]
+    mask_ref,       # i32[M]
+    mvalid_ref,     # i32[M]
+    member_out,     # i32[B]
+    node_out,       # i32[B]
+    lane_out,       # i32[B]
+    valid_out,      # i32[B]
+):
+    w0 = hdr_ref[0, :]
+    w1 = hdr_ref[1, :]
+    e_hi = hdr_ref[2, :]
+    e_lo = hdr_ref[3, :]
+
+    # --- Parsing stage (paper §III-A): magic/version check ---
+    magic = (w0 >> 16) & 0xFFFF
+    version = (w0 >> 8) & 0xFF
+    entropy = (w1 & 0xFFFF).astype(jnp.int32)
+    ok = (magic == MAGIC) & (version == VERSION)
+
+    # --- Calendar Epoch Assignment: segment = (#starts <= event) - 1 ---
+    s_hi = seg_hi_ref[:]
+    s_lo = seg_lo_ref[:]
+    ge = (e_hi[:, None] > s_hi[None, :]) | (
+        (e_hi[:, None] == s_hi[None, :]) & (e_lo[:, None] >= s_lo[None, :])
+    )
+    idx = jnp.sum(ge.astype(jnp.int32), axis=1) - 1
+    idx = jnp.clip(idx, 0, s_hi.shape[0] - 1)
+    row = seg_row_ref[:][idx]
+
+    # --- Calendar to Member Map: slot = 9 LSBs of the event number ---
+    slot = (e_lo & SLOT_MASK).astype(jnp.int32)
+    cal = cal_ref[:, :]
+    member = cal[jnp.clip(row, 0, cal.shape[0] - 1), slot]
+
+    # --- Member Lookup and Rewrite ---
+    m = jnp.clip(member, 0, node_ref.shape[0] - 1)
+    node = node_ref[:][m]
+    lane = base_ref[:][m] + (entropy & mask_ref[:][m])
+    ok = ok & (row >= 0) & (member >= 0) & (mvalid_ref[:][m] > 0)
+
+    member_out[:] = jnp.where(ok, member, -1)
+    node_out[:] = jnp.where(ok, node, -1)
+    lane_out[:] = jnp.where(ok, lane, -1)
+    valid_out[:] = ok.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lb_route(headers, tables_tuple, *, block_n: int = BLOCK_N, interpret: bool = True):
+    """Route N packets. ``headers``: u32[N, 4] wire words (row-major).
+
+    ``tables_tuple``: (seg_hi, seg_lo, seg_row, calendars, node, base, mask,
+    valid) — see core/tables.DeviceTables. Returns (member, node, lane,
+    valid) int32[N]. N is padded internally to a multiple of ``block_n``.
+    """
+    (seg_hi, seg_lo, seg_row, cal, node, base, mask, mvalid) = tables_tuple
+    n = headers.shape[0]
+    n_pad = -(-n // block_n) * block_n
+    hdr = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(headers.astype(jnp.uint32))
+    hdr = hdr.T  # field-major [4, N]
+
+    grid = (n_pad // block_n,)
+    vec_out = jax.ShapeDtypeStruct((n_pad,), jnp.int32)
+    tbl_spec = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    out = pl.pallas_call(
+        _route_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, block_n), lambda i: (0, i)),
+            tbl_spec(seg_hi), tbl_spec(seg_lo), tbl_spec(seg_row),
+            tbl_spec(cal), tbl_spec(node), tbl_spec(base), tbl_spec(mask),
+            tbl_spec(mvalid),
+        ],
+        out_specs=[pl.BlockSpec((block_n,), lambda i: (i,))] * 4,
+        out_shape=[vec_out] * 4,
+        interpret=interpret,
+    )(hdr, seg_hi, seg_lo, seg_row, cal, node, base, mask, mvalid)
+    member, node_o, lane, valid = (o[:n] for o in out)
+    return member, node_o, lane, valid

@@ -1,0 +1,55 @@
+"""Jit'd public wrappers around the Pallas kernels, with shape/dtype checks
+and payload combine helpers. This is the API the rest of the framework uses;
+``use_pallas=False`` falls back to the jnp oracles (identical semantics),
+which is also what the dry-run graphs use so cost_analysis stays meaningful.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch as _dispatch
+from repro.kernels import lb_route as _lb_route
+from repro.kernels import ref as _ref
+
+
+def route_packets(headers, tables, *, use_pallas: bool = True, interpret: bool = True):
+    """Route headers u32[N,4] with DeviceTables -> (member, node, lane, valid)."""
+    tt = _ref.tables_tuple(tables)
+    if headers.ndim != 2 or headers.shape[-1] != 4:
+        raise ValueError(f"headers must be [N, 4] u32 words, got {headers.shape}")
+    if use_pallas:
+        return _lb_route.lb_route(headers, tt, interpret=interpret)
+    return _ref.lb_route_ref(headers, tt)
+
+
+def plan_dispatch(member, n_members: int, *, use_pallas: bool = True,
+                  interpret: bool = True):
+    """Per-packet buffer positions + per-member totals."""
+    if use_pallas:
+        return _dispatch.dispatch_plan(member, n_members=n_members, interpret=interpret)
+    return _ref.dispatch_plan_ref(member, n_members=n_members)
+
+
+@functools.partial(jax.jit, static_argnames=("n_members", "capacity"))
+def combine_payloads(payload, member, pos, *, n_members: int, capacity: int):
+    """Scatter payloads by (member, pos) into [n_members, capacity, ...] buffers.
+
+    Returns (buffers, occupancy, dropped_count). Drops (pos >= capacity) are
+    counted, never silent.
+    """
+    keep = (member >= 0) & (pos >= 0) & (pos < capacity)
+    # Masked packets are sent to an out-of-bounds index so mode="drop"
+    # discards the write entirely (an in-bounds dummy index would clobber a
+    # real packet's slot).
+    m_idx = jnp.where(keep, member, n_members)
+    p_idx = jnp.where(keep, pos, capacity)
+    buf = jnp.zeros((n_members, capacity) + payload.shape[1:], payload.dtype)
+    buf = buf.at[m_idx, p_idx].set(payload, mode="drop")
+    occ = jnp.zeros((n_members, capacity), jnp.int32).at[m_idx, p_idx].set(
+        jnp.ones_like(member, jnp.int32), mode="drop"
+    )
+    dropped = jnp.sum((member >= 0) & ~keep)
+    return buf, occ, dropped

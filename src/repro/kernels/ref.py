@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+The routing oracle is the core/router.py implementation itself (single source
+of truth for the protocol semantics); the dispatch-plan oracle is the
+cumsum-of-one-hot from core/router.member_positions. Tests sweep shapes and
+dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import router as _router
+from repro.core.protocol import decode_fields
+from repro.core.tables import DeviceTables
+
+
+def tables_tuple(tables: DeviceTables):
+    return (
+        tables.seg_start_hi, tables.seg_start_lo, tables.seg_row,
+        tables.calendars, tables.member_node, tables.member_base_lane,
+        tables.member_lane_mask, tables.member_valid,
+    )
+
+
+def lb_route_ref(headers, tables_tuple_):
+    """Oracle for kernels/lb_route.lb_route."""
+    (seg_hi, seg_lo, seg_row, cal, node, base, mask, mvalid) = tables_tuple_
+    t = DeviceTables(
+        seg_start_hi=seg_hi, seg_start_lo=seg_lo, seg_row=seg_row,
+        calendars=cal, member_node=node, member_base_lane=base,
+        member_lane_mask=mask, member_valid=mvalid,
+    )
+    f = decode_fields(headers.astype(jnp.uint32))
+    r = _router.route(t, f["event_hi"], f["event_lo"], f["entropy"],
+                      header_words=headers.astype(jnp.uint32))
+    return r.member, r.node, r.lane, r.valid.astype(jnp.int32)
+
+
+def dispatch_plan_ref(member, *, n_members: int):
+    """Oracle for kernels/dispatch.dispatch_plan (capacity-free positions)."""
+    pos, _keep, counts = _router.member_positions(member, n_members, capacity=2**30)
+    pos = jnp.where(member >= 0, pos, -1)
+    return pos.astype(jnp.int32), counts.astype(jnp.int32)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Oracle for kernels/flash_attention: plain softmax attention.
+
+    q: [Lq, H, D], k/v: [Lk, H, D] (single example). fp32 accumulation.
+    """
+    import jax
+    import numpy as np
+
+    if scale is None:
+        scale = 1.0 / np.sqrt(q.shape[-1])
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("qhd,khd->hqk", qf, kf) * scale
+    if causal:
+        lq, lk = q.shape[0], k.shape[0]
+        mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        logits = jnp.where(mask[None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", w, vf).astype(q.dtype)

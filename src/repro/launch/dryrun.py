@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs on the production meshes, and record
+memory_analysis / cost_analysis / collective bytes to JSON artifacts.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+jax import — 512 placeholder host devices exist only here, never in tests or
+benchmarks).
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import perfmodel
+from repro.analysis.hlo import collective_stats
+from repro.configs import ARCH_IDS, get_config
+from repro.core.epoch import EpochManager
+from repro.core.tables import MemberSpec
+from repro.distributed import sharding as shd
+from repro.distributed.context import use_rules
+from repro.launch import shapes as SH
+from repro.launch.mesh import make_dp_mesh, make_hybrid_mesh, make_production_mesh
+from repro.launch.shardspecs import batch_shardings, decode_state_shardings
+from repro.models import model as M
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+
+SDS = jax.ShapeDtypeStruct
+
+# Per-arch training knobs (memory-critical archs get 8-bit Adam).
+EIGHT_BIT = {"arctic-480b", "llama-3.2-vision-90b", "mixtral-8x22b"}
+# Chunk sizes per shape (attention q/k blocking).
+CHUNKS = {"train_4k": (1024, 1024), "prefill_32k": (2048, 2048),
+          "decode_32k": (1, 2048), "long_500k": (1, 4096)}
+
+
+def build_tables(n_members: int):
+    em = EpochManager(max_members=max(64, n_members))
+    members = {i: MemberSpec(node_id=i) for i in range(n_members)}
+    em.initialize(members, {i: 1.0 for i in range(n_members)})
+    return em.device_tables()
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    s = SH.SHAPES[shape_name]
+    n_total, n_active = cfg.param_count()
+    if s.kind == "train":
+        return 6.0 * n_active * s.global_batch * s.seq_len
+    if s.kind == "prefill":
+        return 2.0 * n_active * s.global_batch * s.seq_len
+    return 2.0 * n_active * s.global_batch  # decode: one token
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "baseline"):
+    cfg = get_config(arch)
+    reason = SH.skip_reason(cfg, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "skipped": reason}
+    # Perf variants ('+'-joined tokens; EXPERIMENTS.md §Perf):
+    #   dponly   -> same chips relabeled (256,1): pure 256-way FSDP/DP
+    #   seqpar   -> Megatron-SP: residual stream seq-sharded on "model"
+    #   moegroup -> shard-local grouped MoE dispatch (buffer never replicated)
+    #   widetp   -> serving params sharded over ALL axes (no per-token gathers)
+    #   rwkvchunk-> chunked WKV (matmul form) instead of per-token scan
+    toks = set(variant.split("+")) if variant else {"baseline"}
+    tp_tok = next((t for t in toks if t.startswith("tp") and t[2:].isdigit()), None)
+    if "dponly" in toks:
+        mesh = make_dp_mesh(multi_pod=multi_pod)
+    elif tp_tok:
+        mesh = make_hybrid_mesh(int(tp_tok[2:]), multi_pod=multi_pod)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    spec = SH.SHAPES[shape_name]
+    qc, kc = CHUNKS[shape_name]
+    rules = shd.logical_rules(mesh, seq_axis="model" if "seqpar" in toks else None)
+    rwkv_chunk = 64 if (cfg.family == "ssm" and "rwkvchunk" in toks) else 1
+    if "moegroup" in toks and cfg.family == "moe":
+        dp_groups = int(np.prod([mesh.shape[a] for a in shd.data_axes(mesh)]))
+        cfg = cfg.with_(moe_dispatch_groups=dp_groups)
+    wide = "widetp" in toks
+
+    with use_rules(rules):
+        if spec.kind == "train":
+            tcfg = TS.TrainConfig(
+                adamw=OPT.AdamWConfig(eight_bit=arch in EIGHT_BIT),
+                remat=True, lb_ingest=True, q_chunk=qc, k_chunk=kc,
+                rwkv_chunk=64 if cfg.family == "ssm" else 1,
+            )
+            state_shapes = jax.eval_shape(
+                lambda: TS.init_train_state(jax.random.PRNGKey(0), cfg, tcfg))
+            batch = SH.batch_specs(cfg, shape_name)
+            n_members = int(np.prod([mesh.shape[a] for a in shd.data_axes(mesh)]))
+            tables = build_tables(n_members)
+            shapes_for_jit = {
+                "params": state_shapes["params"], "opt": state_shapes["opt"],
+                "batch": batch, "tables": tables,
+            }
+            jitted = TS.jit_train_step(cfg, tcfg, mesh, shapes_for_jit,
+                                       global_batch=spec.global_batch)
+            lowered = jitted.lower(state_shapes, batch, tables)
+        elif spec.kind == "prefill":
+            params_shapes = jax.eval_shape(
+                lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+            p_shard = shd.param_sharding(
+                params_shapes, mesh, cfg, min_fsdp_size=2**24,
+                wide_tp=wide, fsdp=not wide)
+            batch = SH.batch_specs(cfg, shape_name)
+            b_shard = batch_shardings(mesh, batch)
+            if cfg.encoder_only:
+                def fn(params, b):
+                    logits, _ = M.forward(params, b, cfg, remat=False,
+                                          q_chunk=qc, k_chunk=kc)
+                    return logits
+                jitted = jax.jit(fn, in_shardings=(p_shard, b_shard))
+                lowered = jitted.lower(params_shapes, batch)
+            else:
+                state = SH.decode_state_specs(cfg, shape_name)
+                if cfg.family == "vlm":
+                    state.pop("vision")  # provided via batch at prefill
+                s_shard = decode_state_shardings(cfg, mesh, state)
+
+                def fn(params, b, st):
+                    return M.prefill(params, b, st, cfg, q_chunk=qc, k_chunk=kc,
+                                     rwkv_chunk=rwkv_chunk if cfg.family == "ssm" else 1)
+                jitted = jax.jit(fn, in_shardings=(p_shard, b_shard, s_shard),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_shapes, batch, state)
+        else:  # decode
+            params_shapes = jax.eval_shape(
+                lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+            p_shard = shd.param_sharding(
+                params_shapes, mesh, cfg, min_fsdp_size=2**24,
+                wide_tp=wide, fsdp=not wide)
+            state = SH.decode_state_specs(cfg, shape_name)
+            s_shard = decode_state_shardings(cfg, mesh, state)
+            tok = SDS((spec.global_batch,), jnp.int32)
+            d_size = int(np.prod([mesh.shape[a] for a in shd.data_axes(mesh)]))
+            t_shard = (shd.batch_sharding(mesh, 1)
+                       if spec.global_batch % d_size == 0
+                       else shd.replicated(mesh))
+
+            def fn(params, tokens, st):
+                return M.decode_step(params, tokens, st, cfg, q_chunk=qc,
+                                     k_chunk=kc)
+            jitted = jax.jit(fn, in_shardings=(p_shard, t_shard, s_shard),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_shapes, tok, state)
+
+        compiled = lowered.compile()
+
+    cost = dict(compiled.cost_analysis() or {})
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        } if mem is not None else {}
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": str(e)}
+    text = compiled.as_text()
+    colls = collective_stats(text)
+    tp = mesh.shape.get("model", 1)
+    dp = chips // tp
+    est = perfmodel.estimate(cfg, shape_name, chips, dp, tp,
+                             eight_bit_opt=arch in EIGHT_BIT)
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "variant": variant,
+        "chips": chips, "dp": dp, "tp": tp,
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "memory": mem_info,
+        "collectives": colls.to_json(),
+        "analytic": est.to_json(),
+        "model_flops": model_flops(cfg, shape_name),
+        "hlo_bytes": len(text),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.all or args.arch is None else [args.arch]
+    shapes = list(SH.SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                tag = f"{arch.replace('-', '_')}__{shape}__{mesh_kind}"
+                if args.variant != "baseline":
+                    tag += f"__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                t0 = time.time()
+                try:
+                    art = lower_cell(arch, shape, mesh_kind == "multi",
+                                     args.variant)
+                    art["lower_compile_s"] = time.time() - t0
+                    with open(path, "w") as f:
+                        json.dump(art, f, indent=1)
+                    status = art.get("skipped", "ok")
+                    extra = ""
+                    if "cost" in art:
+                        extra = (f" flops/dev={art['cost'].get('flops', 0):.3e}"
+                                 f" wire={art['collectives']['total_wire_bytes']:.3e}")
+                    print(f"[{tag}] {status} ({art['lower_compile_s']:.1f}s){extra}",
+                          flush=True)
+                except Exception as e:
+                    failures.append((tag, str(e)))
+                    print(f"[{tag}] FAIL: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES"); raise SystemExit(1)
+    print("\nall cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production meshes. A function (not module-level constant) so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dp_mesh(*, multi_pod: bool = False):
+    """Perf-variant view of the SAME chips: pure data parallelism (tp=1).
+
+    16x16 chips relabeled (256, 1) — a logical re-mapping, not different
+    hardware. Used by the 'dponly' hillclimb variant (EXPERIMENTS.md §Perf):
+    for <=20B archs, 256-way FSDP beats 16-way TP x 16-way DP because the
+    per-layer weight all-gathers are far smaller than the TP activation
+    all-reduces at these batch sizes.
+    """
+    shape = (2, 256, 1) if multi_pod else (256, 1)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_hybrid_mesh(tp: int, *, multi_pod: bool = False):
+    """Perf-variant view of the same chips with a chosen TP degree.
+
+    256 chips per pod relabeled (256/tp, tp) — trades TP activation
+    all-reduces against FSDP weight gathers (EXPERIMENTS.md §Perf)."""
+    dp = 256 // tp
+    shape = (2, dp, tp) if multi_pod else (dp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many devices the host actually exposes."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

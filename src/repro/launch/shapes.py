@@ -1,0 +1,101 @@
+"""Assigned input shapes x architectures: the 40-cell grid.
+
+Every cell is (arch x shape) with ShapeDtypeStruct stand-ins (weak-type
+correct, shardable, zero allocation). Skips are *documented
+inapplicabilities* (DESIGN.md §4): long_500k needs sub-quadratic attention;
+encoder-only archs have no decode step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# sub-quadratic decode support per family/config
+def _supports_long(cfg: ModelConfig) -> bool:
+    if cfg.family in ("hybrid", "ssm"):
+        return True
+    if cfg.swa_window is not None:  # SWA ring cache is O(window)
+        return True
+    return False
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> Optional[str]:
+    s = SHAPES[shape]
+    if cfg.encoder_only and s.kind == "decode":
+        return "encoder-only arch has no decode step"
+    if shape == "long_500k" and not _supports_long(cfg):
+        return "pure full-attention arch: quadratic attention inapplicable at 500k"
+    return None
+
+
+def runnable_cells(cfg: ModelConfig) -> list[str]:
+    return [k for k in SHAPES if skip_reason(cfg, k) is None]
+
+
+def batch_specs(cfg: ModelConfig, shape: str) -> dict:
+    """ShapeDtypeStruct stand-ins for the model inputs of this cell."""
+    s = SHAPES[shape]
+    b, t = s.global_batch, s.seq_len
+    if s.kind == "train":
+        out = {
+            "labels": SDS((b, t), jnp.int32),
+            "headers": SDS((b, 4), jnp.uint32),
+        }
+        if cfg.family == "audio":
+            out["embeds"] = SDS((b, t, cfg.d_model), jnp.dtype(cfg.dtype))
+        else:
+            out["tokens"] = SDS((b, t), jnp.int32)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = SDS((b, cfg.n_vision_tokens, cfg.d_model),
+                                       jnp.dtype(cfg.dtype))
+        return out
+    if s.kind == "prefill":
+        out = {}
+        if cfg.family == "audio":
+            out["embeds"] = SDS((b, t, cfg.d_model), jnp.dtype(cfg.dtype))
+        else:
+            out["tokens"] = SDS((b, t), jnp.int32)
+        if cfg.family == "vlm":
+            out["vision_embeds"] = SDS((b, cfg.n_vision_tokens, cfg.d_model),
+                                       jnp.dtype(cfg.dtype))
+        return out
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": SDS((b,), jnp.int32)}
+
+
+def decode_state_specs(cfg: ModelConfig, shape: str):
+    """eval_shape of the decode cache for decode cells (includes 'vision'
+    for the vlm family — present post-prefill)."""
+    from repro.models import model as M
+
+    s = SHAPES[shape]
+    state = jax.eval_shape(
+        lambda: M.init_decode_state(cfg, s.global_batch, s.seq_len))
+    if cfg.family == "vlm":
+        state["vision"] = SDS((s.global_batch, cfg.n_vision_tokens, cfg.d_model),
+                              jnp.dtype(cfg.dtype))
+    return state

@@ -1,0 +1,88 @@
+"""Explicit sharding tables for decode/prefill states per family.
+
+Rules (DESIGN.md §5): cache batch on data axes when divisible; when batch is
+too small (long_500k, batch=1) shard the cache *sequence* dim on data
+(sequence-parallel decode); heads / ssm-heads / feature dims on "model"
+when divisible. Built by leaf-path dispatch so each family's cache layout is
+handled explicitly rather than by shape guessing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models.config import ModelConfig
+
+
+def _div(n, by) -> bool:
+    return by > 0 and n % by == 0
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, state_specs):
+    """NamedSharding pytree for init_decode_state output (+'vision')."""
+    d_ax = shd.data_axes(mesh)
+    d_axes = d_ax if len(d_ax) > 1 else (d_ax[0] if d_ax else None)
+    d_size = int(np.prod([mesh.shape[a] for a in d_ax])) if d_ax else 1
+    m_ax = shd.model_axis(mesh)
+    m_size = mesh.shape[m_ax] if m_ax else 1
+
+    def batch_or_none(b):
+        return d_axes if _div(b, d_size) else None
+
+    def model_or_none(n):
+        return m_ax if _div(n, m_size) else None
+
+    def leaf(path, x):
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "name", p))) for p in path)
+        nd = x.ndim
+        shape = x.shape
+        spec = [None] * nd
+        if pstr.endswith("k") or pstr.endswith("v"):  # kv cache arrays
+            # [..., B, S, H, hd]: batch at -4, seq -3, heads -2
+            b_ax, s_ax, h_ax = nd - 4, nd - 3, nd - 2
+            if batch_or_none(shape[b_ax]):
+                spec[b_ax] = d_axes
+            elif _div(shape[s_ax], d_size):
+                spec[s_ax] = d_axes  # sequence-parallel cache (batch=1)
+            spec[h_ax] = model_or_none(shape[h_ax])
+        elif "kv/pos" in pstr or pstr.endswith("pos") and nd >= 2:
+            # cache pos [..., B, S]
+            b_ax, s_ax = nd - 2, nd - 1
+            if batch_or_none(shape[b_ax]):
+                spec[b_ax] = d_axes
+            elif _div(shape[s_ax], d_size):
+                spec[s_ax] = d_axes
+        elif pstr.endswith("ssm/h") or pstr == "h":
+            # [..., B, H, N, P]
+            b_ax, h_ax = nd - 4, nd - 3
+            spec[b_ax] = batch_or_none(shape[b_ax])
+            spec[h_ax] = model_or_none(shape[h_ax])
+        elif pstr.endswith("conv"):
+            # [..., B, K-1, C]
+            b_ax, c_ax = nd - 3, nd - 1
+            spec[b_ax] = batch_or_none(shape[b_ax])
+            spec[c_ax] = model_or_none(shape[c_ax])
+        elif pstr.endswith("wkv"):
+            # [L, B, H, P, P]
+            spec[1] = batch_or_none(shape[1])
+            spec[2] = model_or_none(shape[2])
+        elif pstr.endswith("tshift") or pstr.endswith("cshift"):
+            # [L, B, d]
+            spec[1] = batch_or_none(shape[1])
+            spec[2] = model_or_none(shape[2])
+        elif pstr.endswith("vision"):
+            # [B, Nv, d]
+            spec[0] = batch_or_none(shape[0])
+        elif pstr == "pos" and nd == 1:
+            spec[0] = batch_or_none(shape[0])
+        # length / scalars: replicated
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, state_specs)
+
+
+def batch_shardings(mesh: Mesh, batch_specs):
+    return jax.tree.map(lambda x: shd.batch_sharding(mesh, x.ndim), batch_specs)

@@ -1,0 +1,56 @@
+"""Training launcher.
+
+Two modes:
+  * --demo : run REAL steps on the host devices with a reduced config
+    (CPU-runnable; exercises the full trainer: LB epochs, telemetry,
+    checkpointing, straggler mitigation).
+  * default: build the jitted, sharded production step for --arch on the
+    production mesh and run it with synthetic device-resident data (on a
+    real TPU slice this is the entry point; on CPU use --demo).
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-6b --demo --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--demo", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--eight-bit", action="store_true")
+    ap.add_argument("--grad-compress", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.demo else get_config(args.arch)
+    tcfg = TS.TrainConfig(
+        adamw=OPT.AdamWConfig(lr=1e-3, eight_bit=args.eight_bit,
+                              decay_steps=max(args.steps, 10)),
+        remat=not args.demo, lb_ingest=False,
+        grad_compress=args.grad_compress,
+        q_chunk=min(args.seq, 1024), k_chunk=min(args.seq, 1024),
+    )
+    tr = Trainer(cfg, tcfg, TrainerConfig(n_members=4, ckpt_dir=args.ckpt_dir))
+    start = tr.init_or_restore(jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} params={cfg.param_count()[0]/1e6:.1f}M "
+          f"resume_step={start}")
+    hist = tr.run(args.steps, batch=args.batch, seq=args.seq)
+    losses = [h["loss"] for h in hist]
+    print(f"steps={len(losses)} loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

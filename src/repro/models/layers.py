@@ -1,0 +1,292 @@
+"""Shared layer primitives: norms, RoPE, MLP, GQA attention (+SWA, cross),
+KV caches. Pure functions over param pytrees; attention uses a chunked
+online-softmax formulation so 32k-token prefill never materializes a full
+score matrix (memory-roofline critical at the assigned shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float = 1.0, dtype=jnp.bfloat16):
+    fan_in = shape[0]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2, 2, shape, F32) * std).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (fractional: chatglm applies rotary to half the head dims)
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions, rot_dim: int, theta: float):
+    """positions int32[...] -> (cos, sin) f32[..., rot_dim/2]."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=F32) / rot_dim))
+    angles = positions.astype(F32)[..., None] * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, positions, *, fraction: float = 1.0, theta: float = 1e4):
+    """x: [..., T, H, hd]; positions broadcastable to [..., T]."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    cos, sin = rope_tables(positions, rot, theta)  # [..., T, rot/2]
+    cos = cos[..., None, :]  # add head dim
+    sin = sin[..., None, :]
+    xr = x[..., :rot].astype(F32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rotated, x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, n_layers: int, dtype):
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / (2 * n_layers) ** 0.5
+    if act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), scale=out_scale, dtype=dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[1], (d_ff, d_model), scale=out_scale, dtype=dtype),
+    }
+
+
+def mlp(params, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _attn_chunk_scan(q, k, v, qpos, kpos, kvalid, *, causal, window, k_chunk, scale):
+    """Online softmax over k chunks.
+
+    q: [B, Hkv, G, Tq, hd]; k/v: [B, Tk, Hkv, hd]; qpos [B, Tq]; kpos [B, Tk];
+    kvalid bool[B, Tk]. Returns [B, Hkv, G, Tq, hd] (f32).
+    """
+    b, hkv, g, tq, hd = q.shape
+    tk = k.shape[1]
+    n_chunks = -(-tk // k_chunk)
+    pad = n_chunks * k_chunk - tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)))
+        kvalid = jnp.pad(kvalid, ((0, 0), (0, pad)))
+    # -> [n_chunks, B, C, ...]
+    kc = k.reshape(b, n_chunks, k_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, k_chunk, hkv, hd).transpose(1, 0, 2, 3, 4)
+    pc = kpos.reshape(b, n_chunks, k_chunk).transpose(1, 0, 2)
+    mc = kvalid.reshape(b, n_chunks, k_chunk).transpose(1, 0, 2)
+
+    qf = q.astype(F32)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kb, vb, pb, vb_mask = xs
+        logits = jnp.einsum("bhgqd,bchd->bhgqc", qf, kb.astype(F32)) * scale
+        mask = vb_mask[:, None, None, None, :]
+        if causal:
+            ok = pb[:, None, :] <= qpos[:, :, None]  # [B, Tq, C]
+            if window is not None:
+                ok &= qpos[:, :, None] - pb[:, None, :] < window
+            mask = mask & ok[:, None, None, :, :]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p, vb.astype(F32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, tq), NEG_INF, F32)
+    l0 = jnp.zeros((b, hkv, g, tq), F32)
+    acc0 = jnp.zeros((b, hkv, g, tq, hd), F32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kc, vc, pc, mc))
+    return jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+
+
+def attention(
+    q, k, v, *,
+    qpos, kpos, kvalid=None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+):
+    """GQA attention. q: [B, Tq, Hq, hd]; k/v: [B, Tk, Hkv, hd].
+
+    qpos/kpos: int32[B, Tq]/[B, Tk] absolute positions (ring caches pass
+    per-slot positions; invalid slots masked by kvalid). Returns [B, Tq, Hq, hd].
+    """
+    b, tq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / (hd ** 0.5)
+    if kvalid is None:
+        kvalid = jnp.ones(k.shape[:2], bool)
+    qg = q.transpose(0, 2, 1, 3).reshape(b, hkv, g, tq, hd)
+
+    if tq <= q_chunk:
+        out = _attn_chunk_scan(qg, k, v, qpos, kpos, kvalid, causal=causal,
+                               window=window, k_chunk=k_chunk, scale=scale)
+    else:
+        n_q = -(-tq // q_chunk)
+        pad = n_q * q_chunk - tq
+        qg_p = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        qpos_p = jnp.pad(qpos, ((0, 0), (0, pad)))
+        qs = qg_p.reshape(b, hkv, g, n_q, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+        ps = qpos_p.reshape(b, n_q, q_chunk).transpose(1, 0, 2)
+
+        def qstep(_, xs):
+            qb, pb = xs
+            o = _attn_chunk_scan(qb, k, v, pb, kpos, kvalid, causal=causal,
+                                 window=window, k_chunk=k_chunk, scale=scale)
+            return None, o
+
+        _, outs = jax.lax.scan(qstep, None, (qs, ps))
+        out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hkv, g, n_q * q_chunk, hd)
+        out = out[..., :tq, :]
+    return out.reshape(b, hq, tq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention block (self / cross) + KV cache
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    out_scale = 1.0 / (2 * cfg.n_layers) ** 0.5
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), scale=out_scale, dtype=dtype),
+    }
+    if cross:
+        p["kv_norm"] = jnp.ones((d,), dtype)
+    return p
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Ring-capable KV cache. ``pos[b, s]`` = absolute position in slot s
+    (-1 invalid). Full cache: size >= max_len; SWA: size == window."""
+
+    k: jnp.ndarray    # [B, S, Hkv, hd]
+    v: jnp.ndarray    # [B, S, Hkv, hd]
+    pos: jnp.ndarray  # int32[B, S]
+    length: jnp.ndarray  # int32 scalar — tokens seen so far
+
+
+def init_kv_cache(batch, size, n_kv, hd, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, size, n_kv, hd), dtype),
+        v=jnp.zeros((batch, size, n_kv, hd), dtype),
+        pos=jnp.full((batch, size), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def self_attention_block(params, x, cfg, *, positions, cache: Optional[KVCache] = None,
+                         q_chunk: int = 1024, k_chunk: int = 1024):
+    """x: [B, T, d]. Returns (out [B, T, d], new_cache)."""
+    b, t, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ params["wq"]).reshape(b, t, hq, hd)
+    k = (x @ params["wk"]).reshape(b, t, hkv, hd)
+    v = (x @ params["wv"]).reshape(b, t, hkv, hd)
+    q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        kk, vv = k, v
+        kpos, kvalid = positions, jnp.ones((b, t), bool)
+    elif t > 1:
+        # Prefill: attend over the fresh sequence (a ring cache smaller than
+        # T would otherwise evict keys that early queries still need), then
+        # write only the last `size` positions into the cache.
+        size = cache.k.shape[1]
+        keep = min(t, size)
+        tail = slice(t - keep, t)
+        tail_pos = positions[:, tail].astype(jnp.int32)
+        slots = (tail_pos % size).astype(jnp.int32)
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        ck = cache.k.at[bidx, slots].set(k[:, tail])
+        cv = cache.v.at[bidx, slots].set(v[:, tail])
+        cpos = cache.pos.at[bidx, slots].set(tail_pos)
+        new_cache = KVCache(k=ck, v=cv, pos=cpos, length=cache.length + t)
+        kk, vv = k, v
+        kpos, kvalid = positions, jnp.ones((b, t), bool)
+    else:
+        # Decode: single token -> distinct ring slot.
+        size = cache.k.shape[1]
+        slots = (positions % size).astype(jnp.int32)  # [B, 1]
+        bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+        ck = cache.k.at[bidx, slots].set(k)
+        cv = cache.v.at[bidx, slots].set(v)
+        cpos = cache.pos.at[bidx, slots].set(positions.astype(jnp.int32))
+        new_cache = KVCache(k=ck, v=cv, pos=cpos, length=cache.length + t)
+        kk, vv = ck, cv
+        kpos, kvalid = cpos, cpos >= 0
+
+    o = attention(q, kk, vv, qpos=positions, kpos=kpos, kvalid=kvalid,
+                  causal=cfg.causal, window=cfg.swa_window,
+                  q_chunk=q_chunk, k_chunk=k_chunk)
+    return o.reshape(b, t, hq * hd) @ params["wo"], new_cache
+
+
+def cross_attention_block(params, x, kv_src, cfg, *, q_chunk=1024, k_chunk=1024):
+    """Cross-attn to (vision) tokens. kv_src: [B, Nv, d]. No RoPE, no mask."""
+    b, t, d = x.shape
+    nv = kv_src.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = rms_norm(kv_src, params["kv_norm"], cfg.norm_eps)
+    q = (x @ params["wq"]).reshape(b, t, hq, hd)
+    k = (src @ params["wk"]).reshape(b, nv, hkv, hd)
+    v = (src @ params["wv"]).reshape(b, nv, hkv, hd)
+    zeros_q = jnp.zeros((b, t), jnp.int32)
+    zeros_k = jnp.zeros((b, nv), jnp.int32)
+    o = attention(q, k, v, qpos=zeros_q, kpos=zeros_k, causal=False,
+                  q_chunk=q_chunk, k_chunk=k_chunk)
+    return o.reshape(b, t, hq * hd) @ params["wo"]

@@ -1,0 +1,136 @@
+"""Mamba2 (SSD) block for zamba2-2.7b — chunked state-space recurrence.
+
+Implements the state-space-duality form: within a chunk of length L the
+output is an (L x L) decay-masked matmul (MXU-friendly), across chunks a
+small recurrent state h [H, N, P] is carried by lax.scan. Matches a
+step-by-step recurrence oracle (tests/test_models.py).
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t (x) x_t
+    y_t = C_t . h_t + D x_t
+
+with per-head scalar A < 0, B_t/C_t in R^N (single group), x_t in R^{H x P}.
+A depthwise causal conv (kernel 4) precedes the SSM as in the reference
+implementation; z-gating and an RMSNorm follow it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+F32 = jnp.float32
+
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ck = cfg.conv_kernel
+    ks = jax.random.split(key, 8)
+    out_scale = 1.0 / (2 * cfg.n_layers) ** 0.5
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di + 2 * n + h), dtype=dtype),  # z,x,B,C,dt
+        "conv_w": dense_init(ks[1], (ck, di + 2 * n), scale=ck ** 0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "a_log": jnp.zeros((h,), F32),          # A = -exp(a_log)  in [-1, 0)-ish
+        "d_skip": jnp.ones((h,), F32),
+        "dt_bias": jnp.full((h,), -2.0, F32),   # softplus(dt_bias) ~ 0.12
+        "ssm_norm": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[2], (di, d), scale=out_scale, dtype=dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * n]
+    dt = proj[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, state=None):
+    """Depthwise causal conv. xbc: [B, T, C]; state: [B, K-1, C] carry.
+
+    Returns (out [B, T, C], new_state [B, K-1, C]).
+    """
+    k = conv_w.shape[0]
+    b, t, c = xbc.shape
+    if state is None:
+        state = jnp.zeros((b, k - 1, c), xbc.dtype)
+    full = jnp.concatenate([state, xbc], axis=1)  # [B, T+K-1, C]
+    out = jnp.zeros((b, t, c), F32)
+    for i in range(k):
+        out = out + full[:, i : i + t, :].astype(F32) * conv_w[i].astype(F32)
+    out = jax.nn.silu(out + conv_b.astype(F32)).astype(xbc.dtype)
+    new_state = full[:, t:, :]
+    return out, new_state
+
+
+def _ssd_chunk(carry_h, xs, *, nheads, headdim, nstate):
+    """One chunk of the SSD recurrence. carry_h: [B, H, N, P]."""
+    xh, bmat, cmat, log_a = xs  # [B,L,H,P], [B,L,N], [B,L,N], [B,L,H]
+    cum = jnp.cumsum(log_a, axis=1)  # [B, L, H]
+    # Intra-chunk: decay-masked (L x L) attention-like matmul.
+    scores = jnp.einsum("bin,bjn->bij", cmat, bmat)  # [B, L, L]
+    decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B, L, L, H]
+    li = jnp.arange(xh.shape[1])
+    causal = (li[:, None] >= li[None, :])[None, :, :, None]
+    w = scores[..., None] * jnp.where(causal, decay, 0.0)  # [B, L, L, H]
+    y_intra = jnp.einsum("bijh,bjhp->bihp", w, xh)
+    # Inter-chunk: contribution of the carried state.
+    y_inter = jnp.einsum("bin,bhnp->bihp", cmat, carry_h) * jnp.exp(cum)[..., None]
+    # State update.
+    suffix = jnp.exp(cum[:, -1:, :] - cum)  # [B, L, H]
+    h_new = carry_h * jnp.exp(cum[:, -1])[:, :, None, None] + jnp.einsum(
+        "bjn,bjhp->bhnp", bmat, xh * suffix[..., None]
+    )
+    return h_new, y_intra + y_inter
+
+
+def mamba2_block(params, x, cfg, *, state=None, chunk: int = 128):
+    """x: [B, T, d]. state: dict(h [B,H,N,P], conv [B,K-1,C]) or None.
+
+    Returns (out [B, T, d], new_state).
+    """
+    b, t, d = x.shape
+    di, n, h_heads, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = x @ params["w_in"]
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xs = xbc[..., :di]
+    bmat = xbc[..., di : di + n].astype(F32)
+    cmat = xbc[..., di + n :].astype(F32)
+    dt = jax.nn.softplus(dt_raw.astype(F32) + params["dt_bias"])  # [B, T, H]
+    a = -jnp.exp(params["a_log"])  # [H]
+    log_a = dt * a  # [B, T, H]
+    xh = xs.reshape(b, t, h_heads, p).astype(F32)
+    xdt = xh * dt[..., None]
+
+    h0 = jnp.zeros((b, h_heads, n, p), F32) if state is None else state["h"].astype(F32)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(arr):
+        return arr.reshape((b, n_chunks, chunk) + arr.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, arr.ndim + 1))
+        )
+
+    import functools
+    step = functools.partial(_ssd_chunk, nheads=h_heads, headdim=p, nstate=n)
+    h_final, ys = jax.lax.scan(
+        step, h0, (to_chunks(xdt), to_chunks(bmat), to_chunks(cmat), to_chunks(log_a))
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, h_heads, p)[:, :t]
+    y = y + xh * params["d_skip"][None, None, :, None]
+    y = y.reshape(b, t, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["ssm_norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    new_state = {"h": h_final.astype(F32), "conv": new_conv}
+    return out, new_state

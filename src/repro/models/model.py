@@ -1,0 +1,419 @@
+"""Model assembly: all 10 assigned architectures behind one API.
+
+Layer stacks use ``jax.lax.scan`` over *stacked* per-layer params so compiled
+HLO size is O(1) in depth (required: 100-layer models compile on the 512-way
+dry-run meshes). Heterogeneous stacks (llama-vision cross-attn every 10th
+layer, zamba2's shared attention every 6th mamba block) are grouped nested
+scans; shared-parameter blocks (zamba2) are closure constants of the scan
+body, applied once per group.
+
+Public API:
+    init_params(rng, cfg)                       -> params pytree
+    forward(params, batch, cfg, remat=...)      -> logits [B, T, V]
+    train_loss(params, batch, cfg)              -> (loss, metrics)
+    init_decode_state(cfg, batch, max_len)      -> cache pytree
+    prefill(params, batch, state, cfg)          -> (logits_last, state)
+    decode_step(params, token, state, cfg)      -> (logits, state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+from repro.models.config import ModelConfig
+
+F32 = jnp.float32
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _stack_init(init_fn, key, n: int):
+    """vmap an init over n layer keys -> params with leading layer dim."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# Per-family block bodies
+# ---------------------------------------------------------------------------
+
+def _attn_block(p, x, cfg, positions, cache, q_chunk, k_chunk):
+    h, new_cache = L.self_attention_block(
+        p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+        positions=positions, cache=cache, q_chunk=q_chunk, k_chunk=k_chunk,
+    )
+    x = x + h
+    x = constrain(x, ("batch", "seq", None))
+    y = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        ff, aux = MOE.moe_ffn(p["moe"], y, cfg)
+    else:
+        ff, aux = L.mlp(p["mlp"], y, cfg.act), None
+    x = x + ff
+    x = constrain(x, ("batch", "seq", None))
+    return x, new_cache, aux
+
+
+def _attn_block_init(cfg, dtype, with_moe):
+    def init(key):
+        ks = jax.random.split(key, 2)
+        p = {
+            "attn": L.attn_init(ks[0], cfg, dtype),
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+        }
+        if with_moe:
+            p["moe"] = MOE.moe_init(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act,
+                                  cfg.n_layers, dtype)
+        return p
+    return init
+
+
+def _cross_block_init(cfg, dtype):
+    def init(key):
+        ks = jax.random.split(key, 2)
+        return {
+            "attn": L.attn_init(ks[0], cfg, dtype, cross=True),
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act,
+                              cfg.n_layers, dtype),
+        }
+    return init
+
+
+def _cross_block(p, x, cfg, vision, q_chunk, k_chunk):
+    h = L.cross_attention_block(
+        p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), vision, cfg,
+        q_chunk=q_chunk, k_chunk=k_chunk,
+    )
+    x = x + h
+    ff = L.mlp(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    return constrain(x + ff, ("batch", "seq", None))
+
+
+def _mamba_block_init(cfg, dtype):
+    def init(key):
+        return {
+            "mamba": M2.mamba2_init(key, cfg, dtype),
+            "ln": jnp.ones((cfg.d_model,), dtype),
+        }
+    return init
+
+
+def _mamba_block(p, x, cfg, state):
+    h, new_state = M2.mamba2_block(
+        p["mamba"], L.rms_norm(x, p["ln"], cfg.norm_eps), cfg, state=state
+    )
+    return constrain(x + h, ("batch", "seq", None)), new_state
+
+
+def _rwkv_block_init(cfg, dtype):
+    def init(key):
+        return {
+            "rwkv": R6.rwkv6_init(key, cfg, dtype),
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+        }
+    return init
+
+
+def _rwkv_block(p, x, cfg, state, chunk_size):
+    st_t = None if state is None else {"shift": state["tshift"], "wkv": state["wkv"]}
+    h, new_t = R6.rwkv6_time_mix(
+        p["rwkv"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+        state=st_t, chunk_size=chunk_size,
+    )
+    x = x + h
+    st_c = None if state is None else state["cshift"]
+    h2, new_c = R6.rwkv6_channel_mix(
+        p["rwkv"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg, state=st_c
+    )
+    x = constrain(x + h2, ("batch", "seq", None))
+    new_state = {"tshift": new_t["shift"], "wkv": new_t["wkv"], "cshift": new_c}
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig):
+    dtype = _dtype(cfg)
+    k_emb, k_layers, k_cross, k_shared, k_head = jax.random.split(rng, 5)
+    params: dict[str, Any] = {
+        "embed": L.dense_init(k_emb, (cfg.vocab, cfg.d_model), scale=1.0, dtype=dtype),
+        "ln_f": jnp.ones((cfg.d_model,), dtype),
+        "head": L.dense_init(k_head, (cfg.d_model, cfg.vocab), dtype=dtype),
+    }
+    if cfg.family in ("dense", "audio"):
+        params["layers"] = _stack_init(
+            _attn_block_init(cfg, dtype, with_moe=False), k_layers, cfg.n_layers)
+    elif cfg.family == "moe":
+        params["layers"] = _stack_init(
+            _attn_block_init(cfg, dtype, with_moe=True), k_layers, cfg.n_layers)
+    elif cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        s = cfg.cross_attn_every - 1
+
+        def group_init(key):
+            k1, k2 = jax.random.split(key)
+            return {
+                "self": _stack_init(_attn_block_init(cfg, dtype, False), k1, s),
+                "cross": _cross_block_init(cfg, dtype)(k2),
+            }
+        params["groups"] = _stack_init(group_init, k_layers, g)
+    elif cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+
+        def group_init(key):
+            return {"mamba": _stack_init(_mamba_block_init(cfg, dtype), key,
+                                         cfg.attn_every)}
+        params["groups"] = _stack_init(group_init, k_layers, g)
+        params["shared_attn"] = _attn_block_init(cfg, dtype, False)(k_shared)
+    elif cfg.family == "ssm":
+        params["layers"] = _stack_init(_rwkv_block_init(cfg, dtype), k_layers,
+                                       cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / no-cache path)
+# ---------------------------------------------------------------------------
+
+def _embed(params, batch, cfg):
+    """Token or stub-frontend embedding. batch: dict with 'tokens' [B,T] int
+    or 'embeds' [B,T,d] (audio frames / any precomputed stream)."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(_dtype(cfg))
+    else:
+        x = params["embed"][batch["tokens"]]
+    return constrain(x, ("batch", "seq", None))
+
+
+def forward(params, batch, cfg: ModelConfig, *, remat: bool = True,
+            q_chunk: int = 1024, k_chunk: int = 1024, rwkv_chunk: int = 1):
+    """Full-sequence forward -> logits [B, T, V] (f32). ``batch`` may carry
+    'vision_embeds' [B, Nv, d] for the vlm family."""
+    x = _embed(params, batch, cfg)
+    b, t, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    aux_acc = jnp.zeros((), F32)
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(x, p):
+            y, _, aux = _attn_block(p, x, cfg, positions, None, q_chunk, k_chunk)
+            return y, (aux["aux_loss"] if aux else jnp.zeros((), F32))
+        body_fn = jax.checkpoint(body) if remat else body
+        x, auxs = jax.lax.scan(body_fn, x, params["layers"])
+        aux_acc = auxs.sum()
+    elif cfg.family == "vlm":
+        vision = batch["vision_embeds"].astype(_dtype(cfg))
+
+        def group(x, gp):
+            def self_body(x, p):
+                y, _, _ = _attn_block(p, x, cfg, positions, None, q_chunk, k_chunk)
+                return y, None
+            sb = jax.checkpoint(self_body) if remat else self_body
+            x, _ = jax.lax.scan(sb, x, gp["self"])
+            cb = jax.checkpoint(
+                lambda x, p: (_cross_block(p, x, cfg, vision, q_chunk, k_chunk), None)
+            ) if remat else (lambda x, p: (_cross_block(p, x, cfg, vision, q_chunk, k_chunk), None))
+            x, _ = cb(x, gp["cross"])
+            return x, None
+        x, _ = jax.lax.scan(group, x, params["groups"])
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, gp):
+            def mb(x, p):
+                y, _ = _mamba_block(p, x, cfg, None)
+                return y, None
+            mb_fn = jax.checkpoint(mb) if remat else mb
+            x, _ = jax.lax.scan(mb_fn, x, gp["mamba"])
+            y, _, _ = _attn_block(shared, x, cfg, positions, None, q_chunk, k_chunk)
+            return y, None
+        x, _ = jax.lax.scan(group, x, params["groups"])
+    elif cfg.family == "ssm":
+        def body(x, p):
+            y, _ = _rwkv_block(p, x, cfg, None, rwkv_chunk)
+            return y, None
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["layers"])
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("btd,dv->btv", x, params["head"],
+                        preferred_element_type=F32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return logits, aux_acc
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, remat: bool = True,
+               q_chunk: int = 1024, k_chunk: int = 1024, rwkv_chunk: int = 1):
+    """Next-token CE for causal archs; per-frame CE for encoder-only (labels
+    supplied by the masked-prediction stub). Adds MoE aux loss + z-loss."""
+    logits, aux = forward(params, batch, cfg, remat=remat, q_chunk=q_chunk,
+                          k_chunk=k_chunk, rwkv_chunk=rwkv_chunk)
+    labels = batch["labels"]
+    if cfg.causal:
+        logits_s = logits[:, :-1]
+        labels_s = labels[:, 1:]
+    else:
+        logits_s, labels_s = logits, labels
+    logp = jax.nn.log_softmax(logits_s, axis=-1)
+    ll = jnp.take_along_axis(logp, labels_s[..., None], axis=-1)[..., 0]
+    mask = (labels_s >= 0).astype(F32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / denom
+    # z-loss keeps the softmax normalizer tame (standard at scale).
+    zl = 1e-4 * ((jax.scipy.special.logsumexp(logits_s, axis=-1) ** 2) * mask).sum() / denom
+    loss = ce + zl + 0.01 * aux
+    return loss, {"ce": ce, "z_loss": zl, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode path (serving)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree for serving. Attention caches are ring buffers of size
+    min(max_len, swa_window or max_len); SSM/RWKV states are O(1)."""
+    dtype = _dtype(cfg)
+    if cfg.family in ("dense", "moe"):
+        size = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+        cache = jax.vmap(
+            lambda _: L.init_kv_cache(batch, size, cfg.n_kv_heads, cfg.hd, dtype)
+        )(jnp.arange(cfg.n_layers))
+        return {"kv": cache, "pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        s = cfg.cross_attn_every - 1
+        size = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+        cache = jax.vmap(jax.vmap(
+            lambda _: L.init_kv_cache(batch, size, cfg.n_kv_heads, cfg.hd, dtype)
+        ))(jnp.arange(g * s).reshape(g, s))
+        return {"kv": cache, "pos": jnp.zeros((batch,), jnp.int32), "vision": None}
+    if cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.attn_every
+        kv = jax.vmap(
+            lambda _: L.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.hd, dtype)
+        )(jnp.arange(g))
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        ssm = {
+            "h": jnp.zeros((g, cfg.attn_every, batch, cfg.ssm_heads,
+                            cfg.ssm_state, cfg.ssm_head_dim), F32),
+            "conv": jnp.zeros((g, cfg.attn_every, batch, cfg.conv_kernel - 1,
+                               conv_dim), dtype),
+        }
+        return {"kv": kv, "ssm": ssm, "pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "ssm":
+        h, p = cfg.rwkv_heads, cfg.ssm_head_dim
+        return {
+            "wkv": jnp.zeros((cfg.n_layers, batch, h, p, p), F32),
+            "tshift": jnp.zeros((cfg.n_layers, batch, cfg.d_model), F32),
+            "cshift": jnp.zeros((cfg.n_layers, batch, cfg.d_model), F32),
+            "pos": jnp.zeros((batch,), jnp.int32),
+        }
+    raise ValueError(f"{cfg.name}: family {cfg.family} has no decode path")
+
+
+def _logits_last(params, x, cfg):
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return jnp.einsum("btd,dv->btv", x, params["head"], preferred_element_type=F32)
+
+
+def step_with_cache(params, batch, state, cfg: ModelConfig, *,
+                    q_chunk: int = 1024, k_chunk: int = 1024,
+                    rwkv_chunk: int = 1):
+    """Run T tokens (T=1 decode, T>1 prefill) against the cache pytree."""
+    x = _embed(params, batch, cfg)
+    b, t, _ = x.shape
+    pos0 = state["pos"]  # int32[B] — lanes advance independently
+    positions = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    new_state = dict(state)
+    new_state["pos"] = pos0 + t
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, xs):
+            p, cache = xs
+            y, nc, _ = _attn_block(p, x, cfg, positions, cache, q_chunk, k_chunk)
+            return y, nc
+        x, new_kv = jax.lax.scan(body, x, (params["layers"], state["kv"]))
+        new_state["kv"] = new_kv
+    elif cfg.family == "vlm":
+        # Vision tokens are static across decode: captured at prefill, reused
+        # from state for subsequent steps.
+        if "vision_embeds" in batch:
+            vision = batch["vision_embeds"].astype(_dtype(cfg))
+            new_state["vision"] = vision
+        else:
+            vision = state["vision"]
+
+        def group(x, xs):
+            gp, caches = xs
+
+            def sb(x, xs2):
+                p, c = xs2
+                y, nc, _ = _attn_block(p, x, cfg, positions, c, q_chunk, k_chunk)
+                return y, nc
+            x, ncs = jax.lax.scan(sb, x, (gp["self"], caches))
+            x = _cross_block(gp["cross"], x, cfg, vision, q_chunk, k_chunk)
+            return x, ncs
+        x, new_kv = jax.lax.scan(group, x, (params["groups"], state["kv"]))
+        new_state["kv"] = new_kv
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(x, xs):
+            gp, kvc, ssm = xs
+
+            def mb(x, xs2):
+                p, st = xs2
+                y, ns = _mamba_block(p, x, cfg, st)
+                return y, ns
+            x, nss = jax.lax.scan(mb, x, (gp["mamba"],
+                                          {"h": ssm["h"], "conv": ssm["conv"]}))
+            y, nkv, _ = _attn_block(shared, x, cfg, positions, kvc, q_chunk, k_chunk)
+            return y, (nkv, nss)
+        x, (new_kv, new_ssm) = jax.lax.scan(
+            group, x, (params["groups"], state["kv"], state["ssm"]))
+        new_state["kv"] = new_kv
+        new_state["ssm"] = new_ssm
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            p, st = xs
+            y, ns = _rwkv_block(p, x, cfg, st, rwkv_chunk)
+            return y, ns
+        st = {"tshift": state["tshift"], "wkv": state["wkv"], "cshift": state["cshift"]}
+        x, ns = jax.lax.scan(body, x, (params["layers"], st))
+        new_state.update(ns)
+    else:
+        raise ValueError(cfg.family)
+
+    logits = _logits_last(params, x[:, -1:, :], cfg)
+    return logits[:, 0], new_state
+
+
+def prefill(params, batch, state, cfg: ModelConfig, **kw):
+    return step_with_cache(params, batch, state, cfg, **kw)
+
+
+def decode_step(params, tokens, state, cfg: ModelConfig, **kw):
+    """tokens: int32[B] -> (logits [B, V], new_state)."""
+    return step_with_cache(params, {"tokens": tokens[:, None]}, state, cfg, **kw)

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch.
+
+The dispatch math is the same machinery as the EJ-FAT calendar dispatch
+(core/router.member_positions): each (token, k) assignment is a "packet"
+whose "member" is the chosen expert; positions come from the exclusive
+cumsum-of-one-hot; capacity overflow is dropped *and accounted* — the paper's
+discard rule, applied to tokens. Experts are tensor-parallel: expert d_ff is
+sharded on the mesh "model" axis (128 experts x 304 ff/chip for arctic).
+
+Dispatch groups (``cfg.moe_dispatch_groups > 1``, beyond-paper perf feature —
+EXPERIMENTS.md §Perf): the token stream splits into g groups matching the
+data shards and each group dispatches into its own capacity slice of a
+[g, E, C/g, d] buffer constrained to the data axes. The scatter then stays
+shard-local and GSPMD never replicates (nor all-reduces) the full expert
+buffer — the fix for the worst baseline roofline cell (mixtral train_4k).
+
+arctic-480b additionally runs a dense residual FFN in parallel with the MoE
+output (config.moe_dense_residual).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.router import member_positions
+from repro.distributed.context import constrain
+from repro.models.layers import dense_init, mlp, mlp_init
+
+F32 = jnp.float32
+
+
+def moe_init(key, cfg, dtype):
+    ks = jax.random.split(key, 5)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    out_scale = 1.0 / (2 * cfg.n_layers) ** 0.5
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype=F32),  # router in f32
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype=dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype=dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), scale=out_scale, dtype=dtype),
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = mlp_init(ks[4], d, ff, cfg.act, cfg.n_layers, dtype)
+    return p
+
+
+def moe_ffn(params, x, cfg):
+    """x: [B, T, d] -> ([B, T, d], aux) with load-balance aux loss + drop count."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(b * t, d)
+    n = b * t
+
+    logits = xt.astype(F32) @ params["router"]  # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # [N, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    g = max(int(getattr(cfg, "moe_dispatch_groups", 1) or 1), 1)
+    if n % g:
+        g = 1
+    ng = n // g
+
+    # k-major flatten within each group: first-choice packets dispatch before
+    # any second-choice ones (first choices win capacity contention).
+    # Capacity floor of 8 keeps small serving batches drop-free; ng*k cap
+    # means a capacity larger than every assignment is never allocated.
+    capacity = min(ng * k, max(int(cfg.capacity_factor * ng * k / e) + 1, 8))
+    member_g = gate_idx.reshape(g, ng, k).transpose(0, 2, 1).reshape(g, k * ng)
+    pos, keep, _counts = jax.vmap(
+        lambda m: member_positions(m, e, capacity))(member_g)
+
+    # Scatter tokens into [g, E, C, d] buffers (OOB index => dropped write).
+    # vmap over the group dim keeps the scatter structurally group-local
+    # (batched scatter dims partition trivially; an explicit g_idx gather
+    # index would defeat GSPMD's locality analysis and replicate the buffer).
+    m_idx = jnp.where(keep, member_g, e)
+    p_idx = jnp.where(keep, pos, capacity)
+    src = jnp.tile(xt.reshape(g, ng, d), (1, k, 1))  # [g, K*ng, d]
+    buf = jax.vmap(
+        lambda s, m, p: jnp.zeros((e, capacity, d), x.dtype)
+        .at[m, p].set(s, mode="drop")
+    )(src, m_idx, p_idx)
+    if g > 1:
+        buf = constrain(buf, ("batch", None, None, None))
+
+    # Expert computation: batched matmuls (d_ff sharded on "model").
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, params["w_gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", buf, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, params["w_up"]))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_down"])  # [g, E, C, d]
+    if g > 1:
+        out_buf = constrain(out_buf, ("batch", None, None, None))
+
+    # Gather back and combine with gates; dropped assignments contribute 0.
+    got = jax.vmap(lambda ob, m, p: ob[m, p])(
+        out_buf, m_idx % e, p_idx % capacity)  # [g, K*ng, d]
+    got = jnp.where(keep[..., None], got, 0)
+    gates_g = gate_vals.reshape(g, ng, k).transpose(0, 2, 1).reshape(g, k * ng)
+    combined = (got.astype(F32) * gates_g[..., None]).reshape(g, k, ng, d).sum(1)
+    y = combined.astype(x.dtype).reshape(b, t, d)
+
+    if cfg.moe_dense_residual:
+        y = y + mlp(params["dense"], x, cfg.act)
+
+    # Aux: Switch-style load-balance loss + drop accounting.
+    me = probs.mean(0)  # [E] mean router prob
+    ce = jnp.zeros(e, F32).at[member_g.reshape(-1)].add(
+        keep.reshape(-1).astype(F32)) / jnp.maximum(n * k, 1)
+    aux_loss = e * jnp.sum(me * ce)
+    dropped = jnp.sum((member_g < e) & ~keep)
+    return y, {"aux_loss": aux_loss, "dropped": dropped}

@@ -1,0 +1,166 @@
+"""RWKV-6 "Finch" block for rwkv6-7b: attention-free time-mix with
+data-dependent decay + channel-mix.
+
+Per head (head_dim P): state S in R^{P x P};
+
+    w_t = exp(-exp(w0 + lora_w(x~_t)))          (data-dependent decay)
+    o_t = r_t . (S_{t-1} + (u (x) 1) * k_t^T v_t)
+    S_t = S_{t-1} * diag(w_t) + k_t^T v_t
+
+Baseline path: lax.scan over time (exact). An optimized chunked-WKV path
+(flash-linear-attention-style, exp-rescaled matmuls per chunk) is selectable
+with ``chunk_size > 1`` — used by the perf phase; it matches the scan path to
+fp32 tolerance (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+F32 = jnp.float32
+LORA = 64
+
+
+def rwkv6_init(key, cfg, dtype):
+    d, ff = cfg.d_model, cfg.d_ff
+    h, p = cfg.rwkv_heads, cfg.ssm_head_dim
+    ks = jax.random.split(key, 12)
+    out_scale = 1.0 / (2 * cfg.n_layers) ** 0.5
+    return {
+        # time-mix
+        "mu": 0.5 * jnp.ones((5, d), F32),  # token-shift lerp for r,k,v,g,w
+        "wr": dense_init(ks[0], (d, d), dtype=dtype),
+        "wk": dense_init(ks[1], (d, d), dtype=dtype),
+        "wv": dense_init(ks[2], (d, d), dtype=dtype),
+        "wg": dense_init(ks[3], (d, d), dtype=dtype),
+        "w0": jnp.full((d,), -6.0, F32),
+        "w_lora_a": dense_init(ks[4], (d, LORA), dtype=F32),
+        "w_lora_b": dense_init(ks[5], (LORA, d), dtype=F32),
+        "bonus_u": jnp.zeros((h, p), F32),
+        "ln_x": jnp.ones((d,), dtype),
+        "wo": dense_init(ks[6], (d, d), scale=out_scale, dtype=dtype),
+        # channel-mix
+        "mu_c": 0.5 * jnp.ones((2, d), F32),
+        "ck": dense_init(ks[7], (d, ff), dtype=dtype),
+        "cv": dense_init(ks[8], (ff, d), scale=out_scale, dtype=dtype),
+        "cr": dense_init(ks[9], (d, d), dtype=dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """x: [B, T, d]; prev: [B, d] (last token of previous segment)."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def rwkv6_time_mix(params, x, cfg, *, state=None, chunk_size: int = 1):
+    """x: [B, T, d]. state: dict(shift [B,d], wkv [B,H,P,P]) or None."""
+    b, t, d = x.shape
+    h, p = cfg.rwkv_heads, cfg.ssm_head_dim
+    prev = jnp.zeros((b, d), x.dtype) if state is None else state["shift"].astype(x.dtype)
+    xs = _token_shift(x, prev)
+    mu = params["mu"]
+    xr, xk, xv, xg, xw = (
+        x + (mu[i] * (xs.astype(F32) - x.astype(F32))).astype(x.dtype)
+        for i in range(5)
+    )
+    r = (xr @ params["wr"]).reshape(b, t, h, p).astype(F32)
+    k = (xk @ params["wk"]).reshape(b, t, h, p).astype(F32)
+    v = (xv @ params["wv"]).reshape(b, t, h, p).astype(F32)
+    g = xg @ params["wg"]
+    lora = jnp.tanh(xw.astype(F32) @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(params["w0"] + lora))  # [B,T,d] in (0,1)
+    w = w.reshape(b, t, h, p)
+
+    wkv0 = None if state is None else state["wkv"]
+    if chunk_size > 1:
+        o, s_fin = _wkv_chunked_with_state(r, k, v, w, params["bonus_u"], chunk_size, wkv0)
+    else:
+        o, s_fin = _wkv_scan_with_state(r, k, v, w, params["bonus_u"], wkv0)
+
+    o = o.reshape(b, t, d).astype(x.dtype)
+    o = rms_norm(o, params["ln_x"], cfg.norm_eps)
+    o = (o * jax.nn.silu(g)) @ params["wo"]
+    new_state = {"shift": x[:, -1, :].astype(F32), "wkv": s_fin}
+    return o, new_state
+
+
+def _wkv_scan_with_state(r, k, v, w, u, s0):
+    b, t, h, p = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, p, p), F32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhp,bhpq->bhq", rt, s + u[None, :, :, None] * kv)
+        s_new = s * wt[..., :, None] + kv
+        return s_new, o
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    s_fin, os = jax.lax.scan(step, s0.astype(F32), xs)
+    return os.transpose(1, 0, 2, 3), s_fin
+
+
+def _wkv_chunked_with_state(r, k, v, w, u, chunk, s0):
+    b, t, h, p = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((b, h, p, p), F32)
+    # Reuse _wkv_chunked but thread s0 through the scan carry.
+    out, s_fin = _wkv_chunked_carry(r, k, v, w, u, chunk, s0.astype(F32))
+    return out, s_fin
+
+
+def _wkv_chunked_carry(r, k, v, w, u, chunk, s0):
+    b, t, h, p = r.shape
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    if pad:
+        r, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0))) for a in (r, k, v))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+
+    def to_chunks(a):
+        return a.reshape(b, n_chunks, chunk, h, p).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, logw))
+    li = jnp.arange(chunk)
+    strict = (li[:, None] > li[None, :])
+
+    def step(s, xs):
+        rt, kt, vt, lw = xs
+        cum = jnp.cumsum(lw, axis=1)
+        cum_im1 = jnp.concatenate([jnp.zeros_like(cum[:, :1]), cum[:, :-1]], axis=1)
+        m = jnp.max(cum, axis=1, keepdims=True)
+        r_t = rt * jnp.exp(cum_im1 - m)
+        k_t = kt * jnp.exp(m - cum)
+        scores = jnp.einsum("bihp,bjhp->bhij", r_t, k_t)
+        scores = scores * strict[None, None]
+        o_intra = jnp.einsum("bhij,bjhq->bihq", scores, vt)
+        diag = jnp.einsum("bihp,bihp->bih", rt, u[None, None] * kt)
+        o_intra = o_intra + diag[..., None] * vt
+        o_inter = jnp.einsum("bihp,bhpq->bihq", rt * jnp.exp(cum_im1), s)
+        suffix = jnp.exp(cum[:, -1:] - cum)
+        s_new = s * jnp.exp(cum[:, -1])[..., None] + jnp.einsum(
+            "bjhp,bjhq->bhpq", kt * suffix, vt
+        )
+        return s_new, o_intra + o_inter
+
+    s_fin, os = jax.lax.scan(step, s0, (rc, kc, vc, lwc))
+    o = os.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, h, p)[:, :t]
+    return o, s_fin
+
+
+def rwkv6_channel_mix(params, x, cfg, *, state=None):
+    """Channel-mix (relu^2 FFN with token shift). state: [B, d] prev token."""
+    b, t, d = x.shape
+    prev = jnp.zeros((b, d), x.dtype) if state is None else state.astype(x.dtype)
+    xs = _token_shift(x, prev)
+    mu = params["mu_c"]
+    xk = x + (mu[0] * (xs.astype(F32) - x.astype(F32))).astype(x.dtype)
+    xr = x + (mu[1] * (xs.astype(F32) - x.astype(F32))).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ params["ck"]))
+    out = jax.nn.sigmoid(xr @ params["cr"]) * (kk @ params["cv"])
+    return out, x[:, -1, :].astype(F32)

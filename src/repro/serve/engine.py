@@ -1,0 +1,173 @@
+"""Serving engine: LB front door + continuous-batched prefill/decode.
+
+Requests are *events*: the front door assigns each request a monotonically
+increasing event number and an entropy value, then routes it through the
+same epoch-calendar data plane used for training ingest — the member is a
+model replica (DP slice), the lane (entropy & mask, the paper's RSS
+mechanism) picks a decode slot *within* the replica. Replica weights /
+membership change hit-lessly via the control plane (e.g. drain a replica by
+weighting it to 0 in the next epoch — in-flight requests keep their member).
+
+The decode engine is slot-based continuous batching: each replica owns
+``n_lanes`` slots; finished sequences free their slot for the next routed
+request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.control_plane import LoadBalancerControlPlane
+from repro.core.epoch import EpochManager
+from repro.core.protocol import encode_headers, split64
+from repro.core.router import route
+from repro.core.tables import MemberSpec
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # int32[T]
+    max_new_tokens: int = 16
+    event_number: int = -1
+    entropy: int = 0
+    member: int = -1
+    lane: int = -1
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    n_replicas: int = 2
+    lane_bits: int = 1           # 2**lane_bits decode slots per replica
+    max_len: int = 256
+    greedy: bool = True
+
+
+class ServingEngine:
+    def __init__(self, model_cfg: ModelConfig, serve_cfg: ServeConfig, params):
+        self.mcfg = model_cfg
+        self.scfg = serve_cfg
+        self.params = params
+        self.manager = EpochManager(max_members=max(64, serve_cfg.n_replicas))
+        self.cp = LoadBalancerControlPlane(self.manager)
+        members = {
+            i: MemberSpec(node_id=i, base_lane=0, lane_bits=serve_cfg.lane_bits)
+            for i in range(serve_cfg.n_replicas)
+        }
+        self.cp.start(members)
+        self.n_lanes = 1 << serve_cfg.lane_bits
+        # per replica: decode state over n_lanes slots + slot occupancy
+        self.states = [
+            M.init_decode_state(model_cfg, self.n_lanes, serve_cfg.max_len)
+            for _ in range(serve_cfg.n_replicas)
+        ]
+        self.slots: list[list[Optional[Request]]] = [
+            [None] * self.n_lanes for _ in range(serve_cfg.n_replicas)
+        ]
+        self.queue: deque[Request] = deque()
+        self.next_event = 1000
+        self.next_rid = 0
+        self._decode = jax.jit(
+            lambda p, tok, st: M.decode_step(p, tok, st, self.mcfg))
+        self.stats = {"routed": {}, "completed": 0}
+
+    # -- front door -------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+        req = Request(rid=self.next_rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens)
+        self.next_rid += 1
+        req.event_number = self.next_event
+        self.next_event += int(np.random.default_rng(req.rid).integers(1, 5))
+        req.entropy = int(np.random.default_rng(req.rid + 7).integers(0, 1 << 16))
+        tables = self.manager.device_tables()
+        hi, lo = split64(np.asarray([req.event_number], np.uint64))
+        r = route(tables, jnp.asarray(hi), jnp.asarray(lo),
+                  jnp.asarray([req.entropy], jnp.uint32))
+        req.member = int(r.node[0])
+        req.lane = int(r.lane[0])
+        self.stats["routed"][req.member] = self.stats["routed"].get(req.member, 0) + 1
+        self.queue.append(req)
+        return req
+
+    # -- scheduling ---------------------------------------------------------------
+    def _try_place(self) -> None:
+        pending = []
+        while self.queue:
+            req = self.queue.popleft()
+            lane = req.lane % self.n_lanes
+            if self.slots[req.member][lane] is None:
+                self.slots[req.member][lane] = req
+                self._prefill_into_slot(req)
+            else:
+                pending.append(req)  # lane busy: wait (RSS lane affinity)
+        self.queue.extend(pending)
+
+    def _prefill_into_slot(self, req: Request) -> None:
+        """Single-sequence prefill into the slot's cache lane."""
+        member, lane = req.member, req.lane % self.n_lanes
+        state = self.states[member]
+        tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
+        # Per-lane decode state: run prefill on a batch-1 view, then scatter
+        # the lane back. For simplicity the slot engine keeps per-lane states.
+        one = M.init_decode_state(self.mcfg, 1, self.scfg.max_len)
+        logits, one = M.prefill(self.params, {"tokens": tokens}, one, self.mcfg)
+        nxt = int(jnp.argmax(logits[0]))
+        req.output.append(nxt)
+        self.states[member] = _scatter_lane(state, one, lane)
+
+    def step(self) -> int:
+        """One engine tick: place queued requests, one decode step per replica."""
+        self._try_place()
+        n_active = 0
+        for m in range(self.scfg.n_replicas):
+            active = [(l, r) for l, r in enumerate(self.slots[m]) if r is not None]
+            if not active:
+                continue
+            n_active += len(active)
+            toks = np.zeros((self.n_lanes,), np.int32)
+            for l, r in active:
+                toks[l] = r.output[-1]
+            logits, self.states[m] = self._decode(
+                self.params, jnp.asarray(toks), self.states[m])
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for l, r in active:
+                r.output.append(int(nxt[l]))
+                if len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    self.slots[m][l] = None
+                    self.stats["completed"] += 1
+        return n_active
+
+    def run_until_done(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            n_active = self.step()
+            if not self.queue and n_active == 0:
+                break
+
+
+def _scatter_lane(state, one, lane: int):
+    """Write batch-1 decode state ``one`` into lane ``lane`` of ``state``.
+
+    Batch dims differ per leaf family; we detect the dim whose size matches
+    the lane count by structure (leaves share [..., B, ...] layout per family).
+    """
+    def sc(dst, src):
+        if dst.ndim == 0 or dst.shape == src.shape:
+            return src if dst.shape == src.shape else dst
+        # find axis where dst has n_lanes and src has 1
+        for ax in range(dst.ndim):
+            if src.ndim == dst.ndim and dst.shape[ax] != src.shape[ax] and src.shape[ax] == 1:
+                idx = [slice(None)] * dst.ndim
+                idx[ax] = slice(lane, lane + 1)
+                return dst.at[tuple(idx)].set(src)
+        return dst
+    return jax.tree.map(sc, state, one)

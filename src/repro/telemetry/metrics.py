@@ -1,0 +1,63 @@
+"""Per-member telemetry: what the control plane consumes.
+
+Mirrors the real EJ-FAT deployment where CN daemons report receive-queue fill
+and processing rate back to the control plane. Here members are DP workers
+(or serving replicas); fill is estimated from queue depth / step-time EWMAs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+
+from repro.core.control_plane import MemberTelemetry
+
+
+@dataclasses.dataclass
+class _MemberStats:
+    ewma_step_time: float = 0.0
+    backlog: int = 0
+    processed: int = 0
+    healthy: bool = True
+    last_seen: float = 0.0
+
+
+class TelemetryHub:
+    """Collects member reports; emits control-plane telemetry snapshots."""
+
+    def __init__(self, alpha: float = 0.2, queue_capacity: int = 64):
+        self.alpha = alpha
+        self.queue_capacity = queue_capacity
+        self.members: dict[int, _MemberStats] = defaultdict(_MemberStats)
+
+    def report_step(self, member_id: int, step_time: float, backlog: int = 0,
+                    processed: int = 1) -> None:
+        s = self.members[member_id]
+        s.ewma_step_time = (step_time if s.ewma_step_time == 0
+                            else (1 - self.alpha) * s.ewma_step_time
+                            + self.alpha * step_time)
+        s.backlog = backlog
+        s.processed += processed
+        s.last_seen = time.time()
+
+    def report_failure(self, member_id: int) -> None:
+        self.members[member_id].healthy = False
+
+    def report_recovered(self, member_id: int) -> None:
+        self.members[member_id].healthy = True
+
+    def snapshot(self) -> dict[int, MemberTelemetry]:
+        out = {}
+        times = [s.ewma_step_time for s in self.members.values()
+                 if s.healthy and s.ewma_step_time > 0]
+        t_ref = min(times) if times else 1.0
+        for mid, s in self.members.items():
+            # fill: combination of backlog fraction and relative slowness —
+            # a member 2x slower than the fastest behaves like a 2x-full queue.
+            rel = s.ewma_step_time / t_ref if t_ref > 0 else 1.0
+            fill = min(1.0, 0.5 * (s.backlog / max(self.queue_capacity, 1)) +
+                       0.5 * (1 - 1 / max(rel, 1e-6)) * 2)
+            rate = 1.0 / s.ewma_step_time if s.ewma_step_time > 0 else 1.0
+            out[mid] = MemberTelemetry(fill=max(0.0, fill), rate=rate,
+                                       healthy=s.healthy)
+        return out

@@ -1,0 +1,111 @@
+"""AdamW with optional int8 block-quantized moments (8-bit Adam) and
+ZeRO-1-style state sharding.
+
+8-bit moments store m/v as int8 + per-256-block fp32 scales (paper-adjacent
+distributed-optimization trick; also what makes arctic-480b training states
+fit v5e HBM — see EXPERIMENTS.md §Dry-run). State sharding: moment pytrees
+inherit the param sharding; ZeRO-1 additionally shards the largest dim over
+the data axes via distributed.sharding.param_sharding(fsdp=True) applied to
+the *states* even when params are TP-only.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import dequantize_int8, quantize_int8
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    eight_bit: bool = False
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def _q_state(x):
+    """Shape-preserving per-row int8 quantization.
+
+    The q tensor keeps the param's shape, so it inherits the param's
+    sharding; a flat-blocked layout (compression.quantize_int8) would force
+    GSPMD to all-gather the full f32 moments at the re-shape (measured: 10x
+    625GB gathers/step on arctic — see EXPERIMENTS.md §Perf iteration 5).
+    """
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def _deq_state(st, shape, n):
+    return (st["q"].astype(F32) * st["s"])
+
+
+def init(params, cfg: AdamWConfig):
+    def one(p):
+        z = jnp.zeros(p.shape, F32)
+        if cfg.eight_bit:
+            return {"m": _q_state(z), "v": _q_state(z)}
+        return {"m": z, "v": z}
+
+    return {"mu": jax.tree.map(one, params), "count": jnp.zeros((), jnp.int32)}
+
+
+def update(grads, state, params, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    lr = schedule(cfg, count)
+
+    # global-norm clip
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(F32) ** 2) for g in leaves))
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1 - cfg.b1 ** count.astype(F32)
+    b2c = 1 - cfg.b2 ** count.astype(F32)
+
+    def one(g, mu, p):
+        gf = g.astype(F32) * clip
+        if cfg.eight_bit:
+            m = _deq_state(mu["m"], p.shape, p.size)
+            v = _deq_state(mu["v"], p.shape, p.size)
+        else:
+            m, v = mu["m"], mu["v"]
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        upd = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            upd = upd + cfg.weight_decay * p.astype(F32)
+        new_p = (p.astype(F32) - lr * upd).astype(p.dtype)
+        new_mu = ({"m": _q_state(m), "v": _q_state(v)} if cfg.eight_bit
+                  else {"m": m, "v": v})
+        return new_p, new_mu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    out = [one(g, mu, p) for g, mu, p in zip(flat_g, flat_mu, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    return new_params, {"mu": new_mu, "count": count}, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,208 @@
+"""The jitted training step, with the EJ-FAT ingest stage as a first-class
+graph component.
+
+Pipeline inside one step (config.lb_ingest):
+  1. Arrival-ordered event shards (tokens/labels/headers) land on each DP
+     member — this is what the network delivered, NOT who owns the events.
+  2. The LB data plane routes each event header through the epoch calendar
+     (pure function of tables — stateless, paper §I-B.3).
+  3. ``all_to_all`` redistribution (core/router.make_redistribute) moves each
+     event to its owning member: the paper's "in-network sorting" realized on
+     the ICI fabric. Capacity overflow is dropped+accounted (masked labels).
+  4. Standard fwd/bwd (+microbatch accumulation), AdamW update.
+
+The dry-run lowers exactly this function, so the ingest collectives are part
+of every compiled multi-pod graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import router as lb_router
+from repro.core.protocol import decode_fields
+from repro.core.tables import DeviceTables
+from repro.distributed import sharding as shd
+from repro.distributed.compression import compress_decompress
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train import optimizer as opt
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: opt.AdamWConfig = dataclasses.field(default_factory=opt.AdamWConfig)
+    remat: bool = True
+    accum_steps: int = 1
+    lb_ingest: bool = True
+    lb_capacity_factor: float = 1.0   # per (src, member) slack
+    grad_compress: bool = False
+    q_chunk: int = 1024
+    k_chunk: int = 1024
+    rwkv_chunk: int = 1
+
+
+def init_train_state(rng, model_cfg: ModelConfig, train_cfg: TrainConfig):
+    params = M.init_params(rng, model_cfg)
+    return {
+        "params": params,
+        "opt": opt.init(params, train_cfg.adamw),
+        "efb": None,  # error-feedback residual (grad compression), lazy
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _ingest(batch, tables: DeviceTables, mesh: Mesh, global_batch: int):
+    """LB route + on-mesh redistribution: a distributed counting sort.
+
+    Each arrival-ordered event is routed through the calendar (stateless) to
+    its owning member m; its destination row is ``m * cap + position`` where
+    position is the exclusive running count of member-m events (the same
+    cumsum-of-one-hot plan the Pallas dispatch kernel computes). The global
+    scatter across the batch dim is what GSPMD turns into the inter-chip
+    exchange — the paper's "in-network sorting" on the ICI fabric. Capacity
+    cap = B/W (cf 1.0): output batch identical to input, overflow events
+    dropped + accounted (the paper's discard rule; a few % at these shapes).
+    """
+    d_ax = shd.data_axes(mesh)
+    n_members = int(np.prod([mesh.shape[a] for a in d_ax]))
+    f = decode_fields(batch["headers"].astype(jnp.uint32))
+    r = lb_router.route(tables, f["event_hi"], f["event_lo"], f["entropy"],
+                        header_words=batch["headers"].astype(jnp.uint32))
+    b = batch["labels"].shape[0]
+    cap = max(b // n_members, 1)
+    pos, keep, _counts = lb_router.member_positions(r.node, n_members, cap)
+    dest = jnp.where(keep, r.node * cap + pos, n_members * cap)  # OOB => drop
+
+    from repro.distributed.context import constrain
+
+    def scatter_field(x, fill):
+        buf = jnp.full((n_members * cap,) + x.shape[1:], fill, x.dtype)
+        buf = buf.at[dest].set(x, mode="drop")
+        return constrain(buf, ("batch",) + (None,) * (x.ndim - 1))
+
+    out = {
+        k: scatter_field(v, -1 if k == "labels" else 0)
+        for k, v in batch.items() if k != "headers"
+    }
+    occ = jnp.zeros((n_members * cap,), jnp.int32).at[dest].set(
+        jnp.ones_like(dest, jnp.int32), mode="drop")
+    return out, occ
+
+
+def make_train_step(
+    model_cfg: ModelConfig,
+    train_cfg: TrainConfig,
+    mesh: Optional[Mesh] = None,
+    global_batch: Optional[int] = None,
+):
+    """Returns step(state, batch, tables) -> (state, metrics). ``tables`` may
+    be None when lb_ingest is off."""
+
+    def loss_fn(params, mb):
+        return M.train_loss(
+            params, mb, model_cfg, remat=train_cfg.remat,
+            q_chunk=train_cfg.q_chunk, k_chunk=train_cfg.k_chunk,
+            rwkv_chunk=train_cfg.rwkv_chunk,
+        )
+
+    def grads_of(params, mb):
+        if train_cfg.accum_steps <= 1:
+            (loss, met), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            return loss, met, grads
+        a = train_cfg.accum_steps
+
+        def slice_mb(mb, i):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // a), x.shape[0] // a, 0)
+                if x.ndim >= 1 else x,
+                mb,
+            )
+
+        def body(carry, i):
+            acc, lsum = carry
+            (loss, _met), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, slice_mb(mb, i))
+            acc = jax.tree.map(lambda A, G: A + G.astype(F32), acc, g)
+            return (acc, lsum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        (gsum, lsum), _ = jax.lax.scan(body, (zeros, 0.0), jnp.arange(a))
+        grads = jax.tree.map(lambda g: g / a, gsum)
+        return lsum / a, {}, grads
+
+    def step(state, batch, tables):
+        metrics = {}
+        if train_cfg.lb_ingest:
+            assert mesh is not None and tables is not None
+            mb, occ = _ingest(batch, tables, mesh, global_batch
+                              or batch["labels"].shape[0])
+            metrics["ingest_occupancy"] = occ.astype(F32).mean()
+        else:
+            mb = {k: v for k, v in batch.items() if k != "headers"}
+
+        loss, lmet, grads = grads_of(state["params"], mb)
+        metrics.update(lmet)
+
+        if train_cfg.grad_compress:
+            # int8 round-trip + error feedback (collective-payload analogue;
+            # see distributed/compression.py for the explicit psum variant).
+            efb = state["efb"]
+            if efb is None:
+                efb = jax.tree.map(lambda g: jnp.zeros(g.shape, F32), grads)
+            grads_fb = jax.tree.map(lambda g, e: g.astype(F32) + e, grads, efb)
+            deq = jax.tree.map(compress_decompress, grads_fb)
+            new_efb = jax.tree.map(lambda g, d: g - d, grads_fb, deq)
+            grads = deq
+            state = dict(state, efb=new_efb)
+
+        new_params, new_opt, omet = opt.update(
+            grads, state["opt"], state["params"], train_cfg.adamw)
+        metrics.update(omet)
+        metrics["loss"] = loss
+        new_state = dict(state, params=new_params, opt=new_opt,
+                         step=state["step"] + 1)
+        return new_state, metrics
+
+    return step
+
+
+def jit_train_step(
+    model_cfg: ModelConfig,
+    train_cfg: TrainConfig,
+    mesh: Mesh,
+    state_shapes,
+    *,
+    global_batch: int,
+    donate: bool = True,
+):
+    """jit with in/out shardings derived from the sharding rules."""
+    step = make_train_step(model_cfg, train_cfg, mesh, global_batch)
+    p_shard = shd.param_sharding(state_shapes["params"], mesh, model_cfg)
+    o_shard = shd.param_sharding(state_shapes["opt"], mesh, model_cfg)
+    repl = shd.replicated(mesh)
+    state_shardings = {
+        "params": p_shard,
+        "opt": o_shard,
+        "efb": None,
+        "step": repl,
+    }
+    batch_shardings = jax.tree.map(
+        lambda x: shd.batch_sharding(mesh, x.ndim), state_shapes["batch"])
+    tbl_shardings = jax.tree.map(lambda _: repl, state_shapes["tables"]) \
+        if state_shapes.get("tables") is not None else None
+    return jax.jit(
+        step,
+        in_shardings=(state_shardings, batch_shardings, tbl_shardings),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,) if donate else (),
+    )

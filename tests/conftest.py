@@ -1,0 +1,11 @@
+import os
+
+# Tests and benches must see the real device topology (1 CPU device), never
+# the dry-run's 512 placeholder devices. Multi-device tests spawn their own
+# subprocess with XLA_FLAGS (tests/test_distributed.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import calendar as C
+
+
+class TestQuotas:
+    def test_uniform(self):
+        q = C.quotas_from_weights(np.ones(8))
+        assert q.sum() == 512 and (q == 64).all()
+
+    def test_weighted_2x(self):
+        # paper fig 7c: CN-5 gets double weight
+        w = np.ones(10); w[5] = 2.0
+        q = C.quotas_from_weights(w)
+        assert q.sum() == 512
+        assert abs(q[5] / q[0] - 2.0) < 0.1
+
+    def test_zero_weight_gets_no_slots(self):
+        q = C.quotas_from_weights(np.array([1.0, 0.0, 1.0]))
+        assert q[1] == 0 and q.sum() == 512
+
+    def test_active_member_always_reachable(self):
+        w = np.ones(100); w[0] = 1e-6
+        q = C.quotas_from_weights(w)
+        assert q[0] >= 1
+
+    @given(st.lists(st.floats(0.01, 100.0), min_size=1, max_size=64))
+    def test_proportionality(self, ws):
+        w = np.asarray(ws)
+        q = C.quotas_from_weights(w)
+        assert q.sum() == 512
+        ideal = w / w.sum() * 512
+        assert (np.abs(q - ideal) <= np.maximum(1, 0.02 * 512)).all()
+
+
+class TestCalendar:
+    def test_all_slots_filled(self):
+        cal = C.build_calendar(np.arange(7), np.ones(7))
+        assert cal.shape == (512,)
+        assert set(np.unique(cal)) == set(range(7))
+
+    def test_exact_counts(self):
+        w = np.array([3.0, 1.0])
+        cal = C.build_calendar(np.array([10, 20]), w)
+        counts = np.bincount(cal, minlength=21)
+        assert counts[10] == 384 and counts[20] == 128
+
+    def test_interleaving(self):
+        # smooth WRR: a member with half the slots should never occupy a
+        # long consecutive run
+        cal = C.build_calendar(np.array([0, 1]), np.array([1.0, 1.0]))
+        assert C.max_run_length(cal, 0) <= 2
+        cal = C.build_calendar(np.arange(4), np.ones(4))
+        for m in range(4):
+            assert C.max_run_length(cal, m) <= 2
+
+    def test_rejects_no_members(self):
+        with pytest.raises(ValueError):
+            C.quotas_from_weights(np.zeros(4))

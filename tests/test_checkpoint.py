@@ -1,0 +1,58 @@
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                   "stack": jnp.asarray(rng.normal(size=(3, 5)), jnp.bfloat16)},
+        "opt": {"count": jnp.asarray(7, jnp.int32)},
+    }
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        t = _tree()
+        ckpt.save(str(tmp_path), 3, t)
+        like = jax.tree.map(jnp.zeros_like, t)
+        restored, step = ckpt.restore(str(tmp_path), like)
+        assert step == 3
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_latest_step(self, tmp_path):
+        for s in (1, 5, 12):
+            ckpt.save(str(tmp_path), s, _tree(s))
+        assert ckpt.latest_step(str(tmp_path)) == 12
+
+    def test_atomicity_tmp_dirs_ignored(self, tmp_path):
+        ckpt.save(str(tmp_path), 2, _tree())
+        os.makedirs(tmp_path / "step_00000009.tmp")  # torn save
+        assert ckpt.latest_step(str(tmp_path)) == 2
+
+    def test_missing_leaf_raises(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            ckpt.restore(str(tmp_path), {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+    def test_async_saver(self, tmp_path):
+        s = ckpt.AsyncSaver()
+        s.save(str(tmp_path), 4, _tree())
+        s.wait()
+        restored, step = ckpt.restore(str(tmp_path), _tree())
+        assert step == 4
+
+    def test_overwrite_same_step(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+        ckpt.save(str(tmp_path), 1, {"a": jnp.ones(3)})
+        restored, _ = ckpt.restore(str(tmp_path), {"a": jnp.zeros(3)})
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.ones(3))

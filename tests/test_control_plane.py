@@ -1,0 +1,97 @@
+"""Control plane: telemetry-driven weighting, stragglers, failures, elastic."""
+import numpy as np
+import pytest
+
+from repro.core import (ControlPolicy, EpochManager, LoadBalancerControlPlane,
+                        MemberSpec, MemberTelemetry, route, split64)
+from repro.core.calendar import calendar_counts
+from repro.telemetry.metrics import TelemetryHub
+
+
+def _cp(n=4):
+    cp = LoadBalancerControlPlane(EpochManager(max_members=64),
+                                  ControlPolicy(epoch_horizon=256))
+    cp.start({i: MemberSpec(node_id=i) for i in range(n)})
+    return cp
+
+
+class TestWeighting:
+    def test_straggler_sheds_slots(self):
+        cp = _cp(4)
+        ev = 0
+        for _ in range(6):
+            tele = {i: MemberTelemetry(fill=0.5) for i in range(4)}
+            tele[2] = MemberTelemetry(fill=0.95)  # member 2 overloaded
+            cp.update_weights(tele)
+            ev += 300
+            cp.schedule_epoch(ev)
+        eid = cp.manager.current_epoch
+        counts = calendar_counts(cp.manager.state.calendars[eid], 4)
+        assert counts[2] < counts[0] * 0.6
+        assert counts.sum() == 512  # never an empty slot
+
+    def test_fast_member_gains(self):
+        cp = _cp(3)
+        for step in range(5):
+            cp.update_weights({0: MemberTelemetry(fill=0.1),
+                               1: MemberTelemetry(fill=0.5),
+                               2: MemberTelemetry(fill=0.5)})
+            cp.schedule_epoch((step + 1) * 300)
+        eid = cp.manager.current_epoch
+        counts = calendar_counts(cp.manager.state.calendars[eid], 3)
+        assert counts[0] > counts[1]
+
+    def test_weight_floor_keeps_member_reachable(self):
+        cp = _cp(2)
+        for step in range(20):
+            cp.update_weights({0: MemberTelemetry(fill=1.0),
+                               1: MemberTelemetry(fill=0.0)})
+        assert cp.weights[0] >= cp.policy.min_weight
+
+
+class TestFailureAndElastic:
+    def test_failed_member_leaves_next_epoch(self):
+        cp = _cp(4)
+        cp.mark_failed([1])
+        cp.schedule_epoch(current_event=100, boundary=500)
+        em = cp.manager
+        evs = np.arange(500, 1500, dtype=np.uint64)
+        hi, lo = split64(evs)
+        r = route(em.device_tables(), hi, lo, np.zeros(len(evs), np.uint32))
+        assert 1 not in set(np.asarray(r.member).tolist())
+        # in-flight events (< 500) still route to the old set incl. member 1
+        hi0, lo0 = split64(np.arange(0, 500, dtype=np.uint64))
+        r0 = route(em.device_tables(), hi0, lo0, np.zeros(500, np.uint32))
+        assert 1 in set(np.asarray(r0.member).tolist())
+
+    def test_elastic_add(self):
+        cp = _cp(2)
+        cp.add_members({5: MemberSpec(node_id=5), 6: MemberSpec(node_id=6)})
+        cp.schedule_epoch(current_event=10, boundary=100)
+        evs = np.arange(100, 612, dtype=np.uint64)
+        hi, lo = split64(evs)
+        r = route(cp.manager.device_tables(), hi, lo,
+                  np.zeros(len(evs), np.uint32))
+        assert {5, 6} <= set(np.asarray(r.member).tolist())
+
+    def test_all_failed_raises(self):
+        cp = _cp(2)
+        cp.mark_failed([0, 1])
+        with pytest.raises(RuntimeError):
+            cp.schedule_epoch(100)
+
+
+class TestTelemetryHub:
+    def test_slow_member_reports_higher_fill(self):
+        hub = TelemetryHub()
+        for _ in range(10):
+            hub.report_step(0, 0.1)
+            hub.report_step(1, 0.4)  # 4x slower
+        snap = hub.snapshot()
+        assert snap[1].fill > snap[0].fill
+
+    def test_failure_propagates(self):
+        hub = TelemetryHub()
+        hub.report_step(0, 0.1)
+        hub.report_failure(0)
+        assert not hub.snapshot()[0].healthy

@@ -1,0 +1,132 @@
+"""Hit-less reconfiguration invariants — the paper's central claim (fig 7c,
+§III-C): epoch switches never split an event across members, never drop a
+packet, and late (reordered) packets from the old epoch still route by the
+old calendar."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EpochManager, MemberSpec, ReconfigurationError,
+                        TableError, route, split64)
+
+
+def _mk(n=4, max_members=64):
+    em = EpochManager(max_members=max_members)
+    members = {i: MemberSpec(node_id=i, lane_bits=1) for i in range(n)}
+    em.initialize(members, {i: 1.0 for i in range(n)})
+    return em
+
+
+def _route_members(em, events):
+    hi, lo = split64(np.asarray(events, np.uint64))
+    ent = np.zeros(len(events), np.uint32)
+    r = route(em.device_tables(), hi, lo, ent)
+    return np.asarray(r.member), np.asarray(r.valid)
+
+
+class TestInitialize:
+    def test_wildcard_covers_everything(self):
+        em = _mk()
+        m, v = _route_members(em, [0, 123, 2**40, 2**64 - 1])
+        assert v.all() and (m >= 0).all()
+
+    def test_build_backwards_order(self):
+        em = _mk()
+        kinds = [a[0] for a in em.audit]
+        assert kinds.index("member_insert") < kinds.index("calendar_insert") \
+            < kinds.index("epoch_connect")
+
+    def test_double_initialize_rejected(self):
+        em = _mk()
+        with pytest.raises(ReconfigurationError):
+            em.initialize({0: MemberSpec(node_id=0)}, {0: 1.0})
+
+
+class TestHitlessSwitch:
+    def test_boundary_exact(self):
+        em = _mk(4)
+        before, _ = _route_members(em, range(2000))
+        em.reconfigure({i: MemberSpec(node_id=i, lane_bits=1) for i in range(4, 10)},
+                       {i: 1.0 for i in range(4, 10)}, boundary_event=1000)
+        after, valid = _route_members(em, range(2000))
+        assert valid.all()
+        # pre-boundary: identical routing (old epoch pinned via LPM prefixes)
+        assert (after[:1000] == before[:1000]).all()
+        # post-boundary: only new members
+        assert set(after[1000:]) <= set(range(4, 10))
+
+    def test_event_atomicity_across_reorder(self):
+        """Packets of one event arriving before AND after the switch (network
+        reorder) must land on the same member."""
+        em = _mk(4)
+        ev = 900  # below the future boundary
+        m1, _ = _route_members(em, [ev])
+        em.reconfigure({i: MemberSpec(node_id=i) for i in range(2)},
+                       {i: 1.0 for i in range(2)}, boundary_event=1000)
+        m2, v2 = _route_members(em, [ev])  # late packet, same event
+        assert v2.all() and m2[0] == m1[0]
+
+    def test_reachable_epoch_immutable(self):
+        em = _mk(2)
+        with pytest.raises(TableError):
+            em.state.insert_calendar(0, np.zeros(512, np.int32))
+
+    def test_chained_epochs(self):
+        em = _mk(3)
+        em.reconfigure({i: MemberSpec(node_id=i) for i in range(3, 6)},
+                       {i: 1.0 for i in range(3, 6)}, boundary_event=1000)
+        em.reconfigure({i: MemberSpec(node_id=i) for i in range(6, 8)},
+                       {i: 1.0 for i in range(6, 8)}, boundary_event=2000)
+        m, v = _route_members(em, [500, 1500, 2500])
+        assert v.all()
+        assert m[0] in range(3) and m[1] in range(3, 6) and m[2] in range(6, 8)
+
+    @given(boundary=st.integers(1, 4000), probe=st.integers(0, 5000))
+    @settings(max_examples=30)
+    def test_boundary_property(self, boundary, probe):
+        em = _mk(4)
+        before, _ = _route_members(em, [probe])
+        em.reconfigure({i: MemberSpec(node_id=i) for i in range(4, 7)},
+                       {i: 1.0 for i in range(4, 7)}, boundary_event=boundary)
+        after, v = _route_members(em, [probe])
+        assert v.all()
+        if probe < boundary:
+            assert after[0] == before[0]
+        else:
+            assert after[0] in range(4, 7)
+
+
+class TestQuiesce:
+    def test_quiesce_preserves_active_epoch(self):
+        em = _mk(4)
+        em.reconfigure({i: MemberSpec(node_id=i) for i in range(4, 8)},
+                       {i: 1.0 for i in range(4, 8)}, boundary_event=1000)
+        post_before, _ = _route_members(em, range(1000, 1512))
+        em.quiesce(0)
+        post_after, v = _route_members(em, range(1000, 1512))
+        assert v.all() and (post_before == post_after).all()
+
+    def test_quiesce_frees_members_and_rows(self):
+        em = _mk(4)
+        em.reconfigure({i: MemberSpec(node_id=i) for i in range(4, 8)},
+                       {i: 1.0 for i in range(4, 8)}, boundary_event=1000)
+        em.quiesce(0)
+        assert set(em.state.members) == set(range(4, 8))
+        assert 0 not in em.state.calendars
+
+    def test_cannot_quiesce_active(self):
+        em = _mk(2)
+        with pytest.raises(ReconfigurationError):
+            em.quiesce(0)
+
+    def test_epoch_rows_recycle(self):
+        """Many reconfigurations must not exhaust device calendar rows."""
+        em = _mk(2)
+        for k in range(12):
+            b = 1000 * (k + 1)
+            em.reconfigure({i: MemberSpec(node_id=i) for i in range(2)},
+                           {i: 1.0 for i in range(2)}, boundary_event=b)
+            if k >= 1:
+                em.quiesce(em.records[k].epoch_id - 1)
+        m, v = _route_members(em, [13_000])
+        assert v.all()

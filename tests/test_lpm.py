@@ -1,0 +1,73 @@
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import lpm
+
+
+class TestRangeToPrefixes:
+    def test_full_space_is_wildcard(self):
+        ps = lpm.range_to_prefixes(0, lpm.EVENT_SPACE)
+        assert len(ps) == 1 and ps[0].length == 0
+
+    def test_single_value(self):
+        ps = lpm.range_to_prefixes(7, 8)
+        assert len(ps) == 1 and ps[0].length == 64 and ps[0].value == 7
+
+    @given(st.integers(0, 2**20), st.integers(0, 2**20))
+    def test_exact_cover_property(self, a, b):
+        lo, hi = sorted((a, b))
+        ps = lpm.range_to_prefixes(lo, hi)
+        # prefixes tile [lo, hi) exactly: disjoint, sorted, covering
+        ivs = sorted((p.lo, p.hi) for p in ps)
+        cur = lo
+        for s, e in ivs:
+            assert s == cur
+            cur = e
+        assert cur == hi
+        # minimality: adjacent prefixes are never two halves of one block
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            size1, size2 = e1 - s1, e2 - s2
+            if size1 == size2 and s1 % (2 * size1) == 0 and s2 == e1:
+                assert False, "non-minimal cover"
+
+    @given(st.integers(0, 2**18), st.integers(1, 2**18), st.integers(0, 2**19))
+    def test_membership(self, lo, span, probe):
+        hi = lo + span
+        ps = lpm.range_to_prefixes(lo, hi)
+        inside = any(p.matches(probe) for p in ps)
+        assert inside == (lo <= probe < hi)
+
+
+class TestLPMTable:
+    def test_longest_prefix_wins(self):
+        t = lpm.LPMTable()
+        t.set_wildcard("default")
+        t.insert_range(1000, 2000, "epoch1")
+        assert t.lookup(1500) == "epoch1"
+        assert t.lookup(999) == "default"
+        assert t.lookup(2000) == "default"
+
+    def test_boundaries_compile(self):
+        t = lpm.LPMTable()
+        t.set_wildcard("e2")
+        t.insert_range(100, 300, "e1")
+        segs = t.boundaries()
+        # [0,100)->e2, [100,300)->e1, [300,2^64)->e2
+        assert segs == [(0, "e2"), (100, "e1"), (300, "e2")]
+
+    @given(st.integers(0, 5000), st.integers(1, 5000), st.lists(st.integers(0, 10_000), max_size=20))
+    def test_boundaries_equiv_lookup(self, lo, span, probes):
+        t = lpm.LPMTable()
+        t.set_wildcard("new")
+        t.insert_range(lo, lo + span, "old")
+        segs = t.boundaries()
+
+        def by_segments(key):
+            data = None
+            for s, d in segs:
+                if key >= s:
+                    data = d
+            return data
+
+        for p in probes + [lo, lo + span - 1, lo + span]:
+            assert by_segments(p) == t.lookup(p)

@@ -1,0 +1,85 @@
+import pytest
+
+from repro.analysis import perfmodel as PM
+from repro.analysis.hlo import collective_stats
+from repro.configs import get_config
+from repro.launch import shapes as SH
+
+
+class TestPerfModel:
+    def test_param_counts_plausible(self):
+        # name encodes rough scale; estimator must land in the right decade
+        expect = {"arctic-480b": 480e9, "mixtral-8x22b": 141e9,
+                  "granite-20b": 20e9, "yi-6b": 6e9, "stablelm-3b": 3e9,
+                  "zamba2-2.7b": 2.7e9, "rwkv6-7b": 7e9}
+        for arch, n in expect.items():
+            total, active = get_config(arch).param_count()
+            assert 0.4 * n < total < 2.6 * n, (arch, total)
+            assert active <= total
+
+    def test_moe_active_below_total(self):
+        cfg = get_config("arctic-480b")
+        total, active = cfg.param_count()
+        assert active < 0.1 * total  # 2/128 experts + dense
+
+    def test_train_flops_dominate_prefill(self):
+        cfg = get_config("yi-6b")
+        tr = PM.estimate(cfg, "train_4k", 256, 16, 16)
+        pf = PM.estimate(cfg, "prefill_32k", 256, 16, 16)
+        assert tr.flops > pf.flops
+
+    def test_decode_memory_bound(self):
+        cfg = get_config("yi-6b")
+        d = PM.estimate(cfg, "decode_32k", 256, 16, 16)
+        # bytes/flops ratio should be far above the v5e ridge (~240 flops/byte)
+        assert d.flops / d.bytes_hbm < 240
+
+    def test_swa_caps_mixer_flops(self):
+        mix = get_config("mixtral-8x22b")
+        full = mix.with_(swa_window=None)
+        a = PM._mixer_flops_per_token(mix, 32_768)
+        b = PM._mixer_flops_per_token(full, 32_768)
+        assert a < b
+
+
+class TestHLOParsing:
+    def test_trip_count_multiplier(self):
+        text = """
+HloModule test, is_scheduled=true
+
+%body.1 (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ar = f32[128]{0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add.1
+}
+
+ENTRY %main (p0: f32[128]) -> f32[128] {
+  %w = (s32[], f32[128]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"8"}}
+  %ag = f32[256]{0} all-gather(%y), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+}
+"""
+        s = collective_stats(text)
+        assert s.ops["all-reduce"] == 1
+        assert s.dynamic_ops["all-reduce"] == 8.0
+        # AR: 2 * 512B * 8 trips * 15/16 ; AG: 1024B * 15/16
+        assert s.wire_bytes["all-reduce"] == pytest.approx(2 * 512 * 8 * 15 / 16)
+        assert s.wire_bytes["all-gather"] == pytest.approx(1024 * 15 / 16)
+
+    def test_group_size_parsing(self):
+        text = """
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %a = f32[4]{0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+}
+"""
+        s = collective_stats(text)
+        assert s.wire_bytes["all-reduce"] == pytest.approx(2 * 16 * 3 / 4)
+
+    def test_done_ops_not_double_counted(self):
+        text = """
+ENTRY %main (p: f32[4]) -> f32[4] {
+  %s = (f32[128]{0}, f32[128]{0}) all-gather-start(%x), channel_id=1, replica_groups=[2,8]<=[16], dimensions={0}
+  %d = f32[128]{0} all-gather-done(%s)
+}
+"""
+        s = collective_stats(text)
+        assert s.ops["all-gather"] == 1
+        # tuple halved: (128+128)*4/2 = 512B payload
+        assert s.payload_bytes["all-gather"] == pytest.approx(512)

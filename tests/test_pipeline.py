@@ -1,0 +1,93 @@
+"""End-to-end pipeline: the fig-7 system test at unit scale.
+
+5 DAQs -> segmentation -> WAN (reorder) -> LB -> 10 CNs with RSS lanes ->
+reassembly. Asserts the paper's measured properties: event atomicity, zero
+loss accounting, weighted fairness, epoch-switch coherence."""
+import numpy as np
+import pytest
+
+from repro.core import EpochManager, MemberSpec
+from repro.data.daq import DAQConfig
+from repro.data.pipeline import StreamingPipeline, batches_from_bundles
+from repro.data.transport import TransportConfig
+
+
+def _pipeline(n_members=10, weights=None, reorder=32, loss=0.0, seed=0):
+    em = EpochManager(max_members=64)
+    weights = weights or {i: 1.0 for i in range(n_members)}
+    em.initialize({i: MemberSpec(node_id=i, lane_bits=2) for i in weights}, weights)
+    p = StreamingPipeline(
+        DAQConfig(n_daqs=5, seq_len=64, mean_bundle_bytes=20_000, seed=seed),
+        TransportConfig(reorder_window=reorder, loss_prob=loss, seed=seed),
+        em,
+    )
+    return p, em
+
+
+class TestEndToEnd:
+    def test_event_atomicity(self):
+        """fig 7b/c: all packets of an event land on ONE member, despite
+        multi-DAQ sourcing and WAN reordering."""
+        p, _ = _pipeline()
+        p.pump(40)
+        emap = p.event_member_map()
+        assert emap and all(len(ms) == 1 for ms in emap.values())
+
+    def test_zero_loss_accounting(self):
+        p, _ = _pipeline(loss=0.0)
+        done = p.pump(30)
+        assert p.stats.n_discarded == 0
+        assert p.stats.n_routed == p.stats.n_packets
+        # every bundle completes: 30 triggers x 5 DAQs
+        assert len(done) == 150
+
+    def test_lane_affinity(self):
+        """Same (event, entropy) => same lane; lanes spread across 2^bits."""
+        p, _ = _pipeline()
+        p.pump(40)
+        lanes_used = {l for (_m, l) in p.stats.per_lane}
+        assert len(lanes_used) > 1
+        by_ev = {}
+        for ev, m, l in p.routed_log:
+            by_ev.setdefault(ev, set()).add((m, l))
+        assert all(len(s) == 1 for s in by_ev.values())
+
+    def test_weighted_fairness(self):
+        """fig 7c final epoch: CN-5 at 2x weight receives ~2x the packets."""
+        w = {i: 1.0 for i in range(10)}; w[5] = 2.0
+        p, _ = _pipeline(weights=w, seed=3)
+        p.pump(160)
+        per = p.stats.per_member
+        others = np.mean([per[i] for i in per if i != 5])
+        assert per[5] / others == pytest.approx(2.0, rel=0.30)
+
+    def test_epoch_switch_mid_stream(self):
+        """fig 7c: 3 epochs live-switched; no event split, no discard."""
+        p, em = _pipeline(n_members=1)
+        p.pump(20)
+        b1 = p.fleet.event_number + 50
+        em.reconfigure({i: MemberSpec(node_id=i, lane_bits=2) for i in (4, 5, 6)},
+                       {i: 1.0 for i in (4, 5, 6)}, boundary_event=b1)
+        p.pump(40)
+        b2 = p.fleet.event_number + 50
+        em.reconfigure({i: MemberSpec(node_id=i, lane_bits=2) for i in range(10)},
+                       {i: (2.0 if i == 5 else 1.0) for i in range(10)},
+                       boundary_event=b2)
+        p.pump(60)
+        assert p.stats.n_discarded == 0
+        emap = p.event_member_map()
+        assert all(len(ms) == 1 for ms in emap.values())
+        for ev, ms in emap.items():
+            m = next(iter(ms))
+            if ev < b1:
+                assert m == 0
+            elif ev < b2:
+                assert m in (4, 5, 6)
+            else:
+                assert m in range(10)
+
+    def test_bundles_decode_to_batches(self):
+        p, _ = _pipeline()
+        done = p.pump(40)
+        batches = batches_from_bundles(done, seq_len=64, batch_size=8)
+        assert batches and all(b.shape == (8, 64) for b in batches)

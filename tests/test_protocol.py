@@ -1,0 +1,47 @@
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import protocol as P
+
+
+class TestHeaderCodec:
+    def test_magic_is_lb_port(self):
+        # 'L'<<8|'B' == 0x4C42 == 19522 — the LB UDP service port.
+        assert P.MAGIC == 0x4C42 == P.LB_SERVICE_PORT
+        assert P.MAGIC.to_bytes(2, "big") == b"LB"
+
+    def test_roundtrip_simple(self):
+        ev = np.array([0, 1, 2**32 - 1, 2**32, 2**64 - 1], np.uint64)
+        en = np.array([0, 1, 65535, 7, 42], np.uint32)
+        words = P.encode_headers(ev, en)
+        f = P.decode_fields(words)
+        assert (np.asarray(f["entropy"]) == en).all()
+        assert (P.join64(np.asarray(f["event_hi"]), np.asarray(f["event_lo"])) == ev).all()
+        assert np.asarray(P.validate(words)).all()
+
+    @given(
+        ev=st.integers(min_value=0, max_value=2**64 - 1),
+        en=st.integers(min_value=0, max_value=2**16 - 1),
+    )
+    def test_roundtrip_property(self, ev, en):
+        h = P.LBHeader(event_number=ev, entropy=en)
+        w = h.words()
+        f = P.decode_fields(w[None])
+        assert int(np.asarray(f["entropy"])[0]) == en
+        assert int(P.join64(np.asarray(f["event_hi"]), np.asarray(f["event_lo"]))[0]) == ev
+        assert int(np.asarray(f["magic"])[0]) == P.MAGIC
+
+    def test_bad_magic_and_version_rejected(self):
+        words = P.encode_headers(np.array([5], np.uint64), np.array([1], np.uint32))
+        bad_magic = words.copy(); bad_magic[0, 0] ^= 0x00010000
+        bad_ver = words.copy(); bad_ver[0, 0] ^= 0x00000100
+        assert not np.asarray(P.validate(bad_magic))[0]
+        assert not np.asarray(P.validate(bad_ver))[0]
+
+    def test_slot_is_9_lsbs(self):
+        lo = np.arange(2048, dtype=np.uint32)
+        assert (np.asarray(P.event_slot(lo)) == lo % 512).all()
+
+    def test_segment_payload_fits_9kb(self):
+        assert P.MAX_SEGMENT_PAYLOAD + P.HEADER_BYTES + 28 <= 9000

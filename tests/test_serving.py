@@ -1,0 +1,48 @@
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serve.engine import ServeConfig, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_smoke_config("yi_6b")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return ServingEngine(cfg, ServeConfig(n_replicas=2, lane_bits=1,
+                                          max_len=64), params)
+
+
+class TestServing:
+    def test_requests_complete(self, engine):
+        rng = np.random.default_rng(0)
+        reqs = [engine.submit(rng.integers(0, 256, int(rng.integers(4, 10))),
+                              max_new_tokens=6) for _ in range(9)]
+        engine.run_until_done(300)
+        assert all(r.done for r in reqs)
+        assert all(len(r.output) == 6 for r in reqs)
+
+    def test_front_door_routes_by_calendar(self, engine):
+        """Requests spread across replicas via the LB (not round-robin code)."""
+        assert len(engine.stats["routed"]) == 2
+
+    def test_greedy_determinism(self, engine):
+        a = engine.submit(np.arange(5), max_new_tokens=5)
+        engine.run_until_done(100)
+        b = engine.submit(np.arange(5), max_new_tokens=5)
+        engine.run_until_done(100)
+        assert a.output == b.output
+
+    def test_lane_isolation(self, engine):
+        """Two concurrent requests in different lanes don't corrupt each
+        other: outputs equal the solo runs."""
+        p1, p2 = np.arange(6), np.arange(6)[::-1].copy()
+        solo1 = engine.submit(p1, max_new_tokens=5); engine.run_until_done(100)
+        solo2 = engine.submit(p2, max_new_tokens=5); engine.run_until_done(100)
+        r1 = engine.submit(p1, max_new_tokens=5)
+        r2 = engine.submit(p2, max_new_tokens=5)
+        engine.run_until_done(200)
+        assert r1.output == solo1.output
+        assert r2.output == solo2.output

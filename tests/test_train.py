@@ -1,0 +1,175 @@
+"""Trainer: loss goes down, checkpoint/restart bit-exact resume, failure
+handling recalendars, 8-bit Adam + grad compression behave."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.calendar import calendar_counts
+from repro.distributed import compression as GC
+from repro.train import optimizer as OPT
+from repro.train import train_step as TS
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _trainer(tmp, model="stablelm_3b", **tkw):
+    cfg = get_smoke_config(model)
+    tcfg = TS.TrainConfig(
+        adamw=OPT.AdamWConfig(lr=1e-2, warmup_steps=2, decay_steps=100, **tkw),
+        remat=False, lb_ingest=False, q_chunk=8, k_chunk=8)
+    tr = Trainer(cfg, tcfg, TrainerConfig(
+        n_members=4, ckpt_dir=str(tmp), ckpt_every=5, recalendar_every=4))
+    return tr
+
+
+class TestTraining:
+    def test_loss_decreases(self, tmp_path):
+        tr = _trainer(tmp_path / "a")
+        tr.init_or_restore(jax.random.PRNGKey(0))
+        hist = tr.run(12, batch=4, seq=16)
+        first = np.mean([h["loss"] for h in hist[:3]])
+        last = np.mean([h["loss"] for h in hist[-3:]])
+        assert last < first  # memorizes synthetic tokens
+
+    def test_checkpoint_resume_exact(self, tmp_path):
+        d = tmp_path / "b"
+        tr1 = _trainer(d)
+        tr1.init_or_restore(jax.random.PRNGKey(0))
+        tr1.run(10, batch=4, seq=16)  # ckpt at step 5, 10
+        params_ref = jax.tree.map(np.asarray, tr1.state["params"])
+        # simulated crash: new trainer restores from latest ckpt
+        tr2 = _trainer(d)
+        step = tr2.init_or_restore(jax.random.PRNGKey(1))  # different rng!
+        assert step == 10
+        for a, b in zip(jax.tree.leaves(params_ref),
+                        jax.tree.leaves(tr2.state["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_failure_triggers_recalendar(self, tmp_path):
+        tr = _trainer(tmp_path / "c")
+        tr.init_or_restore(jax.random.PRNGKey(0))
+        tr.run(6, batch=4, seq=16, failure_at={2: [3]})
+        em = tr.manager
+        cal = em.state.calendars[em.current_epoch]
+        assert 3 not in set(np.unique(cal))
+        assert calendar_counts(cal, 4).sum() == 512
+
+    def test_straggler_mitigation_end_to_end(self, tmp_path):
+        """Member 2 reports 3x step time -> its calendar share shrinks."""
+        tr = _trainer(tmp_path / "d")
+        tr.init_or_restore(jax.random.PRNGKey(0))
+        import time
+
+        orig_report = tr.hub.report_step
+        def biased(member_id, dt, **kw):
+            orig_report(member_id, dt * (3.0 if member_id == 2 else 1.0), **kw)
+        tr.hub.report_step = biased
+        tr.run(12, batch=4, seq=16)
+        cal = tr.manager.state.calendars[tr.manager.current_epoch]
+        counts = calendar_counts(cal, 4)
+        assert counts[2] < counts[0]
+
+
+class TestOptimizer:
+    def _quad_losses(self, eight_bit):
+        cfg = OPT.AdamWConfig(lr=0.1, weight_decay=0.0, eight_bit=eight_bit,
+                              warmup_steps=1, decay_steps=1000)
+        params = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                                   jnp.float32)}
+        target = jnp.ones((8, 8))
+        state = OPT.init(params, cfg)
+        losses = []
+        for _ in range(40):
+            loss, g = jax.value_and_grad(
+                lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+            params, state, _ = OPT.update(g, state, params, cfg)
+            losses.append(float(loss))
+        return losses
+
+    def test_adamw_converges(self):
+        losses = self._quad_losses(eight_bit=False)
+        assert losses[-1] < 0.05 * losses[0]
+
+    def test_8bit_adam_converges(self):
+        losses = self._quad_losses(eight_bit=True)
+        assert losses[-1] < 0.1 * losses[0]
+
+    def test_8bit_state_is_int8(self):
+        cfg = OPT.AdamWConfig(eight_bit=True)
+        params = {"w": jnp.zeros((300,), jnp.float32)}
+        st = OPT.init(params, cfg)
+        assert st["mu"]["w"]["m"]["q"].dtype == jnp.int8
+
+    def test_grad_clip(self):
+        cfg = OPT.AdamWConfig(lr=1e-3, grad_clip=1.0)
+        params = {"w": jnp.zeros((4,), jnp.float32)}
+        st = OPT.init(params, cfg)
+        g = {"w": jnp.full((4,), 1e6, jnp.float32)}
+        new_p, _, met = OPT.update(g, st, params, cfg)
+        assert float(met["grad_norm"]) > 1e5
+        assert float(jnp.max(jnp.abs(new_p["w"]))) < 1.0
+
+
+class TestGradCompression:
+    def test_roundtrip_error_small(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+        y = GC.compress_decompress(x)
+        rel = float(jnp.linalg.norm(x - y) / jnp.linalg.norm(x))
+        assert rel < 0.02  # int8 block quantization ~0.5% rms
+
+    def test_error_feedback_accumulates(self):
+        """With error feedback the quantization bias stays bounded: the sum
+        of compressed grads tracks the sum of true grads."""
+        rng = np.random.default_rng(1)
+        true_sum = jnp.zeros(256)
+        sent_sum = jnp.zeros(256)
+        efb = jnp.zeros(256)
+        for _ in range(50):
+            g = jnp.asarray(rng.normal(size=(256,)), jnp.float32) * 0.01
+            true_sum = true_sum + g
+            sent = GC.compress_decompress(g + efb)
+            efb = (g + efb) - sent
+            sent_sum = sent_sum + sent
+        rel = float(jnp.linalg.norm(true_sum - sent_sum) /
+                    jnp.linalg.norm(true_sum))
+        assert rel < 0.05
+
+    def test_train_step_with_compression_runs(self, tmp_path):
+        cfg = get_smoke_config("yi_6b")
+        tcfg = TS.TrainConfig(adamw=OPT.AdamWConfig(lr=1e-3), remat=False,
+                              lb_ingest=False, grad_compress=True,
+                              q_chunk=8, k_chunk=8)
+        state = TS.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+        step = TS.make_train_step(cfg, tcfg)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+        state, m1 = step(state, batch, None)
+        state, m2 = step(state, batch, None)
+        assert np.isfinite(m1["loss"]) and np.isfinite(m2["loss"])
+        assert state["efb"] is not None
+
+    def test_accum_steps_match_full_batch(self):
+        cfg = get_smoke_config("yi_6b")
+        base = TS.TrainConfig(adamw=OPT.AdamWConfig(lr=1e-3), remat=False,
+                              lb_ingest=False, q_chunk=8, k_chunk=8)
+        acc = TS.TrainConfig(adamw=OPT.AdamWConfig(lr=1e-3), remat=False,
+                             lb_ingest=False, accum_steps=2, q_chunk=8,
+                             k_chunk=8)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, cfg.vocab, (4, 16)).astype(np.int32)
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(toks)}
+        s0 = TS.init_train_state(jax.random.PRNGKey(0), cfg, base)
+        s1 = TS.init_train_state(jax.random.PRNGKey(0), cfg, acc)
+        s0b, m0 = TS.make_train_step(cfg, base)(s0, batch, None)
+        s1b, m1 = TS.make_train_step(cfg, acc)(s1, batch, None)
+        # same data => nearly identical update (fp reassociation tolerance)
+        for a, b in zip(jax.tree.leaves(s0b["params"]),
+                        jax.tree.leaves(s1b["params"])):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-3, atol=2e-5)
