@@ -1,6 +1,13 @@
-"""Table: dispatch-plan throughput (the TPU-side hot path: cumsum-of-one-hot
-positions + scatter), jnp/XLA vs Pallas interpret — this is the ingest path
-of every training step and the MoE dispatch."""
+"""Table: dispatch-plan throughput (the TPU-side hot path: per-packet buffer
+positions + scatter) — this is the ingest path of every training step and
+the MoE dispatch.
+
+Compares the data plane's sort-based pack (argsort by member +
+segment-offset subtraction, O(N log N)) against the historical
+one-hot-cumsum baseline (O(N*M)) at N=8192 packets, M=64 members, plus the
+Pallas plan kernel (interpret mode = CPU functional model). Acceptance bar:
+sort-based >= 2x the one-hot baseline on CPU (DESIGN.md §Perf).
+"""
 from __future__ import annotations
 
 import jax
@@ -8,33 +15,63 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.kernels import ops, ref
+from repro.core.dataplane import DataPlane
+
+N, M, CAP = 8192, 64, 512
+
+
+def _onehot_baseline(member, n_members: int):
+    """The pre-refactor cumsum-of-one-hot plan (kept here as the baseline)."""
+    onehot = jax.nn.one_hot(member, n_members, dtype=jnp.int32)  # [N, M]
+    pos_in_member = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.sum(pos_in_member * onehot, axis=-1)
+    counts = jnp.sum(onehot, axis=0)
+    pos = jnp.where(member >= 0, pos, -1)
+    return pos, counts
 
 
 def run():
     rng = np.random.default_rng(0)
-    n, m, cap = 8192, 32, 512
-    member = jnp.asarray(rng.integers(0, m, n).astype(np.int32))
-    payload = jnp.asarray(rng.normal(size=(n, 64)).astype(np.float32))
+    member = jnp.asarray(rng.integers(0, M, N).astype(np.int32))
+    payload = jnp.asarray(rng.normal(size=(N, 64)).astype(np.float32))
 
-    plan_ref = jax.jit(lambda mm: ref.dispatch_plan_ref(mm, n_members=m))
-    jax.block_until_ready(plan_ref(member))
-    us = timeit(lambda: jax.block_until_ready(plan_ref(member)))
-    row("dispatch_plan_jnp_xla", us, f"{n/(us/1e6)/1e6:.2f} M-events/s")
+    baseline = jax.jit(lambda mm: _onehot_baseline(mm, M))
+    jax.block_until_ready(baseline(member))
+    us_base = timeit(lambda: jax.block_until_ready(baseline(member)))
+    row("dispatch_plan_onehot_baseline", us_base,
+        f"{N/(us_base/1e6)/1e6:.2f} M-events/s (O(N*M) cumsum-of-one-hot)")
 
-    combine = jax.jit(lambda p, mm, pos: ops.combine_payloads(
-        p, mm, pos, n_members=m, capacity=cap))
-    pos, _ = plan_ref(member)
+    from repro.kernels import ref
+
+    plan_sort = jax.jit(lambda mm: ref.dispatch_plan_ref(mm, n_members=M))
+    jax.block_until_ready(plan_sort(member))
+    us_sort = timeit(lambda: jax.block_until_ready(plan_sort(member)))
+    speedup = us_base / max(us_sort, 1e-9)
+    row("dispatch_plan_sort_jnp_xla", us_sort,
+        f"{N/(us_sort/1e6)/1e6:.2f} M-events/s = {speedup:.2f}x one-hot baseline "
+        f"(want >= 2x)")
+
+    from repro.core.dataplane import combine_payloads
+
+    combine = jax.jit(lambda p, mm, pos: combine_payloads(
+        p, mm, pos, n_members=M, capacity=CAP))
+    pos, _ = plan_sort(member)
     jax.block_until_ready(combine(payload, member, pos))
     us2 = timeit(lambda: jax.block_until_ready(combine(payload, member, pos)))
     gb = payload.size * 4 / 1e9
     row("dispatch_combine_scatter", us2,
         f"{gb/(us2/1e6):.2f} GB/s payload scatter")
 
-    us3 = timeit(lambda: jax.block_until_ready(
-        ops.plan_dispatch(member, m, use_pallas=True, interpret=True)), iters=3)
+    from repro.core import EpochManager, MemberSpec
+
+    em = EpochManager(max_members=M)
+    em.initialize({i: MemberSpec(node_id=i) for i in range(M)},
+                  {i: 1.0 for i in range(M)})
+    dpp = DataPlane.from_manager(em, backend="pallas", interpret=True)
+    us3 = timeit(lambda: jax.block_until_ready(dpp.plan(member, M)), iters=3)
     row("dispatch_plan_pallas_interpret", us3,
-        f"{n/(us3/1e6)/1e6:.3f} M-events/s (functional model)")
+        f"{N/(us3/1e6)/1e6:.3f} M-events/s (functional model)")
+    return speedup
 
 
 if __name__ == "__main__":

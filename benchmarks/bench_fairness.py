@@ -6,7 +6,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.core import EpochManager, MemberSpec, route, split64
+from repro.core import DataPlane, EpochManager, MemberSpec, encode_headers
 from repro.core.calendar import calendar_counts
 
 
@@ -15,17 +15,19 @@ def run():
     em = EpochManager(max_members=64)
     em.initialize({i: MemberSpec(node_id=i, lane_bits=2) for i in weights},
                   weights)
-    t = em.device_tables()
+    dp = DataPlane.from_manager(em, backend="jnp")
     n = 200_000
     rng = np.random.default_rng(0)
     ev = rng.integers(0, 1 << 40, n).astype(np.uint64)
-    hi, lo = split64(ev)
     ent = rng.integers(0, 1 << 16, n).astype(np.uint32)
 
     import jax
-    fn = jax.jit(lambda h, l, e: route(t, h, l, e).member)
-    member = np.asarray(fn(hi, lo, ent))
-    us = timeit(lambda: jax.block_until_ready(fn(hi, lo, ent)))
+    import jax.numpy as jnp
+
+    headers = jnp.asarray(encode_headers(ev, ent))
+    fn = jax.jit(lambda h: dp.route(h).member)
+    member = np.asarray(fn(headers))
+    us = timeit(lambda: jax.block_until_ready(fn(headers)))
 
     counts = np.bincount(member, minlength=10).astype(np.float64)
     share = counts / counts.sum()

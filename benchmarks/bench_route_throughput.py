@@ -1,7 +1,9 @@
 """Paper fig. 5/7: LB data-plane line rate (98 Gbps at 9KB packets on the
-U280). Here: routed packets/s through the jnp data plane and the Pallas
-kernel (interpret mode — CPU functional model; the TPU-projected figure uses
-the kernel's VMEM-resident table reads, see EXPERIMENTS.md)."""
+U280). Here: routed packets/s through the unified DataPlane facade —
+backend="jnp" (XLA-jitted reference) and backend="pallas" (interpret mode —
+CPU functional model; the TPU-projected figure uses the kernel's
+VMEM-resident table reads, see EXPERIMENTS.md). Also measures the fused
+multi-instance path (4 virtual LBs, one gather pass)."""
 from __future__ import annotations
 
 import jax
@@ -9,8 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import row, timeit
-from repro.core import EpochManager, MemberSpec, encode_headers
-from repro.kernels import ops, ref
+from repro.core import DataPlane, EpochManager, MemberSpec, encode_headers
+from repro.core.instance import VirtualLoadBalancer
 
 N_PACKETS = 16_384
 PACKET_BYTES = 9000
@@ -20,31 +22,44 @@ def _setup():
     em = EpochManager(max_members=64)
     em.initialize({i: MemberSpec(node_id=i, lane_bits=2) for i in range(10)},
                   {i: 1.0 for i in range(10)})
-    t = em.device_tables()
     rng = np.random.default_rng(0)
     ev = rng.integers(0, 1 << 48, N_PACKETS).astype(np.uint64)
     en = rng.integers(0, 1 << 16, N_PACKETS).astype(np.uint32)
-    return t, jnp.asarray(encode_headers(ev, en))
+    return em, jnp.asarray(encode_headers(ev, en))
 
 
 def run():
-    tables, headers = _setup()
-    tt = ref.tables_tuple(tables)
+    em, headers = _setup()
 
-    jit_ref = jax.jit(lambda h: ref.lb_route_ref(h, tt))
-    out = jit_ref(headers)
-    jax.block_until_ready(out)
-    us = timeit(lambda: jax.block_until_ready(jit_ref(headers)))
+    dp = DataPlane.from_manager(em, backend="jnp")
+    jit_route = jax.jit(lambda h: dp.route(h).member)
+    jax.block_until_ready(jit_route(headers))
+    us = timeit(lambda: jax.block_until_ready(jit_route(headers)))
     pps = N_PACKETS / (us / 1e6)
     gbps = pps * PACKET_BYTES * 8 / 1e9
     row("route_throughput_jnp_xla", us,
         f"{pps/1e6:.2f} Mpps = {gbps:.1f} Gbps at 9KB (paper: 98 Gbps line rate)")
 
-    out = ops.route_packets(headers, tables, use_pallas=True, interpret=True)
-    jax.block_until_ready(out)
-    us2 = timeit(lambda: jax.block_until_ready(
-        ops.route_packets(headers, tables, use_pallas=True, interpret=True)),
-        iters=3)
+    vlb = VirtualLoadBalancer(max_members=64)
+    for k in range(4):
+        vlb.instances[k].initialize(
+            {i: MemberSpec(node_id=i, lane_bits=2) for i in range(10)},
+            {i: 1.0 for i in range(10)})
+    dpm = DataPlane(vlb.device_tables(), backend="jnp")
+    iid = jnp.asarray(np.random.default_rng(1).integers(0, 4, N_PACKETS),
+                      jnp.int32)
+    jit_mi = jax.jit(lambda h, i: dpm.route(h, i).member)
+    jax.block_until_ready(jit_mi(headers, iid))
+    us_mi = timeit(lambda: jax.block_until_ready(jit_mi(headers, iid)))
+    row("route_throughput_4instance_fused", us_mi,
+        f"{N_PACKETS/(us_mi/1e6)/1e6:.2f} Mpps across 4 virtual LBs "
+        f"(single fused gather pass)")
+
+    dpp = DataPlane.from_manager(em, backend="pallas", interpret=True)
+    out = dpp.route(headers)
+    jax.block_until_ready(out.member)
+    us2 = timeit(lambda: jax.block_until_ready(dpp.route(headers).member),
+                 iters=3)
     row("route_throughput_pallas_interpret", us2,
         f"{N_PACKETS/(us2/1e6)/1e6:.3f} Mpps (functional model on CPU)")
 

@@ -30,6 +30,8 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--backend", default="auto", choices=["auto", "jnp", "pallas"],
+                    help="data-plane backend (core.dataplane.DataPlane)")
     args = ap.parse_args()
 
     # --- the LB front end: 4 compute members, entropy over 4 lanes ---
@@ -38,7 +40,7 @@ def main():
                   {i: 1.0 for i in range(4)})
     pipe = StreamingPipeline(
         DAQConfig(n_daqs=5, seq_len=args.seq, mean_bundle_bytes=12_000, seed=0),
-        TransportConfig(reorder_window=32, seed=0), em)
+        TransportConfig(reorder_window=32, seed=0), em, backend=args.backend)
 
     # --- a ~10M-param LM (same block as the full configs) ---
     cfg = ModelConfig(name="quickstart-lm", family="dense", n_layers=4,

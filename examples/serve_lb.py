@@ -1,9 +1,12 @@
 """Serving through the LB front door: batched requests are events; the
 calendar picks the replica, the entropy field picks the decode lane (RSS).
-Mid-run, a replica is drained hit-lessly (weight -> 0 in the next epoch).
+Submissions accumulate and are routed lazily — one batched DataPlane device
+call per engine tick, not one per request. Mid-run, a replica is drained
+hit-lessly (weight -> 0 in the next epoch).
 
     PYTHONPATH=src python examples/serve_lb.py
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -17,17 +20,24 @@ from repro.serve.engine import ServeConfig, ServingEngine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "jnp", "pallas"],
+                    help="data-plane backend (core.dataplane.DataPlane)")
+    args = ap.parse_args()
     cfg = get_smoke_config("yi_6b")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     eng = ServingEngine(cfg, ServeConfig(n_replicas=3, lane_bits=1,
-                                         max_len=96), params)
+                                         max_len=96, backend=args.backend),
+                        params)
     rng = np.random.default_rng(0)
 
     print("phase 1: 12 requests across 3 replicas")
     reqs = [eng.submit(rng.integers(0, cfg.vocab, int(rng.integers(4, 12))),
                        max_new_tokens=8) for _ in range(12)]
     eng.run_until_done()
-    print("  routed per replica:", dict(sorted(eng.stats["routed"].items())))
+    print("  routed per replica:", dict(sorted(eng.stats["routed"].items())),
+          f"({eng.stats['route_calls']} batched route calls)")
     print("  completed:", eng.stats["completed"])
 
     print("\nphase 2: drain replica 1 (weight 0 in next epoch, hit-less)")

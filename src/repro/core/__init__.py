@@ -8,6 +8,7 @@ from repro.core.control_plane import (
 )
 from repro.core.epoch import EpochManager, ReconfigurationError
 from repro.core.instance import N_INSTANCES, VirtualLoadBalancer
+from repro.core.dataplane import DataPlane, combine_payloads, resolve_backend
 from repro.core.lpm import LPMTable, Prefix, range_to_prefixes
 from repro.core.protocol import (
     CALENDAR_SLOTS,
@@ -24,12 +25,13 @@ from repro.core.router import Route, dispatch, make_redistribute, member_positio
 from repro.core.tables import DeviceTables, MemberSpec, RouterState, TableError
 
 __all__ = [
-    "CALENDAR_SLOTS", "ControlPolicy", "DeviceTables", "EpochManager",
+    "CALENDAR_SLOTS", "ControlPolicy", "DataPlane", "DeviceTables", "EpochManager",
     "LBHeader", "LB_SERVICE_PORT", "LPMTable", "LoadBalancerControlPlane",
     "MAGIC", "MemberSpec", "MemberTelemetry", "N_INSTANCES", "Prefix",
     "ReconfigurationError", "Route", "RouterState", "TableError",
     "VirtualLoadBalancer", "build_calendar", "calendar_counts",
-    "decode_fields", "dispatch", "encode_headers", "join64",
-    "make_redistribute", "member_positions", "quotas_from_weights",
-    "range_to_prefixes", "route", "split64", "validate",
+    "combine_payloads", "decode_fields", "dispatch", "encode_headers",
+    "join64", "make_redistribute", "member_positions",
+    "quotas_from_weights", "range_to_prefixes", "resolve_backend", "route",
+    "split64", "validate",
 ]

@@ -15,12 +15,15 @@ for slow members).
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Optional
 
 import numpy as np
 
-from repro.core.epoch import EpochManager
-from repro.core.tables import MemberSpec
+from repro.core.epoch import EpochManager, ReconfigurationError
+from repro.core.tables import MemberSpec, TableError
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -51,6 +54,7 @@ class LoadBalancerControlPlane:
         self.weights: dict[int, float] = {}
         self._integral: dict[int, float] = {}
         self.members: dict[int, MemberSpec] = {}
+        self.gc_skipped: list[tuple[int, str]] = []  # last sweep's (epoch_id, reason)
 
     # -- lifecycle -----------------------------------------------------------
     def start(self, members: dict[int, MemberSpec], weights: Optional[dict] = None) -> int:
@@ -112,8 +116,16 @@ class LoadBalancerControlPlane:
         """Quiesce every drained epoch (end_event <= high-watermark of
         processed events). The paper's 'after waiting an appropriate time
         for all events from the previous Epoch to have quiesced' — here the
-        watermark is explicit. Frees calendar rows + member entries."""
+        watermark is explicit. Frees calendar rows + member entries.
+
+        Epochs whose teardown is (legitimately) not yet possible — still
+        reachable from the LPM table, or racing a concurrent reconfiguration
+        — are recorded in ``gc_skipped`` (reset each sweep, so it reflects
+        the most recent pass) and logged, then retried on the next sweep.
+        Any other exception is a bug and propagates.
+        """
         freed = []
+        self.gc_skipped = []
         for eid, rec in sorted(self.manager.records.items()):
             if (rec.active and rec.end_event is not None
                     and rec.end_event <= processed_event
@@ -121,8 +133,9 @@ class LoadBalancerControlPlane:
                 try:
                     self.manager.quiesce(eid)
                     freed.append(eid)
-                except Exception:
-                    pass
+                except (ReconfigurationError, TableError) as exc:
+                    self.gc_skipped.append((eid, str(exc)))
+                    logger.warning("gc: skipping epoch %d: %s", eid, exc)
         return freed
 
     # -- epoch scheduling --------------------------------------------------------

@@ -1,0 +1,198 @@
+"""The unified data plane: one routing/dispatch entry point for the system.
+
+The paper's keystone is a single low-latency pipeline — parse -> epoch ->
+calendar -> member rewrite — that every packet traverses identically at line
+rate (DESIGN.md §2). ``DataPlane`` is that pipeline's facade: it owns the
+compiled ``DeviceTables`` (one LB instance, or the paper's four virtual
+instances stacked on a leading dim) and exposes
+
+    route(headers)          -> Route        (batched; one device call)
+    route_events(ev, ent)   -> Route        (host-side event numbers)
+    plan(member)            -> (pos, counts)  sort-based dispatch plan
+    dispatch(...)           -> per-member packed buffers + drop accounting
+    redistribute(mesh, ...) -> all_to_all exchange fn (shard_map)
+
+with a selectable backend:
+
+    "jnp"     — the reference semantics in core/router.py (default off-TPU);
+    "pallas"  — the VMEM-tiled kernels in kernels/ (interpret=True gives the
+                CPU functional model; on TPU the compiled kernel);
+    "auto"    — "pallas" on TPU, "jnp" elsewhere.
+
+Both backends are property-tested equivalent (tests/test_dataplane.py),
+including the multi-instance path. Every subsystem — serving front door,
+streaming pipeline, training ingest, benchmarks — routes through this facade;
+nothing else constructs table tuples or duplicates the routing math
+(DESIGN.md §2, backend selection in §3).
+
+``DataPlane`` is a registered pytree, so it can be constructed from traced
+``DeviceTables`` inside jit (train_step does this) and passed across jit
+boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import router as _router
+from repro.core.protocol import decode_fields, encode_headers
+from repro.core.router import Route
+from repro.core.tables import DeviceTables, stack_tables
+
+BACKENDS = ("jnp", "pallas", "auto")
+
+
+def resolve_backend(backend: str) -> str:
+    """"auto" -> "pallas" on TPU, "jnp" elsewhere (the interpret-mode kernel
+    is a functional model, not a fast path — see DESIGN.md §3)."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return backend
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DataPlane:
+    """Facade over the programmed tables + routing/dispatch kernels."""
+
+    tables: DeviceTables
+    backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
+    interpret: Optional[bool] = dataclasses.field(default=None,
+                                                  metadata=dict(static=True))
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_manager(cls, manager, backend: str = "auto",
+                     interpret: Optional[bool] = None) -> "DataPlane":
+        """One LB instance from an EpochManager (or anything with
+        ``device_tables()``)."""
+        return cls(tables=manager.device_tables(), backend=backend,
+                   interpret=interpret)
+
+    @classmethod
+    def from_instances(cls, managers, backend: str = "auto",
+                       interpret: Optional[bool] = None) -> "DataPlane":
+        """Stacked virtual instances (paper §I-C) from per-instance managers."""
+        return cls(tables=stack_tables([m.device_tables() for m in managers]),
+                   backend=backend, interpret=interpret)
+
+    def with_tables(self, tables: DeviceTables) -> "DataPlane":
+        """Same backend selection, freshly programmed tables (epoch switch)."""
+        return dataclasses.replace(self, tables=tables)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def multi_instance(self) -> bool:
+        return self.tables.seg_row.ndim == 2
+
+    @property
+    def n_instances(self) -> int:
+        return int(self.tables.seg_row.shape[0]) if self.multi_instance else 1
+
+    def _resolved(self) -> tuple[str, bool]:
+        backend = resolve_backend(self.backend)
+        interpret = (jax.default_backend() != "tpu"
+                     if self.interpret is None else self.interpret)
+        return backend, interpret
+
+    # -- routing -------------------------------------------------------------
+    def route(self, headers, instance_id=None) -> Route:
+        """Route a batch of wire headers u32[N, 4] in one device call.
+
+        ``instance_id`` (i32[N], from the L3 filter) is required iff the
+        tables are stacked multi-instance.
+        """
+        if headers.ndim != 2 or headers.shape[-1] != 4:
+            raise ValueError(f"headers must be [N, 4] u32 words, got {headers.shape}")
+        if self.multi_instance and instance_id is None:
+            raise ValueError("stacked tables require per-packet instance_id")
+        if not self.multi_instance and instance_id is not None:
+            raise ValueError("instance_id given but tables are single-instance")
+        backend, interpret = self._resolved()
+        if backend == "pallas":
+            from repro.kernels import lb_route as _lb
+
+            member, node, lane, valid = _lb.lb_route(
+                headers, self.tables, instance_id, interpret=interpret)
+            return Route(member=member, node=node, lane=lane, valid=valid > 0)
+        w = headers.astype(jnp.uint32)
+        f = decode_fields(w)
+        if self.multi_instance:
+            return _router.route_instances(
+                self.tables, instance_id, f["event_hi"], f["event_lo"],
+                f["entropy"], header_words=w)
+        return _router.route(self.tables, f["event_hi"], f["event_lo"],
+                             f["entropy"], header_words=w)
+
+    def route_events(self, event_numbers, entropy, instance_id=None) -> Route:
+        """Route host-side events (uint64 numbers + entropy) in one call.
+
+        Encodes protocol headers and goes through the same ``route`` path, so
+        hosts that never see wire packets (the serving front door) still
+        traverse the identical pipeline.
+        """
+        ev = np.asarray(event_numbers, np.uint64)
+        en = np.asarray(entropy, np.uint32)
+        headers = jnp.asarray(encode_headers(ev, en))
+        iid = None if instance_id is None else jnp.asarray(instance_id, jnp.int32)
+        return self.route(headers, iid)
+
+    # -- dispatch (pack routed packets into per-member buffers) --------------
+    def plan(self, member, n_members: int):
+        """Per-packet buffer positions + per-member totals (pos=-1 invalid)."""
+        backend, interpret = self._resolved()
+        if backend == "pallas":
+            from repro.kernels import dispatch as _dispatch
+
+            return _dispatch.dispatch_plan(member, n_members=n_members,
+                                           interpret=interpret)
+        from repro.kernels import ref as _ref
+
+        return _ref.dispatch_plan_ref(member, n_members=n_members)
+
+    def member_positions(self, member, n_members: int, capacity: int):
+        """(pos, keep, counts) — the capacity-bounded sort-based pack."""
+        return _router.member_positions(member, n_members, capacity)
+
+    def dispatch(self, payload, member, n_members: int, capacity: int):
+        """Scatter payloads into [n_members, capacity, ...] + occupancy."""
+        return _router.dispatch(payload, member, n_members, capacity)
+
+    def combine(self, payload, member, pos, n_members: int, capacity: int):
+        """Scatter by a precomputed plan; returns (buf, occ, dropped)."""
+        return combine_payloads(payload, member, pos, n_members=n_members,
+                                capacity=capacity)
+
+    # -- on-mesh redistribution ----------------------------------------------
+    def redistribute(self, mesh, axis_names, capacity_per_src: int):
+        """Build the shard_map all_to_all exchange (LB -> CN delivery)."""
+        return _router.make_redistribute(mesh, axis_names, capacity_per_src)
+
+
+@functools.partial(jax.jit, static_argnames=("n_members", "capacity"))
+def combine_payloads(payload, member, pos, *, n_members: int, capacity: int):
+    """Scatter payloads by (member, pos) into [n_members, capacity, ...] buffers.
+
+    Returns (buffers, occupancy, dropped_count). Drops (pos >= capacity) are
+    counted, never silent.
+    """
+    keep = (member >= 0) & (pos >= 0) & (pos < capacity)
+    # Masked packets are sent to an out-of-bounds index so mode="drop"
+    # discards the write entirely (an in-bounds dummy index would clobber a
+    # real packet's slot).
+    m_idx = jnp.where(keep, member, n_members)
+    p_idx = jnp.where(keep, pos, capacity)
+    buf = jnp.zeros((n_members, capacity) + payload.shape[1:], payload.dtype)
+    buf = buf.at[m_idx, p_idx].set(payload, mode="drop")
+    occ = jnp.zeros((n_members, capacity), jnp.int32).at[m_idx, p_idx].set(
+        jnp.ones_like(member, jnp.int32), mode="drop"
+    )
+    dropped = jnp.sum((member >= 0) & ~keep)
+    return buf, occ, dropped

@@ -5,7 +5,8 @@ destination address mapping to one of four independent instances of all of
 the load balancing context." Instance selection is the L3 filter's job; each
 instance owns an independent EpochManager/RouterState. Device-side, the four
 table sets are stacked on a leading instance dimension and packets are routed
-per-instance (core/router.route_instances). Isolation is tested.
+per-instance in one fused gather pass through core/dataplane.DataPlane
+(DESIGN.md §2). Isolation is tested.
 """
 from __future__ import annotations
 

@@ -87,23 +87,44 @@ def route_instances(
 
     ``stacked`` carries a leading instance dim (tables.stack_tables); each
     packet's tables are selected by its instance id (from the L3 filter).
+
+    Single fused pass: every lookup gathers the packet's own instance's row
+    directly (O(N) work regardless of instance count), instead of routing
+    through all N instances and selecting — same table reads per packet as
+    the single-instance path. Callers go through core/dataplane.DataPlane.
     """
     n_inst = stacked.seg_row.shape[0]
     iid = jnp.clip(instance_id.astype(jnp.int32), 0, n_inst - 1)
+    event_hi = event_hi.astype(jnp.uint32)
+    event_lo = event_lo.astype(jnp.uint32)
 
-    def one(i):
-        sub = DeviceTables(
-            **{f.name: getattr(stacked, f.name)[i] for f in dataclasses.fields(DeviceTables)}
-        )
-        return route(sub, event_hi, event_lo, entropy, header_words)
+    # Calendar Epoch Assignment on per-packet segment tables [N, S].
+    e_hi = event_hi[..., None]
+    e_lo = event_lo[..., None]
+    ge = _ge_u64(e_hi, e_lo, stacked.seg_start_hi[iid], stacked.seg_start_lo[iid])
+    idx = jnp.sum(ge.astype(jnp.int32), axis=-1) - 1
+    idx = jnp.clip(idx, 0, stacked.seg_row.shape[-1] - 1)
+    row = stacked.seg_row[iid, idx]
 
-    routes = [one(i) for i in range(n_inst)]
-    sel = lambda field: jnp.select(
-        [iid == i for i in range(n_inst)], [getattr(r, field) for r in routes]
+    # Calendar to Member Map.
+    slot = (event_lo & SLOT_MASK).astype(jnp.int32)
+    member = stacked.calendars[iid, jnp.clip(row, 0, stacked.calendars.shape[1] - 1), slot]
+
+    # Member Lookup and Rewrite.
+    m = jnp.clip(member, 0, stacked.member_node.shape[-1] - 1)
+    node = stacked.member_node[iid, m]
+    lane = stacked.member_base_lane[iid, m] + (
+        entropy.astype(jnp.int32) & stacked.member_lane_mask[iid, m]
     )
-    return Route(member=sel("member"), node=sel("node"), lane=sel("lane"),
-                 valid=jnp.select([iid == i for i in range(n_inst)],
-                                  [r.valid for r in routes]))
+    ok = (row >= 0) & (stacked.member_valid[iid, m] > 0) & (member >= 0)
+    if header_words is not None:
+        ok = ok & validate(header_words)
+    return Route(
+        member=jnp.where(ok, member, -1),
+        node=jnp.where(ok, node, -1),
+        lane=jnp.where(ok, lane, -1),
+        valid=ok,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -111,18 +132,51 @@ def route_instances(
 # ---------------------------------------------------------------------------
 
 def member_positions(member: jnp.ndarray, n_members: int, capacity: int):
-    """Position of each packet within its member's buffer (cumsum of one-hot).
+    """Position of each packet within its member's buffer (sort-based pack).
+
+    pos_i = #packets j<i with member_j == member_i, computed as a stable
+    argsort by member followed by a segment-offset subtraction: within the
+    sorted order, a packet's position is its sorted rank minus the rank of
+    the first packet of its member segment. O(N log N) work and O(N) memory
+    versus the old one-hot cumsum's O(N*M) (see DESIGN.md §Perf; benchmarked
+    in benchmarks/bench_dispatch.py).
 
     Returns (pos int32[N], keep bool[N], counts int32[n_members]). Packets
     beyond ``capacity`` are dropped — the analogue of the paper's note that
     events targeting an unprogrammed slot are discarded, except here we
     account for every drop (tested).
     """
-    onehot = jax.nn.one_hot(member, n_members, dtype=jnp.int32)  # [N, M]
-    pos_in_member = jnp.cumsum(onehot, axis=0) - onehot  # exclusive cumsum
-    pos = jnp.sum(pos_in_member * onehot, axis=-1)
-    counts = jnp.sum(onehot, axis=0)
-    keep = (member >= 0) & (pos < capacity)
+    n = member.shape[0]
+    if (n_members + 2) * max(n, 1) >= 2**31:
+        raise ValueError("n_members * n must fit in int32 for the sort keys")
+    mem = member.astype(jnp.int32)
+    i = jnp.arange(n, dtype=jnp.int32)
+    valid = (mem >= 0) & (mem < n_members)
+    mv = jnp.where(valid, mem, n_members)  # invalid packets sort last
+    # Stable sort by member: key = member * n + arrival index. Keys are
+    # unique, so a plain value sort is a stable argsort (and jnp.sort is far
+    # cheaper than jnp.argsort or a scatter on CPU/TPU alike).
+    sk = jnp.sort(mv * n + i)
+    sm = sk // jnp.int32(max(n, 1))       # sorted member ids
+    orig = sk % jnp.int32(max(n, 1))      # original index of each sorted slot
+    # Segment boundaries: one tiny searchsorted (n_members + 1 probes) gives
+    # every member's first sorted position AND the per-member totals.
+    starts = jnp.searchsorted(
+        sk, jnp.arange(n_members + 1, dtype=jnp.int32) * n, side="left"
+    ).astype(jnp.int32)
+    counts = starts[1:] - starts[:-1]  # [n_members]
+    # Position within the member segment = sorted rank - segment start
+    # (starts[n_members] opens the invalid-packet segment).
+    pos_sorted = i - starts[jnp.clip(sm, 0, n_members)]
+    if n * n < 2**31:
+        # Undo the permutation with a second key sort instead of a scatter
+        # (cheaper than scatter on CPU/TPU; key = orig * n + pos needs n^2
+        # to fit in int32).
+        pos = (jnp.sort(orig * n + pos_sorted) % jnp.int32(max(n, 1))).astype(jnp.int32)
+    else:
+        pos = jnp.zeros((n,), jnp.int32).at[orig].set(pos_sorted)
+    pos = jnp.where(valid, pos, 0)
+    keep = valid & (pos < capacity)
     return pos, keep, counts
 
 

@@ -13,9 +13,8 @@ from collections import defaultdict
 
 import numpy as np
 
+from repro.core.dataplane import DataPlane
 from repro.core.epoch import EpochManager
-from repro.core.protocol import decode_fields, join64
-from repro.core.router import route
 from repro.data.daq import DAQConfig, DAQFleet
 from repro.data.segmentation import Reassembler, Segment, segment_bundle
 from repro.data.transport import TransportConfig, WANTransport
@@ -34,22 +33,32 @@ class StreamingPipeline:
     """Drives DAQ traffic through the LB into per-member reassembly lanes."""
 
     def __init__(self, daq_cfg: DAQConfig, transport_cfg: TransportConfig,
-                 manager: EpochManager):
+                 manager: EpochManager, backend: str = "auto"):
         self.fleet = DAQFleet(daq_cfg)
         self.wan = WANTransport(transport_cfg)
         self.manager = manager
+        self.backend = backend
         # lane-indexed reassemblers per member (entropy RSS lanes)
         self.lanes: dict[tuple[int, int], Reassembler] = defaultdict(Reassembler)
         self.stats = PipelineStats()
         self.routed_log: list[tuple[int, int, int]] = []  # (event, member, lane)
+        self._dp: DataPlane | None = None
+        self._dp_version = -1
+
+    def _dataplane(self) -> DataPlane:
+        """Tables recompile only after the epoch state changes (audit-log
+        watermark), not once per arrival window."""
+        version = len(self.manager.audit)
+        if self._dp is None or version != self._dp_version:
+            self._dp = DataPlane.from_manager(self.manager, backend=self.backend)
+            self._dp_version = version
+        return self._dp
 
     def _route_batch(self, segments: list[Segment]):
-        tables = self.manager.device_tables()
-        words = np.stack([s.lb_words for s in segments])
+        """One batched DataPlane call for the whole arrival window."""
         import jax.numpy as jnp
-        f = decode_fields(jnp.asarray(words))
-        r = route(tables, f["event_hi"], f["event_lo"], f["entropy"],
-                  header_words=jnp.asarray(words))
+        words = jnp.asarray(np.stack([s.lb_words for s in segments]))
+        r = self._dataplane().route(words)
         return (np.asarray(r.member), np.asarray(r.node),
                 np.asarray(r.lane), np.asarray(r.valid))
 

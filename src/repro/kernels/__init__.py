@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the data-plane hot spots (routing, dispatch
+# planning, flash attention) plus their pure-jnp oracles in ref.py. The
+# routing/dispatch kernels are reached through core/dataplane.DataPlane
+# (backend="pallas"); nothing else calls them directly.

@@ -10,9 +10,16 @@ state is O(#compute-nodes), "a very small number of FPGA block RAM, with no
 need for HBM". Header words stream through VMEM field-major (u32[4, N]) so
 the packet dimension is lane-aligned (multiples of 128).
 
+Tables arrive as a ``core.tables.DeviceTables`` pytree — either one instance
+(1-D ``seg_row``) or stacked virtual instances (paper §I-C) with a leading
+instance dim; the multi-instance kernel gathers each packet's own instance's
+rows by ``instance_id`` in the same single pass. The only public caller is
+``core/dataplane.DataPlane`` (backend="pallas").
+
 Layout notes (TPU target):
   * BLOCK_N = 2048 packets/block => header block 4*2048*4B = 32KB VMEM,
-    outputs 4*2048*4B = 32KB; tables < 64KB. Comfortably inside 16MB VMEM.
+    outputs 4*2048*4B = 32KB; tables < 64KB (x4 instances still < 256KB).
+    Comfortably inside 16MB VMEM.
   * All per-packet math is elementwise/compare/sum on int32 vectors (VPU);
     the only gathers index 512-entry VMEM tables.
 Validated in interpret mode on CPU against kernels/ref.py + core/router.py.
@@ -26,8 +33,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.protocol import MAGIC, SLOT_MASK, VERSION
+from repro.core.tables import DeviceTables
 
 BLOCK_N = 2048
+
+
+def _parse(hdr_ref):
+    """Parsing stage (paper §III-A): field extract + magic/version check."""
+    w0 = hdr_ref[0, :]
+    w1 = hdr_ref[1, :]
+    e_hi = hdr_ref[2, :]
+    e_lo = hdr_ref[3, :]
+    magic = (w0 >> 16) & 0xFFFF
+    version = (w0 >> 8) & 0xFF
+    entropy = (w1 & 0xFFFF).astype(jnp.int32)
+    ok = (magic == MAGIC) & (version == VERSION)
+    return e_hi, e_lo, entropy, ok
 
 
 def _route_kernel(
@@ -45,16 +66,7 @@ def _route_kernel(
     lane_out,       # i32[B]
     valid_out,      # i32[B]
 ):
-    w0 = hdr_ref[0, :]
-    w1 = hdr_ref[1, :]
-    e_hi = hdr_ref[2, :]
-    e_lo = hdr_ref[3, :]
-
-    # --- Parsing stage (paper §III-A): magic/version check ---
-    magic = (w0 >> 16) & 0xFFFF
-    version = (w0 >> 8) & 0xFF
-    entropy = (w1 & 0xFFFF).astype(jnp.int32)
-    ok = (magic == MAGIC) & (version == VERSION)
+    e_hi, e_lo, entropy, ok = _parse(hdr_ref)
 
     # --- Calendar Epoch Assignment: segment = (#starts <= event) - 1 ---
     s_hi = seg_hi_ref[:]
@@ -83,15 +95,72 @@ def _route_kernel(
     valid_out[:] = ok.astype(jnp.int32)
 
 
+def _route_kernel_mi(
+    hdr_ref,        # u32[4, B]   field-major header words
+    iid_ref,        # i32[B]      per-packet LB instance id
+    seg_hi_ref,     # u32[I, S]
+    seg_lo_ref,     # u32[I, S]
+    seg_row_ref,    # i32[I, S]
+    cal_ref,        # i32[I, R, 512]
+    node_ref,       # i32[I, M]
+    base_ref,       # i32[I, M]
+    mask_ref,       # i32[I, M]
+    mvalid_ref,     # i32[I, M]
+    member_out,     # i32[B]
+    node_out,       # i32[B]
+    lane_out,       # i32[B]
+    valid_out,      # i32[B]
+):
+    """Multi-instance variant: identical pipeline, every table read gathers
+    the packet's own instance's row (one fused pass over all instances)."""
+    e_hi, e_lo, entropy, ok = _parse(hdr_ref)
+    iid = jnp.clip(iid_ref[:], 0, seg_row_ref.shape[0] - 1)
+
+    s_hi = seg_hi_ref[...][iid]  # [B, S]
+    s_lo = seg_lo_ref[...][iid]
+    ge = (e_hi[:, None] > s_hi) | ((e_hi[:, None] == s_hi) & (e_lo[:, None] >= s_lo))
+    idx = jnp.sum(ge.astype(jnp.int32), axis=1) - 1
+    idx = jnp.clip(idx, 0, s_hi.shape[1] - 1)
+    row = seg_row_ref[...][iid, idx]
+
+    slot = (e_lo & SLOT_MASK).astype(jnp.int32)
+    cal = cal_ref[...]
+    member = cal[iid, jnp.clip(row, 0, cal.shape[1] - 1), slot]
+
+    m = jnp.clip(member, 0, node_ref.shape[1] - 1)
+    node = node_ref[...][iid, m]
+    lane = base_ref[...][iid, m] + (entropy & mask_ref[...][iid, m])
+    ok = ok & (row >= 0) & (member >= 0) & (mvalid_ref[...][iid, m] > 0)
+
+    member_out[:] = jnp.where(ok, member, -1)
+    node_out[:] = jnp.where(ok, node, -1)
+    lane_out[:] = jnp.where(ok, lane, -1)
+    valid_out[:] = ok.astype(jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def lb_route(headers, tables_tuple, *, block_n: int = BLOCK_N, interpret: bool = True):
+def lb_route(
+    headers,
+    tables: DeviceTables,
+    instance_id=None,
+    *,
+    block_n: int = BLOCK_N,
+    interpret: bool = True,
+):
     """Route N packets. ``headers``: u32[N, 4] wire words (row-major).
 
-    ``tables_tuple``: (seg_hi, seg_lo, seg_row, calendars, node, base, mask,
-    valid) — see core/tables.DeviceTables. Returns (member, node, lane,
-    valid) int32[N]. N is padded internally to a multiple of ``block_n``.
+    ``tables``: a DeviceTables pytree — single-instance (1-D ``seg_row``) or
+    stacked (leading instance dim, see core/tables.stack_tables), in which
+    case ``instance_id`` (i32[N], from the L3 filter) selects each packet's
+    balancing context. Returns (member, node, lane, valid) int32[N]. N is
+    padded internally to a multiple of ``block_n``.
     """
-    (seg_hi, seg_lo, seg_row, cal, node, base, mask, mvalid) = tables_tuple
+    multi = tables.seg_row.ndim == 2
+    if multi and instance_id is None:
+        raise ValueError("stacked tables require per-packet instance_id")
+    if not multi and instance_id is not None:
+        raise ValueError("instance_id given but tables are single-instance")
+
     n = headers.shape[0]
     n_pad = -(-n // block_n) * block_n
     hdr = jnp.zeros((n_pad, 4), jnp.uint32).at[:n].set(headers.astype(jnp.uint32))
@@ -100,18 +169,29 @@ def lb_route(headers, tables_tuple, *, block_n: int = BLOCK_N, interpret: bool =
     grid = (n_pad // block_n,)
     vec_out = jax.ShapeDtypeStruct((n_pad,), jnp.int32)
     tbl_spec = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    tbl = (tables.seg_start_hi, tables.seg_start_lo, tables.seg_row,
+           tables.calendars, tables.member_node, tables.member_base_lane,
+           tables.member_lane_mask, tables.member_valid)
+
+    in_specs = [pl.BlockSpec((4, block_n), lambda i: (0, i))]
+    inputs = [hdr]
+    kernel = _route_kernel
+    if multi:
+        iid = jnp.zeros((n_pad,), jnp.int32).at[:n].set(
+            instance_id.astype(jnp.int32))
+        in_specs.append(pl.BlockSpec((block_n,), lambda i: (i,)))
+        inputs.append(iid)
+        kernel = _route_kernel_mi
+    in_specs.extend(tbl_spec(a) for a in tbl)
+    inputs.extend(tbl)
+
     out = pl.pallas_call(
-        _route_kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, block_n), lambda i: (0, i)),
-            tbl_spec(seg_hi), tbl_spec(seg_lo), tbl_spec(seg_row),
-            tbl_spec(cal), tbl_spec(node), tbl_spec(base), tbl_spec(mask),
-            tbl_spec(mvalid),
-        ],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec((block_n,), lambda i: (i,))] * 4,
         out_shape=[vec_out] * 4,
         interpret=interpret,
-    )(hdr, seg_hi, seg_lo, seg_row, cal, node, base, mask, mvalid)
+    )(*inputs)
     member, node_o, lane, valid = (o[:n] for o in out)
     return member, node_o, lane, valid

@@ -2,8 +2,9 @@
 
 The routing oracle is the core/router.py implementation itself (single source
 of truth for the protocol semantics); the dispatch-plan oracle is the
-cumsum-of-one-hot from core/router.member_positions. Tests sweep shapes and
-dtypes and assert_allclose kernel-vs-oracle.
+sort-based pack from core/router.member_positions (itself property-tested
+against the historical cumsum-of-one-hot semantics in tests/test_dataplane.py).
+Tests sweep shapes and dtypes and assert_allclose kernel-vs-oracle.
 """
 from __future__ import annotations
 
@@ -14,26 +15,35 @@ from repro.core.protocol import decode_fields
 from repro.core.tables import DeviceTables
 
 
-def tables_tuple(tables: DeviceTables):
-    return (
-        tables.seg_start_hi, tables.seg_start_lo, tables.seg_row,
-        tables.calendars, tables.member_node, tables.member_base_lane,
-        tables.member_lane_mask, tables.member_valid,
-    )
+def lb_route_ref(headers, tables: DeviceTables, instance_id=None):
+    """Oracle for kernels/lb_route.lb_route (single or stacked tables).
 
+    The multi-instance oracle is deliberately the naive N-way form — route
+    through every instance's tables, then select by instance id — so it is
+    an independent reference for the fused single-pass gather in
+    core/router.route_instances (property-tested in tests/test_dataplane.py).
+    """
+    import dataclasses
 
-def lb_route_ref(headers, tables_tuple_):
-    """Oracle for kernels/lb_route.lb_route."""
-    (seg_hi, seg_lo, seg_row, cal, node, base, mask, mvalid) = tables_tuple_
-    t = DeviceTables(
-        seg_start_hi=seg_hi, seg_start_lo=seg_lo, seg_row=seg_row,
-        calendars=cal, member_node=node, member_base_lane=base,
-        member_lane_mask=mask, member_valid=mvalid,
-    )
-    f = decode_fields(headers.astype(jnp.uint32))
-    r = _router.route(t, f["event_hi"], f["event_lo"], f["entropy"],
-                      header_words=headers.astype(jnp.uint32))
-    return r.member, r.node, r.lane, r.valid.astype(jnp.int32)
+    w = headers.astype(jnp.uint32)
+    f = decode_fields(w)
+    if instance_id is None:
+        r = _router.route(tables, f["event_hi"], f["event_lo"], f["entropy"],
+                          header_words=w)
+        return r.member, r.node, r.lane, r.valid.astype(jnp.int32)
+
+    n_inst = tables.seg_row.shape[0]
+    iid = jnp.clip(instance_id.astype(jnp.int32), 0, n_inst - 1)
+    per = []
+    for i in range(n_inst):
+        sub = DeviceTables(**{fld.name: getattr(tables, fld.name)[i]
+                              for fld in dataclasses.fields(DeviceTables)})
+        per.append(_router.route(sub, f["event_hi"], f["event_lo"],
+                                 f["entropy"], header_words=w))
+    sel = lambda field: jnp.select([iid == i for i in range(n_inst)],
+                                   [getattr(r, field) for r in per])
+    return (sel("member"), sel("node"), sel("lane"),
+            sel("valid").astype(jnp.int32))
 
 
 def dispatch_plan_ref(member, *, n_members: int):

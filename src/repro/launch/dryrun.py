@@ -164,7 +164,11 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
         compiled = lowered.compile()
 
-    cost = dict(compiled.cost_analysis() or {})
+    # cost_analysis() returns a dict on newer jax, [dict] on older versions.
+    raw_cost = compiled.cost_analysis() or {}
+    if isinstance(raw_cost, (list, tuple)):
+        raw_cost = raw_cost[0] if raw_cost else {}
+    cost = dict(raw_cost)
     try:
         mem = compiled.memory_analysis()
         mem_info = {

@@ -1,10 +1,12 @@
 """Serving engine: LB front door + continuous-batched prefill/decode.
 
 Requests are *events*: the front door assigns each request a monotonically
-increasing event number and an entropy value, then routes it through the
-same epoch-calendar data plane used for training ingest — the member is a
+increasing event number and an entropy value; requests accumulate and are
+then routed lazily — a single batched ``DataPlane.route_events`` device call
+per engine tick, not one round-trip per request — through the same
+epoch-calendar data plane used for training ingest. The routed member is a
 model replica (DP slice), the lane (entropy & mask, the paper's RSS
-mechanism) picks a decode slot *within* the replica. Replica weights /
+mechanism) picks a decode slot *within* the replica's node. Replica weights /
 membership change hit-lessly via the control plane (e.g. drain a replica by
 weighting it to 0 in the next epoch — in-flight requests keep their member).
 
@@ -23,9 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.control_plane import LoadBalancerControlPlane
+from repro.core.dataplane import DataPlane
 from repro.core.epoch import EpochManager
-from repro.core.protocol import encode_headers, split64
-from repro.core.router import route
 from repro.core.tables import MemberSpec
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -38,7 +39,8 @@ class Request:
     max_new_tokens: int = 16
     event_number: int = -1
     entropy: int = 0
-    member: int = -1
+    member: int = -1             # calendar member id (-1 until routed)
+    node: int = -1               # destination replica (DP slice)
     lane: int = -1
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
@@ -50,6 +52,7 @@ class ServeConfig:
     lane_bits: int = 1           # 2**lane_bits decode slots per replica
     max_len: int = 256
     greedy: bool = True
+    backend: str = "auto"        # data-plane backend (DataPlane)
 
 
 class ServingEngine:
@@ -73,30 +76,67 @@ class ServingEngine:
         self.slots: list[list[Optional[Request]]] = [
             [None] * self.n_lanes for _ in range(serve_cfg.n_replicas)
         ]
-        self.queue: deque[Request] = deque()
+        self.queue: deque[Request] = deque()      # routed, awaiting a slot
+        self.unrouted: deque[Request] = deque()   # submitted, awaiting routing
         self.next_event = 1000
         self.next_rid = 0
         self._decode = jax.jit(
             lambda p, tok, st: M.decode_step(p, tok, st, self.mcfg))
-        self.stats = {"routed": {}, "completed": 0}
+        self.stats = {"routed": {}, "completed": 0, "rejected": 0,
+                      "route_calls": 0}
+        self._dp: Optional[DataPlane] = None
+        self._dp_version = -1
 
     # -- front door -------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+        """Assign an event number + entropy and enqueue; routing happens
+        lazily in one batched device call per tick (``_route_pending``)."""
         req = Request(rid=self.next_rid, prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens)
         self.next_rid += 1
         req.event_number = self.next_event
         self.next_event += int(np.random.default_rng(req.rid).integers(1, 5))
         req.entropy = int(np.random.default_rng(req.rid + 7).integers(0, 1 << 16))
-        tables = self.manager.device_tables()
-        hi, lo = split64(np.asarray([req.event_number], np.uint64))
-        r = route(tables, jnp.asarray(hi), jnp.asarray(lo),
-                  jnp.asarray([req.entropy], jnp.uint32))
-        req.member = int(r.node[0])
-        req.lane = int(r.lane[0])
-        self.stats["routed"][req.member] = self.stats["routed"].get(req.member, 0) + 1
-        self.queue.append(req)
+        self.unrouted.append(req)
         return req
+
+    def _dataplane(self) -> DataPlane:
+        """Facade over the current tables; recompiled only after the control
+        plane touches the epoch state (audit-log watermark)."""
+        version = len(self.manager.audit)
+        if self._dp is None or version != self._dp_version:
+            self._dp = DataPlane.from_manager(self.manager,
+                                              backend=self.scfg.backend)
+            self._dp_version = version
+        return self._dp
+
+    def _route_pending(self) -> None:
+        """Route every accumulated submission in ONE device call."""
+        if not self.unrouted:
+            return
+        batch = list(self.unrouted)
+        self.unrouted.clear()
+        r = self._dataplane().route_events(
+            np.asarray([q.event_number for q in batch], np.uint64),
+            np.asarray([q.entropy for q in batch], np.uint32))
+        self.stats["route_calls"] += 1
+        member = np.asarray(r.member)
+        node = np.asarray(r.node)
+        lane = np.asarray(r.lane)
+        valid = np.asarray(r.valid)
+        for i, req in enumerate(batch):
+            if not valid[i]:
+                # The calendar discards events with no programmed slot; a
+                # request-event should never hit this, but account for it.
+                req.done = True
+                self.stats["rejected"] += 1
+                continue
+            req.member = int(member[i])
+            req.node = int(node[i])
+            req.lane = int(lane[i])
+            self.stats["routed"][req.member] = (
+                self.stats["routed"].get(req.member, 0) + 1)
+            self.queue.append(req)
 
     # -- scheduling ---------------------------------------------------------------
     def _try_place(self) -> None:
@@ -104,8 +144,8 @@ class ServingEngine:
         while self.queue:
             req = self.queue.popleft()
             lane = req.lane % self.n_lanes
-            if self.slots[req.member][lane] is None:
-                self.slots[req.member][lane] = req
+            if self.slots[req.node][lane] is None:
+                self.slots[req.node][lane] = req
                 self._prefill_into_slot(req)
             else:
                 pending.append(req)  # lane busy: wait (RSS lane affinity)
@@ -113,8 +153,8 @@ class ServingEngine:
 
     def _prefill_into_slot(self, req: Request) -> None:
         """Single-sequence prefill into the slot's cache lane."""
-        member, lane = req.member, req.lane % self.n_lanes
-        state = self.states[member]
+        node, lane = req.node, req.lane % self.n_lanes
+        state = self.states[node]
         tokens = jnp.asarray(req.prompt[None, :], jnp.int32)
         # Per-lane decode state: run prefill on a batch-1 view, then scatter
         # the lane back. For simplicity the slot engine keeps per-lane states.
@@ -122,10 +162,12 @@ class ServingEngine:
         logits, one = M.prefill(self.params, {"tokens": tokens}, one, self.mcfg)
         nxt = int(jnp.argmax(logits[0]))
         req.output.append(nxt)
-        self.states[member] = _scatter_lane(state, one, lane)
+        self.states[node] = _scatter_lane(state, one, lane)
 
     def step(self) -> int:
-        """One engine tick: place queued requests, one decode step per replica."""
+        """One engine tick: batch-route new submissions (one device call),
+        place them, then one decode step per replica."""
+        self._route_pending()
         self._try_place()
         n_active = 0
         for m in range(self.scfg.n_replicas):
@@ -150,7 +192,7 @@ class ServingEngine:
     def run_until_done(self, max_ticks: int = 1000) -> None:
         for _ in range(max_ticks):
             n_active = self.step()
-            if not self.queue and n_active == 0:
+            if not self.queue and not self.unrouted and n_active == 0:
                 break
 
 

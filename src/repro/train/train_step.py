@@ -25,8 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import router as lb_router
-from repro.core.protocol import decode_fields
+from repro.core.dataplane import DataPlane
 from repro.core.tables import DeviceTables
 from repro.distributed import sharding as shd
 from repro.distributed.compression import compress_decompress
@@ -66,20 +65,22 @@ def _ingest(batch, tables: DeviceTables, mesh: Mesh, global_batch: int):
     Each arrival-ordered event is routed through the calendar (stateless) to
     its owning member m; its destination row is ``m * cap + position`` where
     position is the exclusive running count of member-m events (the same
-    cumsum-of-one-hot plan the Pallas dispatch kernel computes). The global
-    scatter across the batch dim is what GSPMD turns into the inter-chip
-    exchange — the paper's "in-network sorting" on the ICI fabric. Capacity
-    cap = B/W (cf 1.0): output batch identical to input, overflow events
-    dropped + accounted (the paper's discard rule; a few % at these shapes).
+    sort-based plan the data plane's dispatch uses). The global scatter
+    across the batch dim is what GSPMD turns into the inter-chip exchange —
+    the paper's "in-network sorting" on the ICI fabric. Capacity cap = B/W
+    (cf 1.0): output batch identical to input, overflow events dropped +
+    accounted (the paper's discard rule; a few % at these shapes).
+
+    Routing goes through the DataPlane facade built over the traced tables
+    (jnp backend: this runs inside the jitted step under GSPMD).
     """
     d_ax = shd.data_axes(mesh)
     n_members = int(np.prod([mesh.shape[a] for a in d_ax]))
-    f = decode_fields(batch["headers"].astype(jnp.uint32))
-    r = lb_router.route(tables, f["event_hi"], f["event_lo"], f["entropy"],
-                        header_words=batch["headers"].astype(jnp.uint32))
+    dp = DataPlane(tables, backend="jnp")
+    r = dp.route(batch["headers"].astype(jnp.uint32))
     b = batch["labels"].shape[0]
     cap = max(b // n_members, 1)
-    pos, keep, _counts = lb_router.member_positions(r.node, n_members, cap)
+    pos, keep, _counts = dp.member_positions(r.node, n_members, cap)
     dest = jnp.where(keep, r.node * cap + pos, n_members * cap)  # OOB => drop
 
     from repro.distributed.context import constrain

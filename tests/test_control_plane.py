@@ -81,6 +81,38 @@ class TestFailureAndElastic:
             cp.schedule_epoch(100)
 
 
+class TestGarbageCollect:
+    def test_drained_epochs_freed(self):
+        cp = _cp(3)
+        cp.schedule_epoch(current_event=100, boundary=500)
+        cp.schedule_epoch(current_event=600, boundary=1000)
+        freed = cp.garbage_collect(processed_event=1000)
+        assert freed  # both bounded epochs have drained
+        assert cp.gc_skipped == []
+
+    def test_epoch_state_error_is_recorded_not_swallowed(self, monkeypatch):
+        from repro.core import ReconfigurationError
+
+        cp = _cp(3)
+        cp.schedule_epoch(current_event=100, boundary=500)
+
+        def boom(eid):
+            raise ReconfigurationError("still reachable")
+
+        monkeypatch.setattr(cp.manager, "quiesce", boom)
+        freed = cp.garbage_collect(processed_event=10_000)
+        assert freed == []
+        assert cp.gc_skipped and cp.gc_skipped[0][1] == "still reachable"
+
+    def test_unexpected_errors_propagate(self, monkeypatch):
+        cp = _cp(3)
+        cp.schedule_epoch(current_event=100, boundary=500)
+        monkeypatch.setattr(cp.manager, "quiesce",
+                            lambda eid: (_ for _ in ()).throw(ValueError("bug")))
+        with pytest.raises(ValueError):
+            cp.garbage_collect(processed_event=10_000)
+
+
 class TestTelemetryHub:
     def test_slow_member_reports_higher_fill(self):
         hub = TelemetryHub()

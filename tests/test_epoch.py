@@ -4,7 +4,7 @@ packet, and late (reordered) packets from the old epoch still route by the
 old calendar."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, st
 
 from repro.core import (EpochManager, MemberSpec, ReconfigurationError,
                         TableError, route, split64)

@@ -1,10 +1,13 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle,
+all reached through the DataPlane facade (the only public entry point)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EpochManager, MemberSpec, encode_headers
-from repro.kernels import ops, ref
+from repro.core import DataPlane, EpochManager, MemberSpec, encode_headers
+from repro.core.dataplane import combine_payloads
+from repro.core.instance import VirtualLoadBalancer
+from repro.kernels import ref
 from repro.kernels.dispatch import dispatch_plan
 from repro.kernels.lb_route import lb_route
 
@@ -35,9 +38,8 @@ class TestLBRouteKernel:
     def test_shape_sweep(self, n):
         t = _tables()
         h = jnp.asarray(_headers(n, seed=n))
-        tt = ref.tables_tuple(t)
-        got = lb_route(h, tt, interpret=True)
-        want = ref.lb_route_ref(h, tt)
+        got = lb_route(h, t, interpret=True)
+        want = ref.lb_route_ref(h, t)
         for g, w in zip(got, want):
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
@@ -45,18 +47,37 @@ class TestLBRouteKernel:
     def test_block_sweep(self, block_n):
         t = _tables(reconfig=True)
         h = jnp.asarray(_headers(3000, seed=block_n, corrupt_every=61))
-        tt = ref.tables_tuple(t)
-        got = lb_route(h, tt, block_n=block_n, interpret=True)
-        want = ref.lb_route_ref(h, tt)
+        got = lb_route(h, t, block_n=block_n, interpret=True)
+        want = ref.lb_route_ref(h, t)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    @pytest.mark.parametrize("block_n", [512, 2048])
+    def test_multi_instance_sweep(self, block_n):
+        """Stacked tables + per-packet instance ids vs the naive per-instance
+        oracle (paper §I-C, 4 virtual LBs in one kernel pass)."""
+        vlb = VirtualLoadBalancer(max_members=32)
+        for k in range(4):
+            vlb.instances[k].initialize(
+                {i: MemberSpec(node_id=100 * k + i, base_lane=8 * i,
+                               lane_bits=(k + i) % 3) for i in range(3 + k)},
+                {i: 1.0 for i in range(3 + k)})
+        stacked = vlb.device_tables()
+        rng = np.random.default_rng(block_n)
+        h = jnp.asarray(_headers(3000, seed=block_n, corrupt_every=37))
+        iid = jnp.asarray(rng.integers(0, 4, 3000), jnp.int32)
+        got = lb_route(h, stacked, iid, block_n=block_n, interpret=True)
+        want = ref.lb_route_ref(h, stacked, iid)
         for g, w in zip(got, want):
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
     def test_invalid_packets_discarded(self):
         t = _tables()
         h = jnp.asarray(_headers(512, corrupt_every=8))
-        m, n_, l, v = ops.route_packets(h, t, use_pallas=True)
+        r = DataPlane(t, backend="pallas", interpret=True).route(h)
+        v = np.asarray(r.valid).astype(np.int32)
         assert int((1 - v).sum()) == 64
-        assert (np.asarray(m)[np.asarray(v) == 0] == -1).all()
+        assert (np.asarray(r.member)[v == 0] == -1).all()
 
 
 class TestDispatchKernel:
@@ -85,8 +106,8 @@ class TestDispatchKernel:
         member = jnp.asarray(rng.integers(0, 4, 200).astype(np.int32))
         payload = jnp.asarray(rng.normal(size=(200, 16))).astype(dtype)
         pos, _ = dispatch_plan(member, n_members=4, interpret=True)
-        buf, occ, dropped = ops.combine_payloads(payload, member, pos,
-                                                 n_members=4, capacity=64)
+        buf, occ, dropped = combine_payloads(payload, member, pos,
+                                             n_members=4, capacity=64)
         assert buf.dtype == dtype
         assert int(occ.sum()) + int(dropped) == 200
 
@@ -95,12 +116,14 @@ class TestEndToEnd:
     def test_route_then_dispatch_accounting(self):
         """The full data plane: every valid packet lands exactly once."""
         t = _tables(n_members=6, weights={i: float(i + 1) for i in range(6)})
+        dp = DataPlane(t, backend="pallas", interpret=True)
         h = jnp.asarray(_headers(4096, corrupt_every=97))
-        member, node, lane, valid = ops.route_packets(h, t, use_pallas=True)
-        pos, counts = ops.plan_dispatch(member, 6, use_pallas=True)
-        buf, occ, dropped = ops.combine_payloads(
-            jnp.arange(4096.0)[:, None], member, pos, n_members=6, capacity=4096)
-        assert int(occ.sum()) == int(valid.sum())
+        r = dp.route(h)
+        pos, counts = dp.plan(r.member, 6)
+        buf, occ, dropped = dp.combine(
+            jnp.arange(4096.0)[:, None], r.member, pos, n_members=6,
+            capacity=4096)
+        assert int(occ.sum()) == int(r.valid.sum())
         assert int(dropped) == 0
         # weighted distribution: member 5 gets ~6x member 0's packets
         c = np.asarray(counts, np.float64)

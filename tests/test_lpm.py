@@ -1,5 +1,5 @@
 import pytest
-from hypothesis import given, strategies as st
+from repro.testing.hypo import given, st
 
 from repro.core import lpm
 

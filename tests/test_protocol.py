@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from repro.testing.hypo import given, st
 
 from repro.core import protocol as P
 

@@ -3,7 +3,7 @@ single-packet property, paper §I-B.3), RSS lanes, dispatch accounting,
 virtual-instance isolation."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, st
 
 from repro.core import (EpochManager, MemberSpec, dispatch, member_positions,
                         route, split64)
@@ -111,21 +111,22 @@ class TestDispatch:
 
 class TestVirtualInstances:
     def test_isolation(self):
-        """Paper §I-C: four independent contexts, no leakage."""
+        """Paper §I-C: four independent contexts, no leakage. Routed through
+        the DataPlane facade (the fused single-pass multi-instance gather)."""
+        from repro.core import DataPlane
+
         vlb = VirtualLoadBalancer()
         vlb.instances[0].initialize({0: MemberSpec(node_id=100)}, {0: 1.0})
         vlb.instances[1].initialize({0: MemberSpec(node_id=200)}, {0: 1.0})
         vlb.instances[2].initialize({0: MemberSpec(node_id=300)}, {0: 1.0})
         vlb.instances[3].initialize({0: MemberSpec(node_id=400)}, {0: 1.0})
-        from repro.core.router import route_instances
-        stacked = vlb.device_tables()
         evs = np.arange(16, dtype=np.uint64)
-        hi, lo = split64(evs)
-        iid = jnp.asarray(np.arange(16) % 4, jnp.int32)
-        r = route_instances(stacked, iid, jnp.asarray(hi), jnp.asarray(lo),
-                            jnp.zeros(16, jnp.uint32))
-        nodes = np.asarray(r.node)
-        assert (nodes == (np.arange(16) % 4 + 1) * 100).all()
+        iid = np.arange(16) % 4
+        for backend in ("jnp", "pallas"):
+            dp = DataPlane(vlb.device_tables(), backend=backend, interpret=True)
+            r = dp.route_events(evs, np.zeros(16, np.uint32), iid)
+            nodes = np.asarray(r.node)
+            assert (nodes == (np.arange(16) % 4 + 1) * 100).all(), backend
 
     def test_l2l3_filter_classification(self):
         vlb = VirtualLoadBalancer()

@@ -1,7 +1,7 @@
 """Segmentation & reassembly under reorder/loss/duplication (paper §II-C)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from repro.testing.hypo import given, settings, st
 
 from repro.data.daq import DAQConfig, DAQFleet, EventBundle
 from repro.data.segmentation import Reassembler, segment_bundle
