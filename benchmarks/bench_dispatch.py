@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit_json, row, timeit
 from repro.core.dataplane import DataPlane
 
 N, M, CAP = 8192, 64, 512
@@ -71,6 +71,13 @@ def run():
     us3 = timeit(lambda: jax.block_until_ready(dpp.plan(member, M)), iters=3)
     row("dispatch_plan_pallas_interpret", us3,
         f"{N/(us3/1e6)/1e6:.3f} M-events/s (functional model)")
+    emit_json("dispatch", metrics={
+        "onehot_mevents_per_s": N / us_base,
+        "sort_mevents_per_s": N / us_sort,
+        "speedup_sort_vs_onehot": speedup,
+        "combine_gb_per_s": gb / (us2 / 1e6),
+        "pallas_interpret_mevents_per_s": N / us3,
+    }, params={"n": N, "m": M, "capacity": CAP})
     return speedup
 
 

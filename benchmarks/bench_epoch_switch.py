@@ -5,9 +5,8 @@ events split across members — the paper's acceptance criteria, measured the
 same way (full input/output accounting)."""
 from __future__ import annotations
 
-import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit_json, row
 from repro.core import EpochManager, MemberSpec
 from repro.data.daq import DAQConfig
 from repro.data.pipeline import StreamingPipeline
@@ -43,6 +42,12 @@ def run():
         f"packets={pipe.stats.n_packets} dropped={pipe.stats.n_discarded} "
         f"split_events={split} (paper: 0 loss, 0 splits across 3 epochs)")
     assert pipe.stats.n_discarded == 0 and split == 0
+    emit_json("epoch_switch", metrics={
+        "us_per_packet": dt_us / max(pipe.stats.n_packets, 1),
+        "packets": pipe.stats.n_packets,
+        "dropped": pipe.stats.n_discarded,
+        "split_events": split,
+    }, params={"epochs": 3, "reorder_window": 48})
 
 
 if __name__ == "__main__":

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit_json, row, timeit
 from repro.core import DataPlane, EpochManager, MemberSpec, encode_headers
 from repro.core.calendar import calendar_counts
 
@@ -43,6 +43,12 @@ def run():
     row("fairness_calendar_quota", 0.0,
         f"cn5_slots={cal_counts[5]} others_mean={np.delete(cal_counts, 5).mean():.1f}"
         f" all_filled={int(cal_counts.sum())==512}")
+    emit_json("fairness", metrics={
+        "cn5_ratio": float(cn5_ratio),
+        "max_rel_err": max_rel_err,
+        "cn5_slots": int(cal_counts[5]),
+        "all_filled": bool(int(cal_counts.sum()) == 512),
+    }, params={"n_events": n, "n_members": 10, "cn5_weight": 2.0})
 
 
 if __name__ == "__main__":

@@ -1,0 +1,107 @@
+"""Table: ingest-path throughput — batched segmentation + reassembly vs the
+per-packet host loop (paper §II-C; DESIGN.md §Ingest).
+
+Workload: 4096 events x 8 segments each. The per-packet baseline is the
+reference path (``segment_bundle`` objects + dict-buffer ``Reassembler``);
+the batched path is one ``segment_bundles`` array pass + one sort-based
+``BatchReassembler.push_batch`` per window. Acceptance bar (CI-gated
+alongside the dispatch gate): batched >= 5x the host loop end to end. Also
+reports the vectorized WAN hop (masked gather/permutation over the whole
+batch) which has no per-packet equivalent timing-wise.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_json, row
+from repro.data.daq import EventBundle
+from repro.data.reassembly import BatchReassembler
+from repro.data.segmentation import Reassembler, segment_bundle, segment_bundles
+from repro.data.transport import TransportConfig, WANTransport
+
+N_EVENTS = 4096
+N_SEGS = 8
+MTU_PAYLOAD = 512
+N_DAQS = 2  # events split across DAQs; every bundle still N_SEGS segments
+
+
+def _bundles() -> list[EventBundle]:
+    rng = np.random.default_rng(7)
+    nbytes = N_SEGS * MTU_PAYLOAD  # exactly N_SEGS full segments
+    payload = rng.integers(0, 256, (N_EVENTS, nbytes)).astype(np.uint8)
+    evs = np.cumsum(rng.integers(1, 7, N_EVENTS))
+    ents = rng.integers(0, 1 << 16, N_EVENTS)
+    return [
+        EventBundle(int(evs[i]), int(i % N_DAQS), int(ents[i]), payload[i])
+        for i in range(N_EVENTS)
+    ]
+
+
+def _best_of(fn, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run():
+    bundles = _bundles()
+    n_packets = N_EVENTS * N_SEGS
+
+    # -- per-packet host loop (reference baseline) ----------------------------
+    def loop_path():
+        segs = []
+        for b in bundles:
+            segs.extend(segment_bundle(b, MTU_PAYLOAD))
+        ra = Reassembler()
+        for s in segs:
+            ra.push(s)
+        assert len(ra.completed) == N_EVENTS
+
+    dt_loop = _best_of(loop_path)
+    row("ingest_perpacket_loop", dt_loop * 1e6 / n_packets,
+        f"{n_packets/dt_loop:.0f} seg/s host loop "
+        f"({N_EVENTS} events x {N_SEGS} segs)")
+
+    # -- batched path ---------------------------------------------------------
+    def batched_path():
+        bra = BatchReassembler(MTU_PAYLOAD)
+        done = bra.push_batch(segment_bundles(bundles, MTU_PAYLOAD))
+        assert len(done) == N_EVENTS
+
+    dt_batch = _best_of(batched_path)
+    speedup = dt_loop / max(dt_batch, 1e-12)
+    row("ingest_batched", dt_batch * 1e6 / n_packets,
+        f"{n_packets/dt_batch:.0f} seg/s = {speedup:.2f}x per-packet loop "
+        f"(want >= 5x)")
+
+    # -- vectorized WAN hop ---------------------------------------------------
+    batch = segment_bundles(bundles, MTU_PAYLOAD)
+    wan = WANTransport(TransportConfig(reorder_window=64, loss_prob=0.01,
+                                       duplicate_prob=0.01, seed=7))
+    wan.deliver_batch(batch)  # warm
+    t0 = time.perf_counter()
+    out = wan.deliver_batch(batch)
+    dt_wan = time.perf_counter() - t0
+    row("ingest_wan_batch", dt_wan * 1e6 / n_packets,
+        f"{n_packets/dt_wan:.0f} seg/s loss/dup/reorder as one permutation "
+        f"({len(out)} delivered)")
+
+    emit_json("ingest", metrics={
+        "perpacket_seg_per_s": n_packets / dt_loop,
+        "batched_seg_per_s": n_packets / dt_batch,
+        "wan_seg_per_s": n_packets / dt_wan,
+        "speedup_batched_vs_loop": speedup,
+    }, params={
+        "n_events": N_EVENTS, "n_segs": N_SEGS,
+        "mtu_payload": MTU_PAYLOAD, "n_daqs": N_DAQS,
+    })
+    return speedup
+
+
+if __name__ == "__main__":
+    print(f"speedup: {run():.2f}x")

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import os
 
-from benchmarks.common import row
+from benchmarks.common import emit_json, row
 from repro.analysis import roofline as RL
 
 ART_DIR = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
@@ -15,8 +15,11 @@ def run():
     if not os.path.isdir(ART_DIR):
         row("roofline", 0.0, f"no artifacts under {ART_DIR}; run "
             "`python -m repro.launch.dryrun --all --mesh both` first")
+        emit_json("roofline", metrics={"n_cells": 0},
+                  params={"artifacts_dir": ART_DIR})
         return
     arts = [a for a in RL.load_artifacts(ART_DIR) if "skipped" not in a]
+    cells = {}
     for a in sorted(arts, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
         r = RL.analyze(a)
         name = f"roofline_{r.arch}_{r.shape}_{r.mesh}"
@@ -26,6 +29,11 @@ def run():
             f"bottleneck={r.bottleneck} util={r.hw_utilization:.3f} "
             f"compute_s={r.compute_s:.4g} memory_s={r.memory_s:.4g} "
             f"collective_s={r.collective_s:.4g}")
+        cells[name] = {"step_time_us": r.step_time_s * 1e6,
+                       "bottleneck": r.bottleneck,
+                       "utilization": r.hw_utilization}
+    emit_json("roofline", metrics={"n_cells": len(cells), **cells},
+              params={"artifacts_dir": ART_DIR})
 
 
 if __name__ == "__main__":

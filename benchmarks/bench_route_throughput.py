@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit_json, row, timeit
 from repro.core import DataPlane, EpochManager, MemberSpec, encode_headers
 from repro.core.instance import VirtualLoadBalancer
 
@@ -62,6 +62,14 @@ def run():
                  iters=3)
     row("route_throughput_pallas_interpret", us2,
         f"{N_PACKETS/(us2/1e6)/1e6:.3f} Mpps (functional model on CPU)")
+
+    emit_json("route_throughput", metrics={
+        "jnp_mpps": N_PACKETS / us,
+        "jnp_gbps_9kb": gbps,
+        "fused_4instance_mpps": N_PACKETS / us_mi,
+        "pallas_interpret_mpps": N_PACKETS / us2,
+    }, params={"n_packets": N_PACKETS, "packet_bytes": PACKET_BYTES,
+               "n_instances": 4})
 
 
 if __name__ == "__main__":

@@ -1,7 +1,12 @@
 """Shared benchmark utilities. Every bench prints ``name,us_per_call,derived``
-CSV rows (derived = the paper-comparable figure)."""
+CSV rows (derived = the paper-comparable figure) and emits a machine-readable
+``BENCH_<name>.json`` next to them (``emit_json``) so CI can upload the whole
+set as workflow artifacts and track the trend run over run.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 
@@ -22,3 +27,25 @@ def row(name: str, us: float, derived: str) -> str:
     line = f"{name},{us:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def emit_json(bench: str, metrics: dict, params: dict | None = None) -> str:
+    """Write ``BENCH_<bench>.json`` into ``$BENCH_DIR`` (default: CWD).
+
+    ``metrics`` holds the paper-comparable figures (ops/s, speedups, …);
+    ``params`` the workload shape that produced them. CI uploads these as
+    artifacts and ``benchmarks/trend.py`` renders the table.
+    """
+    out_dir = os.environ.get("BENCH_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    payload = {
+        "bench": bench,
+        "unix_time": round(time.time(), 1),
+        "metrics": metrics,
+        "params": params or {},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    return path

@@ -1,0 +1,69 @@
+"""Render the BENCH_*.json artifacts as a trend table.
+
+Each bench emits ``BENCH_<name>.json`` (benchmarks/common.emit_json). CI
+uploads them as workflow artifacts, so the run-over-run trajectory lives in
+the artifact history; this script prints one directory's snapshot — or, given
+several directories (e.g. a previous run's downloaded artifacts next to the
+current ones), a side-by-side table with the relative change.
+
+    python -m benchmarks.trend bench-out [previous-bench-out]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_dir(d: str) -> dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(d, "BENCH_*.json"))):
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+            out[rec.get("bench", os.path.basename(path))] = rec
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping {path}: {e}", file=sys.stderr)
+    return out
+
+
+def fmt(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:,.2f}" if abs(v) >= 0.01 else f"{v:.3g}"
+    return str(v)
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    cur_dir = argv[0] if argv else "."
+    prev_dir = argv[1] if len(argv) > 1 else None
+    cur = load_dir(cur_dir)
+    prev = load_dir(prev_dir) if prev_dir else {}
+    if not cur:
+        print(f"no BENCH_*.json under {cur_dir}")
+        return 1
+    rows = []
+    for bench, rec in sorted(cur.items()):
+        for metric, value in sorted(rec.get("metrics", {}).items()):
+            if not isinstance(value, (int, float)) or isinstance(value, bool):
+                continue
+            delta = ""
+            pv = prev.get(bench, {}).get("metrics", {}).get(metric)
+            if isinstance(pv, (int, float)) and pv:
+                delta = f"{(value - pv) / abs(pv) * 100:+.1f}%"
+            rows.append((bench, metric, fmt(value), delta))
+    w0 = max(len(r[0]) for r in rows)
+    w1 = max(len(r[1]) for r in rows)
+    w2 = max(len(r[2]) for r in rows)
+    print(f"{'bench':<{w0}}  {'metric':<{w1}}  {'value':>{w2}}  trend")
+    print("-" * (w0 + w1 + w2 + 12))
+    for b, m, v, d in rows:
+        print(f"{b:<{w0}}  {m:<{w1}}  {v:>{w2}}  {d}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,233 @@
+"""Closed-loop scenario driver: the full paper loop on one host.
+
+    DAQ triggers -> segmentation -> WAN (loss/dup/reorder) -> LB route
+      -> per-member batched reassembly -> telemetry -> CP reweight
+      -> hit-less epoch switch -> back around.
+
+Every stage is the batched production path (DESIGN.md §Ingest): one
+``segment_bundles`` pass, one ``deliver_batch`` permutation, one
+``DataPlane.route`` device call and one sort-based reassembly plan per
+member per step. The control plane consumes *real* incomplete-buffer
+backlog (``TelemetryHub.report_ingest``) — not synthetic fill numbers.
+
+Scenarios (``--scenario``):
+  baseline   clean WAN, static membership
+  loss       packet loss -> incomplete buffers -> timeout accounting
+  reorder    deep reorder window, duplicates constrained to follow originals
+  straggler  one member reports 4x step time; CP must shed its weight
+  elastic    members join at 1/3 and leave at 2/3 of the run
+
+Exits non-zero if an invariant breaks: an event split across members, a
+corrupt (non-byte-identical) bundle, or unaccounted segments.
+
+    PYTHONPATH=src python scripts/run_closed_loop.py --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core import EpochManager, MemberSpec
+from repro.core.control_plane import LoadBalancerControlPlane
+from repro.core.dataplane import DataPlaneCache
+from repro.data.daq import DAQConfig, DAQFleet
+from repro.data.segmentation import group_rows, segment_bundles
+from repro.data.transport import TransportConfig, WANTransport
+from repro.telemetry.metrics import TelemetryHub
+
+SCENARIOS = ("baseline", "loss", "reorder", "straggler", "elastic")
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--scenario", choices=SCENARIOS, default="baseline")
+    ap.add_argument("--triggers-per-step", type=int, default=2)
+    ap.add_argument("--n-members", type=int, default=6)
+    ap.add_argument("--n-daqs", type=int, default=3)
+    ap.add_argument("--mean-bundle-bytes", type=int, default=12_000)
+    ap.add_argument("--mtu-payload", type=int, default=2048)
+    ap.add_argument("--loss", type=float, default=None,
+                    help="override the scenario's loss probability")
+    ap.add_argument("--dup", type=float, default=None)
+    ap.add_argument("--reorder-window", type=int, default=None)
+    ap.add_argument("--reweight-every", type=int, default=5)
+    ap.add_argument("--timeout-windows", type=int, default=4)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, help="write the summary here")
+    return ap.parse_args(argv)
+
+
+def scenario_transport(args) -> TransportConfig:
+    loss, dup, window = 0.0, 0.0, 16
+    if args.scenario == "loss":
+        loss, dup = 0.05, 0.02
+    elif args.scenario == "reorder":
+        dup, window = 0.05, 256
+    cfg = TransportConfig(
+        reorder_window=window if args.reorder_window is None else args.reorder_window,
+        loss_prob=loss if args.loss is None else args.loss,
+        duplicate_prob=dup if args.dup is None else args.dup,
+        seed=args.seed,
+    )
+    return cfg
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    t_start = time.perf_counter()
+
+    em = EpochManager(max_members=max(64, 4 * args.n_members))
+    cp = LoadBalancerControlPlane(em)
+    # Event numbers advance ~4 per trigger; place epoch boundaries a couple
+    # of steps out so reconfigurations take effect within the run.
+    cp.policy.epoch_horizon = max(16, 8 * args.triggers_per_step)
+    members = {i: MemberSpec(node_id=i, lane_bits=1)
+               for i in range(args.n_members)}
+    cp.start(members)
+    hub = TelemetryHub(queue_capacity=16)
+    fleet = DAQFleet(DAQConfig(
+        n_daqs=args.n_daqs, seq_len=32,
+        mean_bundle_bytes=args.mean_bundle_bytes, seed=args.seed))
+    wan = WANTransport(scenario_transport(args))
+
+    dp_cache = DataPlaneCache(em, backend=args.backend)
+
+    reassemblers: dict[int, object] = {}
+    reported_timeouts: dict[int, int] = defaultdict(int)
+
+    def reassembler(member: int):
+        if member not in reassemblers:
+            reassemblers[member] = dp_cache.get().make_reassembler(
+                mtu_payload=args.mtu_payload,
+                timeout_windows=args.timeout_windows)
+        return reassemblers[member]
+
+    straggler = 0 if args.scenario == "straggler" else None
+    event_members: dict[int, set[int]] = defaultdict(set)
+    sent_bundles = 0
+    completed = 0
+    corrupt = 0
+    discarded = 0
+    epoch_switches = 0
+    joined: list[int] = []
+    removed: list[int] = []
+
+    for step in range(args.steps):
+        # -- elastic membership ------------------------------------------------
+        if args.scenario == "elastic":
+            if step == args.steps // 3 and not joined:
+                new_ids = [max(cp.members) + 1 + k for k in range(2)]
+                cp.add_members({i: MemberSpec(node_id=i, lane_bits=1)
+                                for i in new_ids})
+                cp.schedule_epoch(fleet.event_number)
+                joined = new_ids
+            if step == (2 * args.steps) // 3 and not removed:
+                removed = [min(members)]
+                cp.mark_failed(removed)
+                cp.schedule_epoch(fleet.event_number)
+
+        # -- one ingest window -------------------------------------------------
+        bundles = fleet.bundle_window(args.triggers_per_step)
+        sent_bundles += len(bundles)
+        expected = {(b.event_number, b.daq_id): b.payload for b in bundles}
+        batch = segment_bundles(bundles, args.mtu_payload)
+        arrived = wan.deliver_batch(batch)
+        if len(arrived) == 0:
+            continue
+        member, _node, _lane, valid = dp_cache.get().route_window(arrived)
+        discarded += int((~valid).sum())
+        for ev, m in zip(arrived.event_number[valid].tolist(),
+                         member[valid].tolist()):
+            event_members[ev].add(m)
+
+        # -- per-member batched reassembly (one grouping pass) ----------------
+        rows_ok = np.flatnonzero(valid)
+        mem_ids, groups = group_rows(member[rows_ok])
+        for m, grp in zip(mem_ids.tolist(), groups):
+            sel = rows_ok[grp]
+            ra = reassembler(m)
+            done = ra.push_batch(arrived.take(sel))
+            completed += len(done)
+            for key, payload in ra.drain_completed():
+                want = expected.get(key)
+                if want is not None and not np.array_equal(payload, want):
+                    corrupt += 1
+            # Synthetic processing-cost model: unit cost per segment, with
+            # the straggler running 4x slow — what the CP must detect.
+            step_time = 1e-3 * max(len(sel), 1) \
+                * (4.0 if m == straggler else 1.0)
+            backlog = ra.n_incomplete  # one unique() pass, reported twice
+            hub.report_step(m, step_time=step_time,
+                            backlog=backlog, processed=len(done))
+            new_timeouts = ra.stats.n_timed_out_groups - reported_timeouts[m]
+            reported_timeouts[m] = ra.stats.n_timed_out_groups
+            hub.report_ingest(m, pending=backlog,
+                              completed=len(done), timed_out=new_timeouts)
+
+        # -- control loop ------------------------------------------------------
+        if args.reweight_every and (step + 1) % args.reweight_every == 0:
+            eid = cp.feedback(hub.snapshot(), fleet.event_number)
+            if eid is not None:
+                epoch_switches += 1
+            cp.garbage_collect(fleet.event_number)
+
+    # -- audit ----------------------------------------------------------------
+    split_events = sum(1 for ms in event_members.values() if len(ms) > 1)
+    pending = sum(ra.n_incomplete for ra in reassemblers.values())
+    timed_out = sum(ra.stats.n_timed_out_groups for ra in reassemblers.values())
+    dups = sum(ra.stats.n_duplicate for ra in reassemblers.values())
+    summary = {
+        "scenario": args.scenario,
+        "steps": args.steps,
+        "bundles_sent": sent_bundles,
+        "bundles_completed": completed,
+        "bundles_pending": pending,
+        "bundles_timed_out": timed_out,
+        "segments_lost": wan.n_lost,
+        "segments_duplicated": wan.n_dup,
+        "duplicates_absorbed": dups,
+        "packets_discarded": discarded,
+        "split_events": split_events,
+        "corrupt_bundles": corrupt,
+        "epoch_switches": epoch_switches,
+        "final_weights": {str(k): round(v, 4) for k, v in cp.weights.items()},
+        "members_joined": joined,
+        "members_removed": removed,
+        "wall_s": round(time.perf_counter() - t_start, 3),
+    }
+    violations = []
+    if split_events:
+        violations.append(f"{split_events} events split across members")
+    if corrupt:
+        violations.append(f"{corrupt} corrupt bundles")
+    if completed + pending + timed_out < sent_bundles and wan.n_lost == 0:
+        violations.append("bundles unaccounted with zero loss")
+    if straggler is not None and args.steps >= 20:
+        w = cp.weights.get(straggler, 1.0)
+        if w >= 1.0:
+            violations.append(f"straggler weight not shed (w={w:.2f})")
+    if joined:
+        served = {m for ms in event_members.values() for m in ms}
+        if not set(joined) & served:
+            violations.append("joined members received no traffic")
+    summary["violations"] = violations
+
+    print(json.dumps(summary, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+    if violations:
+        print("FAILED: " + "; ".join(violations), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -55,13 +55,16 @@ class LoadBalancerControlPlane:
         self._integral: dict[int, float] = {}
         self.members: dict[int, MemberSpec] = {}
         self.gc_skipped: list[tuple[int, str]] = []  # last sweep's (epoch_id, reason)
+        self._scheduled_weights: dict[int, float] = {}  # as of the last epoch
 
     # -- lifecycle -----------------------------------------------------------
     def start(self, members: dict[int, MemberSpec], weights: Optional[dict] = None) -> int:
         self.members = dict(members)
         self.weights = {m: 1.0 for m in members} if weights is None else dict(weights)
         self._integral = {m: 0.0 for m in members}
-        return self.manager.initialize(self.members, self.weights)
+        eid = self.manager.initialize(self.members, self.weights)
+        self._scheduled_weights = dict(self.weights)
+        return eid
 
     # -- feedback ------------------------------------------------------------
     def update_weights(self, telemetry: dict[int, MemberTelemetry]) -> dict[int, float]:
@@ -92,6 +95,44 @@ class LoadBalancerControlPlane:
                                          p.min_weight, p.max_weight))
         self.weights = new
         return new
+
+    def feedback(self, telemetry: dict[int, MemberTelemetry],
+                 current_event: int,
+                 reweight_threshold: float = 0.05) -> Optional[int]:
+        """One closed-loop tick: PI-update the weights from telemetry and, if
+        the result differs materially from what the *live epoch* was
+        scheduled with (membership delta, a member going to zero / coming
+        back, or a relative weight change above ``reweight_threshold``),
+        schedule a hit-less epoch switch. Returns the new epoch id, or None
+        when the weighting was left in place (no pointless reconfigurations —
+        every epoch switch costs calendar rows until the old epoch quiesces).
+
+        Hysteresis: while the previously scheduled boundary is still ahead of
+        the traffic (the switch hasn't taken effect), no new epoch is
+        scheduled — rescheduling before the last reconfiguration even
+        activates would only stack up undrained future epochs and exhaust
+        the calendar rows (paper §III-C: reconfigure, *wait to quiesce*,
+        then reconfigure again).
+        """
+        cur = self.manager.records.get(self.manager.current_epoch)
+        if cur is not None and current_event < cur.start_event:
+            self.update_weights(telemetry)  # keep integrating telemetry
+            return None
+        sched = self._scheduled_weights
+        new = self.update_weights(telemetry)
+        changed = set(sched) != set(new)
+        if not changed:
+            for mid, w in new.items():
+                sw = sched.get(mid, 0.0)
+                if (w == 0.0) != (sw == 0.0):
+                    changed = True
+                    break
+                if sw > 0 and abs(w - sw) / sw > reweight_threshold:
+                    changed = True
+                    break
+        if not changed:
+            return None
+        return self.schedule_epoch(current_event)
 
     # -- elastic membership ----------------------------------------------------
     def add_members(self, members: dict[int, MemberSpec], weight: float = 1.0) -> None:
@@ -152,4 +193,6 @@ class LoadBalancerControlPlane:
         live_w = {m: self.weights[m] for m in live}
         if not live:
             raise RuntimeError("no healthy members to schedule")
-        return self.manager.reconfigure(live, live_w, boundary)
+        eid = self.manager.reconfigure(live, live_w, boundary)
+        self._scheduled_weights = dict(self.weights)
+        return eid

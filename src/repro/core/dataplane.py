@@ -11,6 +11,9 @@ instances stacked on a leading dim) and exposes
     plan(member)            -> (pos, counts)  sort-based dispatch plan
     dispatch(...)           -> per-member packed buffers + drop accounting
     redistribute(mesh, ...) -> all_to_all exchange fn (shard_map)
+    segment(bundles)        -> PacketBatch  (vectorized segmentation §II-C)
+    reassembly_plan(...)    -> sort-based completion detection (DESIGN §Ingest)
+    make_reassembler(...)   -> stateful batched CN-side reassembler
 
 with a selectable backend:
 
@@ -131,6 +134,28 @@ class DataPlane:
         return _router.route(self.tables, f["event_hi"], f["event_lo"],
                              f["entropy"], header_words=w)
 
+    def route_window(self, batch, instance_id=None):
+        """Route a host-side ``PacketBatch`` arrival window.
+
+        Pads the window to a power of two so window-size jitter doesn't grow
+        the jit cache; padding rows carry a zero magic and fail header
+        validation, so they can never alias a real packet. Returns host
+        ``(member, node, lane, valid)`` arrays sliced back to the window.
+        """
+        from repro.data.segmentation import next_pow2
+
+        n = len(batch)
+        words = np.zeros((next_pow2(n), 4), np.uint32)
+        words[:n] = batch.headers
+        iid = None
+        if instance_id is not None:
+            iid = np.zeros((words.shape[0],), np.int32)
+            iid[:n] = instance_id
+            iid = jnp.asarray(iid)
+        r = self.route(jnp.asarray(words), iid)
+        return (np.asarray(r.member)[:n], np.asarray(r.node)[:n],
+                np.asarray(r.lane)[:n], np.asarray(r.valid)[:n].astype(bool))
+
     def route_events(self, event_numbers, entropy, instance_id=None) -> Route:
         """Route host-side events (uint64 numbers + entropy) in one call.
 
@@ -174,6 +199,72 @@ class DataPlane:
     def redistribute(self, mesh, axis_names, capacity_per_src: int):
         """Build the shard_map all_to_all exchange (LB -> CN delivery)."""
         return _router.make_redistribute(mesh, axis_names, capacity_per_src)
+
+    # -- ingest (segmentation & reassembly, paper §II-C) ----------------------
+    @staticmethod
+    def segment(bundles, mtu_payload: Optional[int] = None):
+        """Segment a bundle batch into a PacketBatch (one vectorized pass).
+
+        Host-side by construction (DAQ bundles are host bytes); the LB does
+        not participate in segmentation, but the facade is the one ingest
+        entry point so callers never touch the layout directly.
+        """
+        from repro.data import segmentation as _seg
+
+        mtu = _seg.DEFAULT_MTU_PAYLOAD if mtu_payload is None else mtu_payload
+        return _seg.segment_bundles(bundles, mtu)
+
+    def reassembly_plan(self, ev_hi, ev_lo, daq, seg_index, n_segs, valid):
+        """Sort-based reassembly program for one window (same backend switch
+        as routing: jnp reference or the Pallas seg-mask kernel)."""
+        from repro.data import reassembly as _ra
+
+        backend, interpret = self._resolved()
+        return _ra.reassembly_plan(ev_hi, ev_lo, daq, seg_index, n_segs,
+                                   valid, backend=backend, interpret=interpret)
+
+    def make_reassembler(self, mtu_payload: Optional[int] = None,
+                         timeout_windows: Optional[int] = None,
+                         device_plan: bool = False):
+        """A stateful BatchReassembler. The CN reassembly daemon is host-side
+        (the LB does not participate, paper §II-C), so the default engine is
+        the numpy plan; ``device_plan=True`` binds it to this plane's jnp /
+        Pallas ``reassembly_plan`` instead (device-resident ingest)."""
+        from repro.data import reassembly as _ra
+        from repro.data import segmentation as _seg
+
+        backend, interpret = self._resolved()
+        mtu = _seg.DEFAULT_MTU_PAYLOAD if mtu_payload is None else mtu_payload
+        return _ra.BatchReassembler(
+            mtu_payload=mtu, timeout_windows=timeout_windows,
+            backend=backend if device_plan else "np", interpret=interpret)
+
+
+class DataPlaneCache:
+    """Audit-log-watermark cache around ``DataPlane.from_manager``.
+
+    Hosts that stream against a mutable ``EpochManager`` (pipeline, serving
+    front door, closed-loop driver) must not recompile tables once per
+    arrival window — only after the control plane actually touches the epoch
+    state. The audit log length is that watermark; this is the one shared
+    implementation of the idiom.
+    """
+
+    def __init__(self, manager, backend: str = "auto",
+                 interpret: Optional[bool] = None):
+        self.manager = manager
+        self.backend = backend
+        self.interpret = interpret
+        self._dp: Optional[DataPlane] = None
+        self._version = -1
+
+    def get(self) -> DataPlane:
+        version = len(self.manager.audit)
+        if self._dp is None or version != self._version:
+            self._dp = DataPlane.from_manager(
+                self.manager, backend=self.backend, interpret=self.interpret)
+            self._version = version
+        return self._dp
 
 
 @functools.partial(jax.jit, static_argnames=("n_members", "capacity"))

@@ -101,6 +101,38 @@ def encode_headers(
     return out
 
 
+def encode_seg_headers(daq_id, seg_index, n_segs, payload_len) -> np.ndarray:
+    """Encode N segmentation headers into uint32[N, 2] words (host side).
+
+    The segmentation header (paper §II-C) is opaque to the LB and rides after
+    the LB header: ``(daq_id u16, seg_index u16, n_segs u16, payload_len u16)``
+    packed as
+
+        word0 = daq_id(16) << 16 | seg_index(16)
+        word1 = n_segs(16) << 16 | payload_len(16)
+    """
+    daq_id = np.asarray(daq_id, np.uint32)
+    seg_index = np.asarray(seg_index, np.uint32)
+    n_segs = np.asarray(n_segs, np.uint32)
+    payload_len = np.asarray(payload_len, np.uint32)
+    out = np.empty(daq_id.shape + (2,), np.uint32)
+    out[..., 0] = ((daq_id & 0xFFFF) << 16) | (seg_index & 0xFFFF)
+    out[..., 1] = ((n_segs & 0xFFFF) << 16) | (payload_len & 0xFFFF)
+    return out
+
+
+def decode_seg_headers(words):
+    """Decode seg-header words -> dict of uint32 field arrays (np or jnp)."""
+    w0 = words[..., 0]
+    w1 = words[..., 1]
+    return {
+        "daq_id": (w0 >> 16) & 0xFFFF,
+        "seg_index": w0 & 0xFFFF,
+        "n_segs": (w1 >> 16) & 0xFFFF,
+        "payload_len": w1 & 0xFFFF,
+    }
+
+
 def decode_fields(words):
     """Decode header words -> dict of field arrays. Works on jnp or np arrays.
 

@@ -72,3 +72,9 @@ class DAQFleet:
     def stream(self, n_triggers: int) -> Iterator[list[EventBundle]]:
         for _ in range(n_triggers):
             yield self.next_trigger()
+
+    def bundle_window(self, n_triggers: int) -> list[EventBundle]:
+        """One ingest window: all bundles of ``n_triggers`` triggers, flat —
+        the unit the batched segmentation pass (``segment_bundles``) and the
+        WAN ``deliver_batch`` consume (DESIGN.md §Ingest)."""
+        return [b for bs in self.stream(n_triggers) for b in bs]

@@ -3,8 +3,13 @@ route -> per-member receive lanes -> reassembly -> training batches.
 
 This is the host-side of the system (what runs on CN ingest daemons); the
 device-side ingest (all_to_all redistribution inside train_step) consumes
-the batches this pipeline emits. The pipeline is also the test harness for
-the paper's fig. 7 experiments (benchmarks/).
+the batches this pipeline emits. Every stage is batched (DESIGN.md §Ingest):
+one vectorized segmentation pass per trigger window (``segment_bundles``),
+one masked-permutation WAN pass (``WANTransport.deliver_batch``), one
+``DataPlane.route`` device call, and one sort-based reassembly plan per
+receive lane (``BatchReassembler``) — no per-packet Python loop anywhere.
+The pipeline is also the test harness for the paper's fig. 7 experiments
+(benchmarks/).
 """
 from __future__ import annotations
 
@@ -13,10 +18,16 @@ from collections import defaultdict
 
 import numpy as np
 
-from repro.core.dataplane import DataPlane
+from repro.core.dataplane import DataPlane, DataPlaneCache
 from repro.core.epoch import EpochManager
 from repro.data.daq import DAQConfig, DAQFleet
-from repro.data.segmentation import Reassembler, Segment, segment_bundle
+from repro.data.reassembly import BatchReassembler, ReassemblyStats
+from repro.data.segmentation import (
+    DEFAULT_MTU_PAYLOAD,
+    PacketBatch,
+    group_rows,
+    segment_bundles,
+)
 from repro.data.transport import TransportConfig, WANTransport
 
 
@@ -33,58 +44,62 @@ class StreamingPipeline:
     """Drives DAQ traffic through the LB into per-member reassembly lanes."""
 
     def __init__(self, daq_cfg: DAQConfig, transport_cfg: TransportConfig,
-                 manager: EpochManager, backend: str = "auto"):
+                 manager: EpochManager, backend: str = "auto",
+                 mtu_payload: int = DEFAULT_MTU_PAYLOAD,
+                 reassembly_timeout_windows: int | None = None):
         self.fleet = DAQFleet(daq_cfg)
         self.wan = WANTransport(transport_cfg)
         self.manager = manager
         self.backend = backend
-        # lane-indexed reassemblers per member (entropy RSS lanes)
-        self.lanes: dict[tuple[int, int], Reassembler] = defaultdict(Reassembler)
+        self.mtu_payload = mtu_payload
+        self._timeout = reassembly_timeout_windows
+        # lane-indexed batched reassemblers per member (entropy RSS lanes)
+        self.lanes: dict[tuple[int, int], BatchReassembler] = {}
         self.stats = PipelineStats()
         self.routed_log: list[tuple[int, int, int]] = []  # (event, member, lane)
-        self._dp: DataPlane | None = None
-        self._dp_version = -1
+        self._dp_cache = DataPlaneCache(manager, backend=backend)
 
     def _dataplane(self) -> DataPlane:
         """Tables recompile only after the epoch state changes (audit-log
         watermark), not once per arrival window."""
-        version = len(self.manager.audit)
-        if self._dp is None or version != self._dp_version:
-            self._dp = DataPlane.from_manager(self.manager, backend=self.backend)
-            self._dp_version = version
-        return self._dp
+        return self._dp_cache.get()
 
-    def _route_batch(self, segments: list[Segment]):
+    def _lane(self, member: int, lane: int) -> BatchReassembler:
+        key = (member, lane)
+        if key not in self.lanes:
+            self.lanes[key] = self._dataplane().make_reassembler(
+                mtu_payload=self.mtu_payload, timeout_windows=self._timeout)
+        return self.lanes[key]
+
+    def _route_batch(self, batch: PacketBatch):
         """One batched DataPlane call for the whole arrival window."""
-        import jax.numpy as jnp
-        words = jnp.asarray(np.stack([s.lb_words for s in segments]))
-        r = self._dataplane().route(words)
-        return (np.asarray(r.member), np.asarray(r.node),
-                np.asarray(r.lane), np.asarray(r.valid))
+        return self._dataplane().route_window(batch)
 
     def pump(self, n_triggers: int) -> list[np.ndarray]:
         """Run n triggers end to end; returns completed bundle payloads."""
-        segments: list[Segment] = []
-        for bundles in self.fleet.stream(n_triggers):
-            for b in bundles:
-                segments.extend(segment_bundle(b))
-        arrived = self.wan.deliver(segments)
-        if not arrived:
+        bundles = self.fleet.bundle_window(n_triggers)
+        batch = segment_bundles(bundles, self.mtu_payload)
+        arrived = self.wan.deliver_batch(batch)
+        if len(arrived) == 0:
             return []
-        member, node, lane, valid = self._route_batch(arrived)
+        member, _node, lane, valid = self._route_batch(arrived)
+        ok = valid.astype(bool)
+        self.stats.n_packets += len(arrived)
+        self.stats.n_discarded += int((~ok).sum())
+        self.stats.n_routed += int(ok.sum())
+        rows_ok = np.flatnonzero(ok)
+        mm, ll = member[rows_ok], lane[rows_ok]
+        self.routed_log.extend(
+            zip(arrived.event_number[rows_ok].tolist(), mm.tolist(),
+                ll.tolist()))
+        if not len(rows_ok):
+            return []
+        pairs, groups = group_rows(np.stack([mm, ll], axis=1))
         done = []
-        for seg, m, l, ok in zip(arrived, member, lane, valid):
-            self.stats.n_packets += 1
-            if not ok:
-                self.stats.n_discarded += 1
-                continue
-            self.stats.n_routed += 1
-            self.stats.per_member[int(m)] += 1
-            self.stats.per_lane[(int(m), int(l))] += 1
-            self.routed_log.append((seg.event_number, int(m), int(l)))
-            got = self.lanes[(int(m), int(l))].push(seg)
-            if got is not None:
-                done.append(got)
+        for (m, l), grp in zip(pairs.tolist(), groups):
+            self.stats.per_member[m] += len(grp)
+            self.stats.per_lane[(m, l)] += len(grp)
+            done.extend(self._lane(m, l).push_batch(arrived.take(rows_ok[grp])))
         return done
 
     def event_member_map(self) -> dict[int, set[int]]:
@@ -94,6 +109,26 @@ class StreamingPipeline:
         for ev, m, _l in self.routed_log:
             out[ev].add(m)
         return out
+
+    # -- ingest telemetry (feeds the control plane) ---------------------------
+    def ingest_backlog(self) -> dict[int, int]:
+        """Per-member incomplete-buffer backlog across its receive lanes."""
+        out: dict[int, int] = defaultdict(int)
+        for (m, _l), ra in self.lanes.items():
+            out[m] += ra.n_incomplete
+        return dict(out)
+
+    def reassembly_stats(self) -> ReassemblyStats:
+        """Aggregated loss/timeout/duplicate accounting over all lanes."""
+        agg = ReassemblyStats()
+        for ra in self.lanes.values():
+            s = ra.stats
+            agg.n_pushed += s.n_pushed
+            agg.n_duplicate += s.n_duplicate
+            agg.n_completed += s.n_completed
+            agg.n_timed_out_groups += s.n_timed_out_groups
+            agg.n_timed_out_segments += s.n_timed_out_segments
+        return agg
 
 
 def batches_from_bundles(payloads: list[np.ndarray], seq_len: int,

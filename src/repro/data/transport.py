@@ -2,12 +2,28 @@
 loss injection (paper fig. 7b shows exactly this at the LB input: "packet
 serialization and random path delays are built into the traffic generator").
 Unidirectional, no backpressure, no retransmit (paper §I-B.6).
+
+The production path is **batched**: ``deliver_batch`` applies loss as one
+mask, duplication as a masked row copy, and reordering as a single
+jitter-keyed permutation over the whole ``PacketBatch`` — drawn from a
+``jax.random`` PRNG (one fold_in per window), replacing the per-packet
+``rng.random()`` host loop. ``deliver`` keeps the per-packet list form for
+the reference pipeline and tests.
+
+Duplicate ordering: a duplicate models the *same* serialized packet taking a
+second (never earlier) path, so its sort key is the original's key plus a
+strictly non-negative extra delay — a duplicate can never overtake the first
+copy (ties break original-first). The old implementation drew an independent
+jitter for the duplicate, which could deliver the copy *before* its original
+and effectively doubled the reorder window for duplicated packets.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.data.segmentation import PacketBatch
 
 
 @dataclasses.dataclass
@@ -19,28 +35,80 @@ class TransportConfig:
 
 
 class WANTransport:
-    """Applies loss/duplication/reordering to a packet sequence."""
+    """Applies loss/duplication/reordering to a packet sequence.
+
+    ``last_delivery`` exposes per-output-row bookkeeping from the most recent
+    call — ``(src_index, is_dup)`` arrays aligned with the delivered order —
+    so tests can assert the duplicate-follows-original constraint directly.
+    """
 
     def __init__(self, cfg: TransportConfig):
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self.n_lost = 0
         self.n_dup = 0
+        self._window = 0
+        self.last_delivery: tuple[np.ndarray, np.ndarray] | None = None
 
+    # -- batched path (one vectorized pass per window) ------------------------
+    def deliver_batch(self, batch: PacketBatch) -> PacketBatch:
+        """Loss mask + duplicate copy + jitter-keyed permutation, one pass."""
+        import jax
+        import jax.numpy as jnp
+
+        n = len(batch)
+        if n == 0:
+            self.last_delivery = (np.empty((0,), np.int64),
+                                  np.zeros((0,), bool))
+            return batch
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                 self._window)
+        self._window += 1
+        k_loss, k_dup, k_jit, k_extra = jax.random.split(key, 4)
+        keep = np.asarray(
+            jax.random.uniform(k_loss, (n,)) >= self.cfg.loss_prob)
+        dup = keep & np.asarray(
+            jax.random.uniform(k_dup, (n,)) < self.cfg.duplicate_prob)
+        w = float(max(self.cfg.reorder_window, 0))
+        idx = jnp.arange(n, dtype=jnp.float32)
+        jitter = jax.random.uniform(k_jit, (n,), minval=0.0, maxval=w) if w else 0.0
+        extra = jax.random.uniform(k_extra, (n,), minval=0.0, maxval=w) if w else 0.0
+        key_orig = np.asarray(idx + jitter, np.float64)
+        key_dup = np.asarray(idx + jitter + extra, np.float64)
+
+        self.n_lost += int((~keep).sum())
+        self.n_dup += int(dup.sum())
+        src = np.concatenate([np.flatnonzero(keep), np.flatnonzero(dup)])
+        is_dup = np.concatenate(
+            [np.zeros(int(keep.sum()), bool), np.ones(int(dup.sum()), bool)])
+        keys = np.concatenate([key_orig[keep], key_dup[dup]])
+        # lexsort: primary = delay key, tie-break originals before duplicates.
+        order = np.lexsort((is_dup, keys))
+        self.last_delivery = (src[order], is_dup[order])
+        return batch.take(src[order])
+
+    # -- per-packet reference path --------------------------------------------
     def deliver(self, packets: list) -> list:
-        out = []
-        for p in packets:
+        out_src, out_dup = [], []
+        for i, _p in enumerate(packets):
             if self.rng.random() < self.cfg.loss_prob:
                 self.n_lost += 1
                 continue
-            out.append(p)
+            out_src.append(i)
+            out_dup.append(False)
             if self.rng.random() < self.cfg.duplicate_prob:
-                out.append(p)
+                out_src.append(i)
+                out_dup.append(True)
                 self.n_dup += 1
-        if len(out) > 1 and self.cfg.reorder_window > 0:
-            # bounded displacement: sort by (index + jitter)
-            idx = np.arange(len(out), dtype=np.float64)
-            jitter = self.rng.uniform(0, self.cfg.reorder_window, len(out))
-            order = np.argsort(idx + jitter, kind="stable")
-            out = [out[i] for i in order]
-        return out
+        src = np.asarray(out_src, np.int64)
+        is_dup = np.asarray(out_dup, bool)
+        keys = src.astype(np.float64)
+        if len(src) > 1 and self.cfg.reorder_window > 0:
+            # bounded displacement: sort by (index + jitter); a duplicate's
+            # key adds a non-negative extra delay on top of its original's.
+            jitter = self.rng.uniform(0, self.cfg.reorder_window, len(packets))
+            extra = self.rng.uniform(0, self.cfg.reorder_window, len(packets))
+            keys = src + jitter[src] + np.where(is_dup, extra[src], 0.0)
+        order = np.lexsort((is_dup, keys))
+        self.last_delivery = (src[order], is_dup[order])
+        return [packets[i] for i in src[order]]

@@ -1,4 +1,5 @@
 # Pallas TPU kernels for the data-plane hot spots (routing, dispatch
-# planning, flash attention) plus their pure-jnp oracles in ref.py. The
-# routing/dispatch kernels are reached through core/dataplane.DataPlane
-# (backend="pallas"); nothing else calls them directly.
+# planning, reassembly group/dup masks, flash attention) plus their pure-jnp
+# oracles in ref.py. The routing/dispatch/reassembly kernels are reached
+# through core/dataplane.DataPlane (backend="pallas"); nothing else calls
+# them directly.

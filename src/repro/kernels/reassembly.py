@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: reassembly group/duplicate masks over sorted segments.
+
+The batched reassembler (repro/data/reassembly.py) key-sorts a window of
+segments by ``(event_hi, event_lo, daq_id, seg_index, arrival)``. On the
+sorted columns, group boundaries and duplicate detection are a pure
+previous-row comparison:
+
+    new_group[i] = valid[i] and (ev, daq)[i] != (ev, daq)[i-1]
+    dup[i]       = valid[i] and (ev, daq)[i] == (ev, daq)[i-1]
+                            and seg_index[i] == seg_index[i-1]
+
+Kernel structure mirrors kernels/dispatch.py: grid over 1-D row blocks (TPU
+grid steps run sequentially) with a VMEM scratch row carrying the previous
+block's last row across blocks. Row 0 compares against an invalid sentinel.
+The pure-jnp oracle is ``kernels/ref.seg_masks_ref``; both are reached
+through ``repro.data.reassembly.reassembly_plan`` (backend switch), nothing
+else calls them directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_N = 1024
+
+
+def _mask_kernel(valid_ref, hi_ref, lo_ref, daq_ref, seg_ref,
+                 ng_out, dup_out, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)  # prev_valid = 0 sentinel
+
+    valid = valid_ref[:]  # u32[B] (0/1)
+    hi = hi_ref[:]
+    lo = lo_ref[:]
+    daq = daq_ref[:]
+    seg = seg_ref[:]
+    carry = carry_ref[0, :]  # u32[8]: [valid, hi, lo, daq, seg, 0, 0, 0]
+
+    def prev(x, c):
+        return jnp.concatenate([c[None], x[:-1]])
+
+    p_valid = prev(valid, carry[0])
+    same = ((p_valid > 0)
+            & (hi == prev(hi, carry[1]))
+            & (lo == prev(lo, carry[2]))
+            & (daq == prev(daq, carry[3])))
+    ok = valid > 0
+    ng_out[:] = (ok & ~same).astype(jnp.int32)
+    dup_out[:] = (ok & same & (seg == prev(seg, carry[4]))).astype(jnp.int32)
+    carry_ref[0, 0] = valid[-1]
+    carry_ref[0, 1] = hi[-1]
+    carry_ref[0, 2] = lo[-1]
+    carry_ref[0, 3] = daq[-1]
+    carry_ref[0, 4] = seg[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def seg_masks(valid, ev_hi, ev_lo, daq, seg_index, *,
+              block_n: int = BLOCK_N, interpret: bool = True):
+    """(new_group, dup) int32[N] masks over *sorted* segment columns."""
+    n = valid.shape[0]
+    n_pad = max(-(-n // block_n) * block_n, block_n)
+
+    def pad(x):
+        return jnp.zeros((n_pad,), jnp.uint32).at[:n].set(x.astype(jnp.uint32))
+
+    grid = (n_pad // block_n,)
+    spec = pl.BlockSpec((block_n,), lambda i: (i,))
+    ng, dup = pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[spec] * 5,
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, 8), jnp.uint32)],
+        interpret=interpret,
+    )(pad(valid), pad(ev_hi), pad(ev_lo), pad(daq), pad(seg_index))
+    return ng[:n], dup[:n]

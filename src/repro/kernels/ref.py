@@ -53,6 +53,25 @@ def dispatch_plan_ref(member, *, n_members: int):
     return pos.astype(jnp.int32), counts.astype(jnp.int32)
 
 
+def seg_masks_ref(valid, ev_hi, ev_lo, daq, seg_index):
+    """Oracle for kernels/reassembly.seg_masks (sorted-column row compare)."""
+    valid = valid.astype(jnp.uint32)
+    hi = ev_hi.astype(jnp.uint32)
+    lo = ev_lo.astype(jnp.uint32)
+    daq = daq.astype(jnp.uint32)
+    seg = seg_index.astype(jnp.uint32)
+
+    def prev(x):
+        return jnp.concatenate([jnp.zeros((1,), x.dtype), x[:-1]])
+
+    same = ((prev(valid) > 0) & (hi == prev(hi)) & (lo == prev(lo))
+            & (daq == prev(daq)))
+    ok = valid > 0
+    new_group = (ok & ~same).astype(jnp.int32)
+    dup = (ok & same & (seg == prev(seg))).astype(jnp.int32)
+    return new_group, dup
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
     """Oracle for kernels/flash_attention: plain softmax attention.
 

@@ -25,9 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.control_plane import LoadBalancerControlPlane
-from repro.core.dataplane import DataPlane
+from repro.core.dataplane import DataPlane, DataPlaneCache
 from repro.core.epoch import EpochManager
 from repro.core.tables import MemberSpec
+from repro.telemetry.metrics import TelemetryHub
 from repro.models import model as M
 from repro.models.config import ModelConfig
 
@@ -53,6 +54,7 @@ class ServeConfig:
     max_len: int = 256
     greedy: bool = True
     backend: str = "auto"        # data-plane backend (DataPlane)
+    rebalance_every: int = 0     # ticks between control-plane reweights (0=off)
 
 
 class ServingEngine:
@@ -83,9 +85,13 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, tok, st: M.decode_step(p, tok, st, self.mcfg))
         self.stats = {"routed": {}, "completed": 0, "rejected": 0,
-                      "route_calls": 0}
-        self._dp: Optional[DataPlane] = None
-        self._dp_version = -1
+                      "route_calls": 0, "rebalances": 0}
+        self._dp_cache = DataPlaneCache(self.manager, backend=serve_cfg.backend)
+        # Telemetry feedback loop: per-replica decode-step time + queue depth
+        # feed the control plane exactly like CN ingest daemons do
+        # (DESIGN.md §Ingest); a reweight reprograms the calendar hit-lessly.
+        self.hub = TelemetryHub(queue_capacity=max(2 * self.n_lanes, 1))
+        self._tick = 0
 
     # -- front door -------------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
@@ -103,12 +109,7 @@ class ServingEngine:
     def _dataplane(self) -> DataPlane:
         """Facade over the current tables; recompiled only after the control
         plane touches the epoch state (audit-log watermark)."""
-        version = len(self.manager.audit)
-        if self._dp is None or version != self._dp_version:
-            self._dp = DataPlane.from_manager(self.manager,
-                                              backend=self.scfg.backend)
-            self._dp_version = version
-        return self._dp
+        return self._dp_cache.get()
 
     def _route_pending(self) -> None:
         """Route every accumulated submission in ONE device call."""
@@ -166,20 +167,34 @@ class ServingEngine:
 
     def step(self) -> int:
         """One engine tick: batch-route new submissions (one device call),
-        place them, then one decode step per replica."""
+        place them, one decode step per replica, then report telemetry (and
+        periodically close the control loop with a reweight)."""
+        import time
+
         self._route_pending()
         self._try_place()
         n_active = 0
+        queued = np.zeros((self.scfg.n_replicas,), np.int64)
+        for req in self.queue:
+            queued[req.node] += 1
         for m in range(self.scfg.n_replicas):
             active = [(l, r) for l, r in enumerate(self.slots[m]) if r is not None]
             if not active:
+                # Idle tick: clear the stale busy-tick backlog so a drained
+                # replica's fill can actually decay (only queued work counts).
+                self.hub.report_queue(m, int(queued[m]))
                 continue
             n_active += len(active)
             toks = np.zeros((self.n_lanes,), np.int32)
             for l, r in active:
                 toks[l] = r.output[-1]
+            t0 = time.perf_counter()
             logits, self.states[m] = self._decode(
                 self.params, jnp.asarray(toks), self.states[m])
+            logits = jax.block_until_ready(logits)
+            self.hub.report_step(
+                m, step_time=time.perf_counter() - t0,
+                backlog=int(queued[m]) + len(active), processed=len(active))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for l, r in active:
                 r.output.append(int(nxt[l]))
@@ -187,7 +202,27 @@ class ServingEngine:
                     r.done = True
                     self.slots[m][l] = None
                     self.stats["completed"] += 1
+        self._tick += 1
+        if (self.scfg.rebalance_every
+                and self._tick % self.scfg.rebalance_every == 0):
+            self.rebalance()
         return n_active
+
+    def rebalance(self) -> Optional[int]:
+        """Close the loop: telemetry snapshot -> PI reweight -> (maybe) a
+        hit-less epoch switch. In-flight requests keep their member; the
+        next ``_route_pending`` picks up the new tables via the audit-log
+        watermark in ``_dataplane``. Drained epochs are quiesced right away
+        (every event below the routed watermark has already been routed), so
+        repeated reweights never exhaust the calendar rows."""
+        eid = self.cp.feedback(self.hub.snapshot(), current_event=self.next_event)
+        if eid is not None:
+            self.stats["rebalances"] += 1
+        # Watermark: everything below the smallest still-unrouted event
+        # number has been through the data plane already.
+        unrouted = [q.event_number for q in self.unrouted]
+        self.cp.garbage_collect(min(unrouted) if unrouted else self.next_event)
+        return eid
 
     def run_until_done(self, max_ticks: int = 1000) -> None:
         for _ in range(max_ticks):

@@ -2,7 +2,9 @@
 
 Mirrors the real EJ-FAT deployment where CN daemons report receive-queue fill
 and processing rate back to the control plane. Here members are DP workers
-(or serving replicas); fill is estimated from queue depth / step-time EWMAs.
+(or serving replicas); fill is estimated from queue depth / step-time EWMAs
+plus the reassembly incomplete-buffer backlog reported by the ingest lanes
+(``report_ingest`` — see DESIGN.md §Ingest for the feedback wiring).
 """
 from __future__ import annotations
 
@@ -20,6 +22,10 @@ class _MemberStats:
     processed: int = 0
     healthy: bool = True
     last_seen: float = 0.0
+    # ingest-side accounting (reassembly daemons, DESIGN.md §Ingest)
+    ingest_pending: int = 0      # incomplete reassembly buffers (groups)
+    ingest_completed: int = 0
+    ingest_timed_out: int = 0
 
 
 class TelemetryHub:
@@ -40,6 +46,26 @@ class TelemetryHub:
         s.processed += processed
         s.last_seen = time.time()
 
+    def report_queue(self, member_id: int, backlog: int) -> None:
+        """Queue-depth-only report (no step ran this tick — e.g. an idle
+        decode replica). Without it a member's last busy-tick backlog would
+        stick forever and keep its fill high after it drained."""
+        s = self.members[member_id]
+        s.backlog = backlog
+        s.last_seen = time.time()
+
+    def report_ingest(self, member_id: int, pending: int,
+                      completed: int = 0, timed_out: int = 0) -> None:
+        """Reassembly-lane report: ``pending`` incomplete (event, daq)
+        buffers right now (the real receive-queue backlog the paper's CN
+        daemons feed back), plus completion/timeout counters. The pending
+        backlog folds into the member's queue-fill estimate in snapshot()."""
+        s = self.members[member_id]
+        s.ingest_pending = pending
+        s.ingest_completed += completed
+        s.ingest_timed_out += timed_out
+        s.last_seen = time.time()
+
     def report_failure(self, member_id: int) -> None:
         self.members[member_id].healthy = False
 
@@ -54,8 +80,11 @@ class TelemetryHub:
         for mid, s in self.members.items():
             # fill: combination of backlog fraction and relative slowness —
             # a member 2x slower than the fastest behaves like a 2x-full queue.
+            # The backlog is whichever queue is deeper: the decode/work queue
+            # or the reassembly incomplete-buffer backlog (ingest daemons).
+            backlog = max(s.backlog, s.ingest_pending)
             rel = s.ewma_step_time / t_ref if t_ref > 0 else 1.0
-            fill = min(1.0, 0.5 * (s.backlog / max(self.queue_capacity, 1)) +
+            fill = min(1.0, 0.5 * (backlog / max(self.queue_capacity, 1)) +
                        0.5 * (1 - 1 / max(rel, 1e-6)) * 2)
             rate = 1.0 / s.ewma_step_time if s.ewma_step_time > 0 else 1.0
             out[mid] = MemberTelemetry(fill=max(0.0, fill), rate=rate,
