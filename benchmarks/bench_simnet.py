@@ -1,0 +1,104 @@
+"""Table: virtual-time simulator throughput (simulated packets per second).
+
+Two figures:
+
+* ``simnet_core`` — the simulator's *transport core* per window: per-DAQ
+  uplink serialization, the WAN hop (loss/dup/jitter, one permutation),
+  the per-member downlink bank, and the bounded farm-queue scan
+  (``simnet.links`` + ``simnet.queues`` — the code this subsystem adds).
+  Both queue engines (numpy scan and the jitted ``lax.scan``) are timed.
+  **CI gate: >= 100k simulated packets/sec on the batched (np) path.**
+* ``simnet_closed_loop`` — the full scenario loop (DAQ generation,
+  segmentation, routing through ``DataPlane``, reassembly, telemetry, CP
+  feedback). Reported for the trend table; the pre-existing stages have
+  their own gated benches (dispatch, ingest, route_throughput).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_json, row
+from repro.simnet import LinkConfig, Simulator, SimConfig
+from repro.simnet.links import Link, LinkSet
+from repro.simnet.queues import FarmConfig, FarmQueues
+
+N = 16_384          # packets per window
+M = 16              # members
+N_DAQS = 8
+WINDOW_S = 0.02
+MEAN_BYTES = 2048
+
+
+def _core_window(queue_engine: str, n_windows: int = 5) -> float:
+    """Packets/sec through uplinks -> WAN -> downlinks -> farm queues."""
+    rng = np.random.default_rng(0)
+    daq = rng.integers(0, N_DAQS, N).astype(np.int64)
+    member = rng.integers(0, M, N).astype(np.int64)
+    nbytes = np.full((N,), MEAN_BYTES, np.float64)
+
+    uplinks = LinkSet([LinkConfig(rate_Bps=400e6, jitter_s=1e-5, seed=1)
+                       for _ in range(N_DAQS)])
+    wan = Link(LinkConfig(prop_delay_s=1e-3, jitter_s=2e-4, loss_prob=0.01,
+                          duplicate_prob=0.01, seed=2))
+    downlinks = LinkSet([LinkConfig(rate_Bps=400e6, prop_delay_s=5e-5,
+                                    jitter_s=1e-5, seed=3)
+                         for _ in range(M)])
+    farm = FarmQueues(FarmConfig.uniform(M, per_packet_s=1e-7,
+                                         per_byte_s=5e-10, capacity_s=1.0),
+                      backend=queue_engine)
+
+    def one_window(w: int) -> None:
+        t_emit = w * WINDOW_S + np.sort(rng.uniform(0, WINDOW_S, N))
+        t_up, keep_up = uplinks.transit(daq, t_emit, nbytes)
+        rows = np.flatnonzero(keep_up)
+        d = wan.transit(t_up[rows], nbytes[rows])
+        src = rows[d.src]
+        t_cn, keep_dl = downlinks.transit(member[src], d.t_arrive, nbytes[src])
+        rows2 = np.flatnonzero(keep_dl)
+        farm.serve(member[src[rows2]], t_cn[rows2], nbytes[src[rows2]])
+
+    one_window(0)  # warm (jit compile for the jnp engine)
+    t0 = time.perf_counter()
+    for w in range(1, n_windows + 1):
+        one_window(w)
+    dt = time.perf_counter() - t0
+    return n_windows * N / dt
+
+
+def _closed_loop() -> float:
+    cfg = SimConfig(steps=20, triggers_per_step=64, n_daqs=4, n_members=16,
+                    mean_bundle_bytes=12_000)
+    Simulator(cfg).run()  # warm the jit caches
+    r = Simulator(SimConfig(steps=40, triggers_per_step=64, n_daqs=4,
+                            n_members=16, mean_bundle_bytes=12_000)).run()
+    assert not r.violations, r.violations
+    return r.packets_per_sec
+
+
+def run():
+    pps_np = _core_window("np")
+    row("simnet_core_np", 1e6 / pps_np,
+        f"{pps_np:,.0f} simulated pkt/s (links + farm scan, want >= 100k)")
+    pps_jnp = _core_window("jnp")
+    row("simnet_core_jnp", 1e6 / pps_jnp,
+        f"{pps_jnp:,.0f} simulated pkt/s (lax.scan farm engine)")
+    pps_loop = _closed_loop()
+    row("simnet_closed_loop", 1e6 / pps_loop,
+        f"{pps_loop:,.0f} pkt/s full loop (DAQ+route+reassembly+CP)")
+
+    emit_json("simnet", metrics={
+        "core_np_pkts_per_s": pps_np,
+        "core_jnp_pkts_per_s": pps_jnp,
+        "closed_loop_pkts_per_s": pps_loop,
+    }, params={
+        "n_packets_per_window": N, "n_members": M, "n_daqs": N_DAQS,
+        "closed_loop": {"steps": 40, "triggers_per_step": 64, "n_daqs": 4,
+                        "n_members": 16},
+    })
+    return pps_np
+
+
+if __name__ == "__main__":
+    print(f"core path: {run():,.0f} simulated packets/sec")

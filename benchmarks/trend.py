@@ -1,4 +1,4 @@
-"""Render the BENCH_*.json artifacts as a trend table.
+"""Render the BENCH_*.json artifacts as a trend table, and gate regressions.
 
 Each bench emits ``BENCH_<name>.json`` (benchmarks/common.emit_json). CI
 uploads them as workflow artifacts, so the run-over-run trajectory lives in
@@ -7,9 +7,19 @@ several directories (e.g. a previous run's downloaded artifacts next to the
 current ones), a side-by-side table with the relative change.
 
     python -m benchmarks.trend bench-out [previous-bench-out]
+
+``--check`` compares the snapshot against the *committed* baseline
+(``benchmarks/baselines/baselines.json``: curated metrics with explicit
+better-direction and conservative floor/ceiling values — see the README
+there) and exits non-zero if any checked metric regresses more than
+``--threshold`` (default 20%) past its baseline, or if a baselined bench
+didn't produce a JSON at all (a silently vanished bench is a regression):
+
+    python -m benchmarks.trend bench-out --check benchmarks/baselines/baselines.json
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -36,14 +46,58 @@ def fmt(v) -> str:
     return str(v)
 
 
+def check_against_baseline(cur: dict[str, dict], baseline_path: str,
+                           threshold: float) -> list[str]:
+    """Returns a list of human-readable regression strings (empty = pass).
+
+    Baseline entries: ``{bench: {metric: {"value": v, "better": "higher" |
+    "lower"}}}``. A metric regresses when it moves more than ``threshold``
+    (fractional) past the baseline in the *worse* direction; moves in the
+    better direction never fail. A missing bench JSON or metric fails too.
+    """
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    failures = []
+    for bench, metrics in sorted(baseline.items()):
+        rec = cur.get(bench)
+        if rec is None:
+            failures.append(f"{bench}: no BENCH_{bench}.json produced")
+            continue
+        for metric, spec in sorted(metrics.items()):
+            got = rec.get("metrics", {}).get(metric)
+            if not isinstance(got, (int, float)) or isinstance(got, bool):
+                failures.append(f"{bench}.{metric}: missing from the run")
+                continue
+            base = float(spec["value"])
+            higher_better = spec.get("better", "higher") == "higher"
+            if base == 0:
+                # a zero baseline can never flag anything — that's a broken
+                # config, not a pass
+                failures.append(f"{bench}.{metric}: baseline value is 0 "
+                                "(check disabled — fix baselines.json)")
+                continue
+            change = (got - base) / abs(base)
+            regression = -change if higher_better else change
+            if regression > threshold:
+                failures.append(
+                    f"{bench}.{metric}: {fmt(got)} vs baseline {fmt(base)} "
+                    f"({'-' if higher_better else '+'}{regression*100:.1f}%, "
+                    f"allowed {threshold*100:.0f}%)")
+    return failures
+
+
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    cur_dir = argv[0] if argv else "."
-    prev_dir = argv[1] if len(argv) > 1 else None
-    cur = load_dir(cur_dir)
-    prev = load_dir(prev_dir) if prev_dir else {}
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("cur_dir", nargs="?", default=".")
+    ap.add_argument("prev_dir", nargs="?", default=None)
+    ap.add_argument("--check", default=None, metavar="BASELINES_JSON",
+                    help="fail on >threshold regressions vs this baseline")
+    ap.add_argument("--threshold", type=float, default=0.2)
+    args = ap.parse_args(argv)
+    cur = load_dir(args.cur_dir)
+    prev = load_dir(args.prev_dir) if args.prev_dir else {}
     if not cur:
-        print(f"no BENCH_*.json under {cur_dir}")
+        print(f"no BENCH_*.json under {args.cur_dir}")
         return 1
     rows = []
     for bench, rec in sorted(cur.items()):
@@ -62,6 +116,16 @@ def main(argv=None) -> int:
     print("-" * (w0 + w1 + w2 + 12))
     for b, m, v, d in rows:
         print(f"{b:<{w0}}  {m:<{w1}}  {v:>{w2}}  {d}")
+
+    if args.check:
+        failures = check_against_baseline(cur, args.check, args.threshold)
+        if failures:
+            print("\nREGRESSIONS vs committed baseline:", file=sys.stderr)
+            for f_ in failures:
+                print(f"  {f_}", file=sys.stderr)
+            return 1
+        print(f"\nbaseline check OK ({args.check}, "
+              f"threshold {args.threshold*100:.0f}%)")
     return 0
 
 

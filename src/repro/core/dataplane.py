@@ -241,28 +241,43 @@ class DataPlane:
 
 
 class DataPlaneCache:
-    """Audit-log-watermark cache around ``DataPlane.from_manager``.
+    """Audit-log-watermark cache around ``DataPlane.from_manager`` /
+    ``from_instances``.
 
-    Hosts that stream against a mutable ``EpochManager`` (pipeline, serving
-    front door, closed-loop driver) must not recompile tables once per
-    arrival window — only after the control plane actually touches the epoch
-    state. The audit log length is that watermark; this is the one shared
+    Hosts that stream against mutable ``EpochManager``s (pipeline, serving
+    front door, closed-loop and simnet drivers) must not recompile tables
+    once per arrival window — only after a control plane actually touches
+    the epoch state. The audit log length (summed across managers for the
+    stacked multi-instance case) is that watermark; this is the one shared
     implementation of the idiom.
     """
 
     def __init__(self, manager, backend: str = "auto",
                  interpret: Optional[bool] = None):
-        self.manager = manager
+        """``manager``: one EpochManager, or a list of them (one per
+        stacked virtual LB instance)."""
+        self.managers = manager if isinstance(manager, (list, tuple)) \
+            else [manager]
         self.backend = backend
         self.interpret = interpret
         self._dp: Optional[DataPlane] = None
         self._version = -1
 
+    @property
+    def manager(self):
+        return self.managers[0]
+
     def get(self) -> DataPlane:
-        version = len(self.manager.audit)
+        version = sum(len(m.audit) for m in self.managers)
         if self._dp is None or version != self._version:
-            self._dp = DataPlane.from_manager(
-                self.manager, backend=self.backend, interpret=self.interpret)
+            if len(self.managers) > 1:
+                self._dp = DataPlane.from_instances(
+                    self.managers, backend=self.backend,
+                    interpret=self.interpret)
+            else:
+                self._dp = DataPlane.from_manager(
+                    self.managers[0], backend=self.backend,
+                    interpret=self.interpret)
             self._version = version
         return self._dp
 

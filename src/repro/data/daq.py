@@ -34,6 +34,10 @@ class DAQConfig:
     mean_bundle_bytes: int = 24_000  # > 9KB MTU => multiple segments
     seed: int = 0
     timestamp_stride: tuple[int, int] = (1, 7)  # uniform stride range
+    # Prefix payloads with the event's reproducible token sample (the LM
+    # training flow decodes it). Traffic-only consumers (simnet) turn it
+    # off — the per-event token RNG is the one per-trigger host cost.
+    token_payload: bool = True
 
 
 class DAQFleet:
@@ -50,24 +54,7 @@ class DAQFleet:
 
     def next_trigger(self) -> list[EventBundle]:
         """One hardware trigger: every DAQ emits a bundle for this event."""
-        ev = self.event_number
-        lo, hi = self.cfg.timestamp_stride
-        self.event_number += int(self.rng.integers(lo, hi + 1))
-        entropy = int(self.rng.integers(0, 1 << 16))
-        tokens = self.tokens_for_event(ev)
-        out = []
-        for d in range(self.cfg.n_daqs):
-            nbytes = int(self.rng.normal(self.cfg.mean_bundle_bytes,
-                                         self.cfg.mean_bundle_bytes / 8))
-            nbytes = max(1024, nbytes)
-            r = np.random.default_rng((ev << 3) ^ d)
-            payload = r.integers(0, 256, nbytes).astype(np.uint8)
-            # First bytes carry the token payload so CN-side reassembly can
-            # rebuild the training sample.
-            tok_bytes = tokens.astype("<i4").tobytes()
-            payload[: len(tok_bytes)] = np.frombuffer(tok_bytes, np.uint8)
-            out.append(EventBundle(ev, d, entropy, payload))
-        return out
+        return self.bundle_window(1)
 
     def stream(self, n_triggers: int) -> Iterator[list[EventBundle]]:
         for _ in range(n_triggers):
@@ -76,5 +63,40 @@ class DAQFleet:
     def bundle_window(self, n_triggers: int) -> list[EventBundle]:
         """One ingest window: all bundles of ``n_triggers`` triggers, flat —
         the unit the batched segmentation pass (``segment_bundles``) and the
-        WAN ``deliver_batch`` consume (DESIGN.md §Ingest)."""
-        return [b for bs in self.stream(n_triggers) for b in bs]
+        WAN ``deliver_batch`` consume (DESIGN.md §Ingest).
+
+        Draws the whole window in one pass (strides, entropies, sizes, one
+        payload blob); per-bundle work is an ``EventBundle`` wrapper around a
+        blob slice, so traffic generation keeps up with the vectorized
+        ingest path and the virtual-time simulator.
+        """
+        cfg = self.cfg
+        t, d = n_triggers, cfg.n_daqs
+        if t <= 0:
+            return []
+        lo, hi = cfg.timestamp_stride
+        strides = self.rng.integers(lo, hi + 1, t)
+        evs = self.event_number + np.concatenate(
+            [[0], np.cumsum(strides[:-1])])
+        self.event_number = int(self.event_number + strides.sum())
+        ents = self.rng.integers(0, 1 << 16, t)
+        nbytes = np.maximum(1024, self.rng.normal(
+            cfg.mean_bundle_bytes, cfg.mean_bundle_bytes / 8,
+            (t, d)).astype(np.int64))
+        blob = self.rng.integers(0, 256, int(nbytes.sum()), dtype=np.uint8)
+        bounds = np.concatenate([[0], np.cumsum(nbytes.reshape(-1))])
+        out = []
+        for k in range(t):
+            tok_bytes = None
+            if cfg.token_payload:
+                tokens = self.tokens_for_event(int(evs[k]))
+                tok_bytes = np.frombuffer(tokens.astype("<i4").tobytes(),
+                                          np.uint8)
+            for q in range(d):
+                payload = blob[bounds[k * d + q]: bounds[k * d + q + 1]]
+                if tok_bytes is not None:
+                    # First bytes carry the token payload so CN-side
+                    # reassembly can rebuild the training sample.
+                    payload[: len(tok_bytes)] = tok_bytes
+                out.append(EventBundle(int(evs[k]), q, int(ents[k]), payload))
+        return out

@@ -155,6 +155,10 @@ class BatchReassembler:
         self.interpret = interpret
         self.stats = ReassemblyStats()
         self.completed: list[tuple[tuple[int, int], np.ndarray]] = []
+        # (event, daq) keys expired by the most recent push (empty when none)
+        # — callers tracking per-bundle state (simnet's emit-time table) use
+        # this to purge entries that will never complete.
+        self.last_timed_out_keys: list[tuple[int, int]] = []
 
     # -- accounting -----------------------------------------------------------
     @property
@@ -177,6 +181,7 @@ class BatchReassembler:
     # -- the batched push -----------------------------------------------------
     def push_batch(self, batch: PacketBatch) -> list[np.ndarray]:
         """Ingest one arrival window; returns payloads completed by it."""
+        self.last_timed_out_keys = []
         self.stats.n_pushed += len(batch)
         merged = PacketBatch.concat([self.pending, batch])
         ages = np.concatenate(
@@ -236,6 +241,13 @@ class BatchReassembler:
                 self.stats.n_timed_out_groups += int(
                     (gmin > self.timeout_windows).sum())
                 self.stats.n_timed_out_segments += int(expired.sum())
+                rows_exp = np.flatnonzero(expired)
+                keys = np.unique(np.stack(
+                    [self.pending.event_number[rows_exp].astype(np.uint64),
+                     self.pending.daq_id[rows_exp].astype(np.uint64)],
+                    axis=1), axis=0)
+                self.last_timed_out_keys = [
+                    (int(e), int(d)) for e, d in keys.tolist()]
                 live = np.flatnonzero(~expired)
                 self.pending = self.pending.take(live)
                 self.pending_age = self.pending_age[live]

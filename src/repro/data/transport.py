@@ -3,12 +3,15 @@ loss injection (paper fig. 7b shows exactly this at the LB input: "packet
 serialization and random path delays are built into the traffic generator").
 Unidirectional, no backpressure, no retransmit (paper §I-B.6).
 
-The production path is **batched**: ``deliver_batch`` applies loss as one
-mask, duplication as a masked row copy, and reordering as a single
-jitter-keyed permutation over the whole ``PacketBatch`` — drawn from a
-``jax.random`` PRNG (one fold_in per window), replacing the per-packet
-``rng.random()`` host loop. ``deliver`` keeps the per-packet list form for
-the reference pipeline and tests.
+Both delivery paths draw from the SAME per-window ``jax.random`` stream
+(``_draw_window``: one ``fold_in`` per window, loss as one mask, duplication
+as a masked row copy, reordering as a single jitter-keyed permutation).
+``deliver_batch`` applies the plan to a ``PacketBatch`` with one row gather;
+``deliver`` applies the identical plan to a per-packet list — so under the
+same seed and window sequence the two paths produce the same delivery order,
+``n_lost``/``n_dup`` counters and ``last_delivery`` bookkeeping (asserted by
+tests/test_ingest.py). Historically ``deliver`` drew from an independent
+``np.random`` stream and the two paths could silently diverge.
 
 Duplicate ordering: a duplicate models the *same* serialized packet taking a
 second (never earlier) path, so its sort key is the original's key plus a
@@ -16,11 +19,19 @@ strictly non-negative extra delay — a duplicate can never overtake the first
 copy (ties break original-first). The old implementation drew an independent
 jitter for the duplicate, which could deliver the copy *before* its original
 and effectively doubled the reorder window for duplicated packets.
+
+This positional model is the zero-rate degenerate case of the virtual-time
+link model in ``repro.simnet.links``: with no serialization (rate=0), no
+propagation delay and unit-spaced emissions, a link's arrival times reduce to
+``index + jitter`` — exactly the keys below (property-tested equivalent in
+tests/test_simnet.py).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
 import numpy as np
 
 from repro.data.segmentation import PacketBatch
@@ -34,6 +45,58 @@ class TransportConfig:
     seed: int = 0
 
 
+@functools.partial(jax.jit, static_argnames=("m",))
+def _uniform_block_jit(seed, window, *, m: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), window)
+    return jax.random.uniform(key, (4, m), dtype=jax.numpy.float32)
+
+
+def _uniform_block(seed: int, window: int, m: int) -> np.ndarray:
+    """``float64[4, m]`` uniforms in [0, 1) for one window — one jitted
+    device call (fold_in + split + draws fused); ``m`` is padded to a power
+    of two by the caller so the jit cache stays bounded."""
+    return np.asarray(_uniform_block_jit(seed, window, m=m), np.float64)
+
+
+def draw_window(seed: int, window: int, n: int, *, loss_prob: float,
+                duplicate_prob: float, jitter_scale: float):
+    """The per-window randomness both delivery paths (and the simnet link
+    model) share: one fold_in per window, then a loss mask, a duplicate
+    mask (only surviving packets can duplicate) and two non-negative delay
+    draws in ``[0, jitter_scale)`` — ``jitter`` delays the original copy,
+    ``extra`` is the duplicate's additional (never negative) path delay.
+
+    Returns host arrays ``(keep, dup, jitter, extra)``.
+    """
+    from repro.data.segmentation import next_pow2
+
+    u = _uniform_block(seed, window, next_pow2(n))[:, :n]
+    keep = u[0] >= loss_prob
+    dup = keep & (u[1] < duplicate_prob)
+    w = float(max(jitter_scale, 0.0))
+    jitter = u[2] * w
+    extra = u[3] * w
+    return keep, dup, jitter, extra
+
+
+def delivery_order(keep: np.ndarray, dup: np.ndarray, key_orig: np.ndarray,
+                   key_dup: np.ndarray):
+    """Assemble one window's delivery plan from masks + delay keys.
+
+    Surviving originals and duplicate copies are concatenated and sorted by
+    delay key with originals winning ties — the one implementation of the
+    duplicate-never-overtakes-its-original rule, shared by ``WANTransport``
+    and the simnet ``Link`` (whose keys are arrival *times* instead of
+    positions). Returns ``(src, is_dup, keys)`` in delivery order.
+    """
+    src = np.concatenate([np.flatnonzero(keep), np.flatnonzero(dup)])
+    is_dup = np.concatenate(
+        [np.zeros(int(keep.sum()), bool), np.ones(int(dup.sum()), bool)])
+    keys = np.concatenate([key_orig[keep], key_dup[dup]])
+    order = np.lexsort((is_dup, keys))
+    return src[order], is_dup[order], keys[order]
+
+
 class WANTransport:
     """Applies loss/duplication/reordering to a packet sequence.
 
@@ -44,71 +107,47 @@ class WANTransport:
 
     def __init__(self, cfg: TransportConfig):
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
         self.n_lost = 0
         self.n_dup = 0
         self._window = 0
         self.last_delivery: tuple[np.ndarray, np.ndarray] | None = None
 
+    def _plan(self, n: int) -> tuple[np.ndarray, np.ndarray]:
+        """One window's delivery plan: ``(src, is_dup)`` in delivery order.
+        Shared by both paths; advances the window counter and the counters."""
+        keep, dup, jitter, extra = draw_window(
+            self.cfg.seed, self._window, n,
+            loss_prob=self.cfg.loss_prob,
+            duplicate_prob=self.cfg.duplicate_prob,
+            jitter_scale=self.cfg.reorder_window)
+        self._window += 1
+        idx = np.arange(n, dtype=np.float64)
+        key_orig = idx + jitter
+
+        self.n_lost += int((~keep).sum())
+        self.n_dup += int(dup.sum())
+        src, is_dup, _keys = delivery_order(keep, dup, key_orig,
+                                            key_orig + extra)
+        self.last_delivery = (src, is_dup)
+        return self.last_delivery
+
     # -- batched path (one vectorized pass per window) ------------------------
     def deliver_batch(self, batch: PacketBatch) -> PacketBatch:
         """Loss mask + duplicate copy + jitter-keyed permutation, one pass."""
-        import jax
-        import jax.numpy as jnp
-
         n = len(batch)
         if n == 0:
             self.last_delivery = (np.empty((0,), np.int64),
                                   np.zeros((0,), bool))
             return batch
-        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
-                                 self._window)
-        self._window += 1
-        k_loss, k_dup, k_jit, k_extra = jax.random.split(key, 4)
-        keep = np.asarray(
-            jax.random.uniform(k_loss, (n,)) >= self.cfg.loss_prob)
-        dup = keep & np.asarray(
-            jax.random.uniform(k_dup, (n,)) < self.cfg.duplicate_prob)
-        w = float(max(self.cfg.reorder_window, 0))
-        idx = jnp.arange(n, dtype=jnp.float32)
-        jitter = jax.random.uniform(k_jit, (n,), minval=0.0, maxval=w) if w else 0.0
-        extra = jax.random.uniform(k_extra, (n,), minval=0.0, maxval=w) if w else 0.0
-        key_orig = np.asarray(idx + jitter, np.float64)
-        key_dup = np.asarray(idx + jitter + extra, np.float64)
-
-        self.n_lost += int((~keep).sum())
-        self.n_dup += int(dup.sum())
-        src = np.concatenate([np.flatnonzero(keep), np.flatnonzero(dup)])
-        is_dup = np.concatenate(
-            [np.zeros(int(keep.sum()), bool), np.ones(int(dup.sum()), bool)])
-        keys = np.concatenate([key_orig[keep], key_dup[dup]])
-        # lexsort: primary = delay key, tie-break originals before duplicates.
-        order = np.lexsort((is_dup, keys))
-        self.last_delivery = (src[order], is_dup[order])
-        return batch.take(src[order])
+        src, _ = self._plan(n)
+        return batch.take(src)
 
     # -- per-packet reference path --------------------------------------------
     def deliver(self, packets: list) -> list:
-        out_src, out_dup = [], []
-        for i, _p in enumerate(packets):
-            if self.rng.random() < self.cfg.loss_prob:
-                self.n_lost += 1
-                continue
-            out_src.append(i)
-            out_dup.append(False)
-            if self.rng.random() < self.cfg.duplicate_prob:
-                out_src.append(i)
-                out_dup.append(True)
-                self.n_dup += 1
-        src = np.asarray(out_src, np.int64)
-        is_dup = np.asarray(out_dup, bool)
-        keys = src.astype(np.float64)
-        if len(src) > 1 and self.cfg.reorder_window > 0:
-            # bounded displacement: sort by (index + jitter); a duplicate's
-            # key adds a non-negative extra delay on top of its original's.
-            jitter = self.rng.uniform(0, self.cfg.reorder_window, len(packets))
-            extra = self.rng.uniform(0, self.cfg.reorder_window, len(packets))
-            keys = src + jitter[src] + np.where(is_dup, extra[src], 0.0)
-        order = np.lexsort((is_dup, keys))
-        self.last_delivery = (src[order], is_dup[order])
-        return [packets[i] for i in src[order]]
+        """List form of the identical plan (reference pipeline and tests)."""
+        if not packets:
+            self.last_delivery = (np.empty((0,), np.int64),
+                                  np.zeros((0,), bool))
+            return []
+        src, _ = self._plan(len(packets))
+        return [packets[i] for i in src]

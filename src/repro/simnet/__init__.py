@@ -1,0 +1,18 @@
+"""repro.simnet — discrete virtual-time network & farm simulator.
+
+Latency is the paper's keystone claim (a *low fixed-latency* LB data plane);
+this package gives the repro a notion of time so end-to-end latency, queue
+occupancy and control-plane reaction are measured, not assumed. Everything is
+vectorized struct-of-arrays — per-window array programs, never per-packet
+Python loops (DESIGN.md §SimNet).
+"""
+from repro.simnet.clock import VirtualClock
+from repro.simnet.links import Link, LinkConfig
+from repro.simnet.queues import FarmConfig, FarmQueues
+from repro.simnet.scenarios import SCENARIOS, get_scenario
+from repro.simnet.sim import SimConfig, SimReport, Simulator
+
+__all__ = [
+    "VirtualClock", "Link", "LinkConfig", "FarmConfig", "FarmQueues",
+    "SCENARIOS", "get_scenario", "SimConfig", "SimReport", "Simulator",
+]

@@ -1,0 +1,125 @@
+"""Scenario library: named workloads for the virtual-time simulator.
+
+Each scenario is a ``Scenario`` preset — config overrides plus live hooks
+(traffic shaping, per-trigger size boosts, mid-run link mutation). The
+stress shapes follow the load-balancing literature the repro tracks:
+elephant-vs-mice flows and burst arrivals (RDNA Balance, arXiv:1904.05664),
+in-network steering for heterogeneous scientific farms (arXiv:2009.02457),
+and the paper's own straggler / multi-instance cases (fig. 7c, §I-C).
+
+``expect_cp_gain`` marks scenarios where the closed loop must measurably
+beat a frozen-weights control run on p99 latency — run_simnet's
+``--compare-frozen`` turns that into a hard check.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.simnet.links import LinkConfig
+from repro.simnet.sim import Scenario
+
+
+def _straggler_scale(n_members: int) -> np.ndarray:
+    s = np.ones((n_members,))
+    s[0] = 4.0  # member 0 runs 4x slow — what the CP must detect and shed
+    return s
+
+
+def _hetero_scale(n_members: int) -> np.ndarray:
+    # deterministic spread of relative speeds, shuffled so the slow nodes
+    # aren't adjacent calendar slots
+    s = np.geomspace(0.7, 2.4, n_members)
+    return s[np.random.default_rng(7).permutation(n_members)]
+
+
+def _elephant_scale(n_members: int) -> np.ndarray:
+    s = np.geomspace(0.8, 2.2, n_members)
+    return s[np.random.default_rng(3).permutation(n_members)]
+
+
+def _burst_traffic(step: int, cfg) -> tuple[int, float]:
+    """Every 6th window: 4x the triggers compressed into the same span —
+    a 4x instantaneous arrival-rate burst, mean load unchanged elsewhere."""
+    if step % 6 == 0:
+        return 4 * cfg.triggers_per_step, 0.25
+    return cfg.triggers_per_step, 1.0
+
+
+def _elephant_boost(rng: np.random.Generator, event_number: int) -> float:
+    """Heavy-tailed trigger sizes: ~5% of triggers are 10x elephants."""
+    return 10.0 if rng.random() < 0.05 else 1.0
+
+
+def _flap_link(sim, step: int) -> None:
+    """Member 0's downlink degrades 20x for the middle third of the run."""
+    lo, hi = sim.cfg.steps // 3, (2 * sim.cfg.steps) // 3
+    nominal = sim.cfg.member_link.rate_Bps
+    sim.member_links.rate_Bps[0] = (nominal / 20.0 if lo <= step < hi
+                                    else nominal)
+
+
+SCENARIOS: dict[str, Scenario] = {
+    "baseline": Scenario(
+        name="baseline",
+        description="clean links, homogeneous farm, steady traffic",
+    ),
+    "burst": Scenario(
+        name="burst",
+        description="periodic 4x arrival-rate bursts (mice stampedes)",
+        traffic=_burst_traffic,
+    ),
+    "elephant": Scenario(
+        name="elephant",
+        description="10x elephant triggers over a heterogeneous farm: "
+                    "static weights drown the slow members in elephants "
+                    "(drops + timeouts); measured-occupancy feedback "
+                    "re-shares and keeps the tail bounded",
+        expect_cp_gain=True,
+        trigger_boost=_elephant_boost,
+        service_scale=_elephant_scale,
+        overrides=dict(queue_capacity_s=0.5, timeout_windows=60,
+                       reweight_every=3),
+    ),
+    "straggler": Scenario(
+        name="straggler",
+        description="member 0 serves 4x slow; CP must shed its weight",
+        expect_cp_gain=True,
+        service_scale=_straggler_scale,
+        overrides=dict(timeout_windows=30, reweight_every=3),
+    ),
+    "hetero_farm": Scenario(
+        name="hetero_farm",
+        description="per-member service rates spread 0.7x-2.4x",
+        service_scale=_hetero_scale,
+        overrides=dict(timeout_windows=30),
+    ),
+    "link_flap": Scenario(
+        name="link_flap",
+        description="member 0 downlink degrades 20x for the middle third",
+        on_step=_flap_link,
+        overrides=dict(timeout_windows=30),
+    ),
+    "correlated_loss": Scenario(
+        name="correlated_loss",
+        description="Gilbert-Elliott burst loss on the WAN hop",
+        overrides=dict(
+            wan=LinkConfig(prop_delay_s=1e-3, jitter_s=2e-4,
+                           p_good_to_bad=0.02, p_bad_to_good=0.25,
+                           bad_loss_prob=0.5),
+            timeout_windows=12,
+        ),
+    ),
+    "multi_instance": Scenario(
+        name="multi_instance",
+        description="2 virtual LB instances partition DAQs and the farm",
+        overrides=dict(n_instances=2, n_daqs=4, n_members=8),
+    ),
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {sorted(SCENARIOS)}") from None

@@ -123,6 +123,55 @@ class TestBackendParity:
         assert resolve_backend("auto") in ("jnp", "pallas")
 
 
+class TestRouteWindowEdges:
+    """Host arrival-window routing: empty windows, exact power-of-two sizes,
+    and the padding rule (zero-magic rows can never alias a real packet)."""
+
+    def _batch(self, n: int, seed: int = 0):
+        from repro.data.daq import DAQConfig, DAQFleet
+        from repro.data.segmentation import segment_bundles
+
+        fleet = DAQFleet(DAQConfig(n_daqs=1, mean_bundle_bytes=900,
+                                   seed=seed))
+        batch = segment_bundles(fleet.bundle_window(max(n, 1)), 2048)
+        assert len(batch) >= n
+        return batch.take(np.arange(n))
+
+    def test_empty_window(self):
+        em = _fuzz_manager(1, 3, reconfig=False)
+        dp = DataPlane.from_manager(em, backend="jnp")
+        member, node, lane, valid = dp.route_window(self._batch(0))
+        for arr in (member, node, lane, valid):
+            assert arr.shape == (0,)
+
+    def test_exact_power_of_two_window(self):
+        em = _fuzz_manager(2, 4, reconfig=False)
+        dp = DataPlane.from_manager(em, backend="jnp")
+        for n in (16, 32, 64):
+            batch = self._batch(n)
+            member, _node, _lane, valid = dp.route_window(batch)
+            assert member.shape == (n,) and valid.shape == (n,)
+            assert valid.all()  # no padding row leaks into the window
+
+    @given(n=st.integers(1, 70), seed=st.integers(0, 50))
+    @settings(max_examples=20)
+    def test_padding_rows_never_valid(self, n, seed):
+        """Windows of any size route exactly n results, and the zero-magic
+        padding rows the facade adds can never produce valid=True."""
+        em = _fuzz_manager(seed, 3, reconfig=False)
+        dp = DataPlane.from_manager(em, backend="jnp")
+        batch = self._batch(n, seed)
+        member, _node, _lane, valid = dp.route_window(batch)
+        assert valid.shape == (n,) and valid.all()
+        # the padding representation itself: zero words fail validation
+        from repro.data.segmentation import next_pow2
+
+        pad = jnp.zeros((next_pow2(n), 4), jnp.uint32)
+        r = dp.route(pad)
+        assert not np.asarray(r.valid).any()
+        assert (np.asarray(r.member) == -1).all()
+
+
 def _onehot_positions(member, n_members, capacity):
     """The pre-refactor cumsum-of-one-hot semantics (historical reference)."""
     onehot = jax.nn.one_hot(member, n_members, dtype=jnp.int32)

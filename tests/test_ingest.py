@@ -116,6 +116,36 @@ class TestWANBatch:
         assert len(out) == len(batch) - wan.n_lost
         assert wan.n_lost > 0
 
+    @given(seed=st.integers(0, 300))
+    @settings(max_examples=15)
+    def test_deliver_and_deliver_batch_agree(self, seed):
+        """Both paths draw from the same per-window stream: identical seeds
+        and window sequence => identical delivery order, ``n_lost``/``n_dup``
+        counters and ``last_delivery`` bookkeeping. (Historically ``deliver``
+        used an independent np.random stream and could silently diverge.)"""
+        bundles = _window(5, seed=seed)
+        batch = segment_bundles(bundles)
+        segs = [s for b in bundles for s in segment_bundle(b)]
+        assert len(segs) == len(batch)
+        cfg = TransportConfig(reorder_window=32, loss_prob=0.1,
+                              duplicate_prob=0.1, seed=seed)
+        wan_b, wan_l = WANTransport(cfg), WANTransport(cfg)
+        for _ in range(3):  # windows advance in lockstep on both paths
+            out_b = wan_b.deliver_batch(batch)
+            out_l = wan_l.deliver(segs)
+            assert wan_b.n_lost == wan_l.n_lost
+            assert wan_b.n_dup == wan_l.n_dup
+            np.testing.assert_array_equal(wan_b.last_delivery[0],
+                                          wan_l.last_delivery[0])
+            np.testing.assert_array_equal(wan_b.last_delivery[1],
+                                          wan_l.last_delivery[1])
+            np.testing.assert_array_equal(
+                out_b.event_number,
+                np.asarray([s.event_number for s in out_l], np.uint64))
+            np.testing.assert_array_equal(
+                out_b.seg_index,
+                np.asarray([s.seg_index for s in out_l], np.int32))
+
     def test_deterministic_per_window(self):
         batch = segment_bundles(_window(5))
         a = WANTransport(TransportConfig(reorder_window=32, seed=4))
@@ -190,11 +220,14 @@ class TestBatchReassembler:
         ra.push_batch(batch.take(np.arange(len(batch) - 1)))  # drop last seg
         assert ra.n_incomplete == 1
         empty = batch.take(np.asarray([], np.int64))
+        expired_keys = []
         for _ in range(3):
             ra.push_batch(empty)
+            expired_keys.extend(ra.last_timed_out_keys)
         assert ra.n_incomplete == 0
         assert ra.stats.n_timed_out_groups == 1
         assert ra.stats.n_timed_out_segments == len(batch) - 1
+        assert expired_keys == [(7, 0)]  # the expired (event, daq) surfaced
 
     def test_timeout_is_group_activity_based(self):
         """A late segment resets its group's timer; when the group finally

@@ -1,0 +1,291 @@
+"""repro.simnet: link/queue primitives vs per-packet references, the
+WANTransport degenerate-adapter equivalence, queue-engine parity, telemetry
+on the virtual clock (staleness), and end-to-end scenario runs with the
+invariant audit (DESIGN.md §SimNet)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.testing.hypo import given, settings, st
+
+from repro.data.transport import TransportConfig, WANTransport
+from repro.simnet import (
+    FarmConfig,
+    FarmQueues,
+    Link,
+    LinkConfig,
+    SCENARIOS,
+    Simulator,
+    VirtualClock,
+    get_scenario,
+)
+from repro.simnet.links import (
+    LinkSet,
+    fifo_departures,
+    fifo_departures_multi,
+    gilbert_elliott_states,
+)
+from repro.telemetry.metrics import TelemetryHub
+
+
+def _fifo_ref(t_ready, tx_s, busy_until=-np.inf):
+    """Per-packet scalar recurrence: dep_i = max(t_i, dep_{i-1}) + s_i."""
+    dep = []
+    prev = busy_until
+    for t, s in zip(t_ready, tx_s):
+        prev = max(t, prev) + s
+        dep.append(prev)
+    return np.asarray(dep)
+
+
+class TestVirtualClock:
+    def test_monotonic(self):
+        c = VirtualClock()
+        assert c.now() == 0.0
+        c.advance(1.5)
+        c.advance_to(1.0)  # no-op backwards
+        assert c.now() == 1.5
+        with pytest.raises(ValueError):
+            c.advance(-1.0)
+
+
+class TestFifoSerialization:
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=20)
+    def test_matches_scalar_recurrence(self, seed):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 200))
+        t = np.sort(rng.uniform(0, 1.0, n))
+        s = rng.uniform(0, 0.01, n)
+        busy = float(rng.uniform(-0.5, 0.5))
+        dep, last = fifo_departures(t, s, busy)
+        np.testing.assert_allclose(dep, _fifo_ref(t, s, busy), rtol=1e-12)
+        assert last == dep[-1]
+
+    def test_zero_rate_is_identity(self):
+        t = np.asarray([0.0, 1.0, 2.5])
+        dep, _ = fifo_departures(t, np.zeros(3))
+        np.testing.assert_array_equal(dep, t)
+
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=20)
+    def test_multi_matches_per_link_loop(self, seed):
+        rng = np.random.default_rng(seed)
+        n, n_links = int(rng.integers(1, 300)), int(rng.integers(1, 6))
+        link = rng.integers(0, n_links, n)
+        t = rng.uniform(0, 1.0, n)
+        s = rng.uniform(0, 0.01, n)
+        busy = rng.uniform(-0.2, 0.2, n_links)
+        got = fifo_departures_multi(link, t, s, busy.copy())
+        want = np.empty(n)
+        for lk in range(n_links):
+            rows = np.flatnonzero(link == lk)
+            rows = rows[np.argsort(t[rows], kind="stable")]
+            want[rows] = _fifo_ref(t[rows], s[rows], busy[lk])
+        np.testing.assert_allclose(got, want, rtol=1e-9)
+
+
+class TestGilbertElliott:
+    def test_deterministic_and_carries_state(self):
+        a, sa = gilbert_elliott_states(3, 0, 500, p_gb=0.05, p_bg=0.2,
+                                       start_bad=False)
+        b, sb = gilbert_elliott_states(3, 0, 500, p_gb=0.05, p_bg=0.2,
+                                       start_bad=False)
+        np.testing.assert_array_equal(a, b)
+        assert sa == sb == bool(a[-1])
+
+    def test_absorbing_good(self):
+        s, end = gilbert_elliott_states(0, 0, 200, p_gb=0.0, p_bg=0.5,
+                                        start_bad=False)
+        assert not s.any() and end is False
+
+    def test_bursty(self):
+        s, _ = gilbert_elliott_states(1, 0, 5000, p_gb=0.05, p_bg=0.2,
+                                      start_bad=False)
+        assert 0 < s.sum() < len(s)
+        # sojourns are runs, not iid flips: mean bad-run length ~ 1/p_bg
+        flips = np.count_nonzero(s[1:] != s[:-1])
+        assert flips < 0.3 * len(s)
+
+
+class TestDegenerateAdapter:
+    @given(seed=st.integers(0, 200))
+    @settings(max_examples=15)
+    def test_zero_rate_link_equals_wan_transport(self, seed):
+        """WANTransport's positional model == a Link with no serialization,
+        no propagation, unit-spaced emissions (DESIGN.md §SimNet)."""
+        n = 120
+        wan = WANTransport(TransportConfig(
+            reorder_window=48, loss_prob=0.08, duplicate_prob=0.1, seed=seed))
+        link = Link(LinkConfig(jitter_s=48.0, loss_prob=0.08,
+                               duplicate_prob=0.1, seed=seed))
+        for _ in range(3):  # window counters stay in lockstep
+            src, is_dup = wan._plan(n)
+            d = link.transit(np.arange(n, dtype=np.float64),
+                             np.zeros((n,)))
+            np.testing.assert_array_equal(src, d.src)
+            np.testing.assert_array_equal(is_dup, d.is_dup)
+        assert wan.n_lost == link.n_lost and wan.n_dup == link.n_dup
+
+
+class TestFarmQueues:
+    def _farm(self, cap=10.0, backend="np"):
+        return FarmQueues(FarmConfig(
+            n_members=1, per_packet_s=np.asarray([1.0]),
+            per_byte_s=np.asarray([0.0]), capacity_s=np.asarray([cap])),
+            backend=backend)
+
+    def test_lindley_recurrence(self):
+        f = self._farm()
+        r = f.serve(np.zeros(3, np.int64), np.asarray([0.0, 0.5, 5.0]),
+                    np.zeros(3))
+        np.testing.assert_allclose(r.depart, [1.0, 2.0, 6.0])
+        assert not r.dropped.any()
+        assert f.w[0] == 1.0 and f.t_last[0] == 5.0
+
+    def test_drop_tail(self):
+        f = self._farm(cap=2.5)
+        r = f.serve(np.zeros(3, np.int64), np.asarray([0.0, 0.1, 0.2]),
+                    np.zeros(3))
+        assert r.dropped.tolist() == [False, False, True]
+        assert np.isinf(r.depart[2])
+        assert f.n_dropped == 1 and f.n_served == 2
+
+    def test_backlog_decays_across_windows(self):
+        f = self._farm()
+        f.serve(np.zeros(2, np.int64), np.asarray([0.0, 0.0]), np.zeros(2))
+        assert f.w[0] == 2.0
+        assert f.fill(now=1.5)[0] == pytest.approx(0.05)  # 0.5s left / 10
+        r = f.serve(np.zeros(1, np.int64), np.asarray([10.0]), np.zeros(1))
+        np.testing.assert_allclose(r.depart, [11.0])
+
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=10)
+    def test_np_jnp_engines_agree(self, seed):
+        rng = np.random.default_rng(seed)
+        n, m = int(rng.integers(1, 400)), int(rng.integers(1, 8))
+        member = rng.integers(0, m, n).astype(np.int64)
+        t = rng.uniform(0, 1.0, n)
+        nbytes = rng.uniform(0, 4096, n)
+        cfg = FarmConfig.uniform(m, per_packet_s=1e-3, per_byte_s=1e-6,
+                                 capacity_s=0.05)
+        a = FarmQueues(cfg, backend="np").serve(member, t, nbytes)
+        b = FarmQueues(cfg, backend="jnp").serve(member, t, nbytes)
+        # the jnp engine runs in float32 unless jax_enable_x64 is on
+        np.testing.assert_allclose(a.depart, b.depart, rtol=3e-5)
+        np.testing.assert_array_equal(a.dropped, b.dropped)
+        np.testing.assert_allclose(a.w_end, b.w_end, rtol=3e-5, atol=1e-8)
+
+
+class TestTelemetryClock:
+    def test_injected_clock_stamps_reports(self):
+        clock = VirtualClock()
+        hub = TelemetryHub(clock=clock.now)
+        clock.advance(7.0)
+        hub.report_step(0, step_time=0.1)
+        assert hub.members[0].last_seen == 7.0
+
+    def test_stale_member_reported_unhealthy(self):
+        clock = VirtualClock()
+        hub = TelemetryHub(clock=clock.now, stale_after=5.0)
+        hub.report_step(0, step_time=0.1)
+        hub.report_step(1, step_time=0.1)
+        clock.advance(10.0)
+        hub.report_queue(1, backlog=0)
+        snap = hub.snapshot()
+        assert not snap[0].healthy and snap[0].rate == 0.0
+        assert snap[1].healthy
+        # silence is not a permanent verdict: a fresh report recovers it
+        hub.report_step(0, step_time=0.1)
+        assert hub.snapshot()[0].healthy
+
+    def test_occupancy_fill_mode_ignores_slowness(self):
+        hub = TelemetryHub(queue_capacity=10, fill_mode="occupancy")
+        hub.report_step(0, step_time=0.4, backlog=0)   # slow, empty queue
+        hub.report_step(1, step_time=0.1, backlog=5)   # fast, half full
+        snap = hub.snapshot()
+        assert snap[0].fill == 0.0
+        assert snap[1].fill == pytest.approx(0.5)
+
+
+class TestSimulator:
+    def test_baseline_run_clean(self):
+        sc = get_scenario("baseline")
+        r = Simulator(sc.build_config(steps=30), sc).run()
+        assert r.violations == []
+        assert r.bundles_completed == r.bundles_sent
+        assert r.latency_p99_s > r.latency_p50_s > 0
+        assert r.sim_time_s > 0
+
+    def test_deterministic(self):
+        sc = get_scenario("baseline")
+        a = Simulator(sc.build_config(steps=12), sc).run()
+        b = Simulator(sc.build_config(steps=12), sc).run()
+        assert a.latency_p99_s == b.latency_p99_s
+        assert a.latency_p50_s == b.latency_p50_s
+        assert a.per_member_segments == b.per_member_segments
+
+    @pytest.mark.parametrize("name", sorted(SCENARIOS))
+    def test_scenario_matrix_smoke(self, name):
+        sc = get_scenario(name)
+        r = Simulator(sc.build_config(steps=12), sc).run()
+        assert r.violations == [], (name, r.violations)
+        assert r.bundles_completed > 0
+        assert r.latency_p99_s >= r.latency_p50_s > 0
+
+    def test_multi_instance_partitions_farm(self):
+        sc = get_scenario("multi_instance")
+        sim = Simulator(sc.build_config(steps=15), sc)
+        r = sim.run()
+        assert r.violations == []
+        # instance 0 members serve only instance-0 events and vice versa
+        for (iid, _ev), members in sim.event_members.items():
+            for m in members:
+                assert m in sim.instance_members[iid]
+
+    def test_straggler_cp_beats_frozen_p99(self):
+        sc = get_scenario("straggler")
+        closed = Simulator(sc.build_config(steps=90), sc).run()
+        frozen = Simulator(sc.build_config(steps=90, frozen_weights=True),
+                           dataclasses.replace(sc)).run()
+        assert closed.violations == [] and frozen.violations == []
+        assert closed.latency_p99_s < frozen.latency_p99_s
+        # the straggler's share was actually shed
+        w = {int(k): v for k, v in closed.final_weights.items()}
+        assert w[0] < 0.75
+
+    def test_wan_duplication_absorbed_and_clean(self):
+        """Duplicates on the WAN hop: absorbed by reassembly, never corrupt,
+        and the latency pipeline (first-served-copy completion times) stays
+        consistent."""
+        sc = get_scenario("baseline")
+        cfg = sc.build_config(steps=20)
+        cfg.wan = dataclasses.replace(cfg.wan, duplicate_prob=0.15,
+                                      jitter_s=2e-3)
+        r = Simulator(cfg, dataclasses.replace(sc)).run()
+        assert r.duplicates_absorbed > 0
+        assert r.violations == []
+        assert r.latency_p99_s > r.latency_p50_s > 0
+
+    def test_lossy_scenarios_account_everything(self):
+        sc = get_scenario("correlated_loss")
+        sim = Simulator(sc.build_config(steps=25), sc)
+        r = sim.run()
+        assert r.packets_lost_wan > 0
+        # every bundle is completed, pending, timed out, or had all its
+        # segments lost before the reassembler saw any (vanished)
+        assert (r.bundles_completed + r.bundles_pending + r.bundles_timed_out
+                <= r.bundles_sent)
+        assert r.violations == []
+
+
+class TestLinkSetLoss:
+    def test_per_link_loss_vector(self):
+        cfgs = [LinkConfig(loss_prob=0.0, seed=4),
+                LinkConfig(loss_prob=1.0, seed=4)]
+        ls = LinkSet(cfgs)
+        link = np.asarray([0, 1, 0, 1], np.int64)
+        t, keep = ls.transit(link, np.zeros(4), np.zeros(4))
+        assert keep.tolist() == [True, False, True, False]
+        assert ls.n_lost == 2
