@@ -1,0 +1,94 @@
+"""controld message-path throughput: the ops/s ceiling of the control plane.
+
+The paper's CP must absorb heartbeat telemetry from every CN at the reweight
+cadence; this bench measures the daemon's message path (SendState round
+trips) over both transports — in-process (what simnet and the serving
+engine embed) and the length-prefixed socket (what real CN daemons speak) —
+plus the journal-replay rate that bounds recovery time after a restart.
+
+CI gates the in-proc rate (a regression here slows every closed-loop driver)
+and trend.py tracks all three against committed floors.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit_json, row, timeit
+from repro.controld import (ControlDaemon, ControldClient, InProcTransport,
+                            Journal, SocketClient, SocketServer)
+
+N_MEMBERS = 8
+HB_ROUNDS = 16  # heartbeats per timed call = N_MEMBERS * HB_ROUNDS
+
+
+def _make(journal: bool):
+    daemon = ControlDaemon(n_instances=1, lease_s=1e9, epoch_horizon=256,
+                           journal=Journal() if journal else None)
+    client = ControldClient(InProcTransport(daemon))
+    token = client.reserve(policy="pid")["token"]
+    for m in range(N_MEMBERS):
+        client.register(token, member_id=m, node_id=m, lane_bits=1)
+    client.tick(current_event=0)
+    return daemon, client, token
+
+
+def _hb_burst(client, token):
+    def fn():
+        for _ in range(HB_ROUNDS):
+            for m in range(N_MEMBERS):
+                client.send_state(token, m, fill=0.25 + 0.05 * m)
+    return fn
+
+
+def run() -> float:
+    msgs = N_MEMBERS * HB_ROUNDS
+
+    # -- in-process transport (journal off / on) ------------------------------
+    _, client, token = _make(journal=False)
+    us = timeit(_hb_burst(client, token), warmup=2, iters=20)
+    inproc = msgs / us * 1e6
+    row("controld_inproc_heartbeat", us / msgs,
+        f"{inproc:,.0f} msg/s over InProcTransport ({msgs}/burst)")
+
+    daemon_j, client_j, token_j = _make(journal=True)
+    us = timeit(_hb_burst(client_j, token_j), warmup=2, iters=20)
+    inproc_j = msgs / us * 1e6
+    row("controld_inproc_journaled", us / msgs,
+        f"{inproc_j:,.0f} msg/s with the WAL journal on")
+
+    # -- journal replay (recovery-time bound) ---------------------------------
+    n_entries = daemon_j.journal.seq + 1
+    import time as _t
+    t0 = _t.perf_counter()
+    ControlDaemon.recover(daemon_j.journal, n_instances=1, lease_s=1e9,
+                          epoch_horizon=256)
+    replay_s = _t.perf_counter() - t0
+    replay = n_entries / replay_s if replay_s > 0 else 0.0
+    row("controld_journal_replay", replay_s * 1e6 / max(n_entries, 1),
+        f"{replay:,.0f} entries/s over {n_entries} entries")
+
+    # -- socket transport -----------------------------------------------------
+    daemon_s = ControlDaemon(n_instances=1, lease_s=1e9, epoch_horizon=256)
+    server = SocketServer(daemon_s)
+    host, port = server.start()
+    sclient = ControldClient(SocketClient(host, port))
+    stoken = sclient.reserve(policy="pid")["token"]
+    for m in range(N_MEMBERS):
+        sclient.register(stoken, member_id=m, node_id=m, lane_bits=1)
+    sclient.tick(current_event=0)
+    us = timeit(_hb_burst(sclient, stoken), warmup=2, iters=10)
+    sock = msgs / us * 1e6
+    row("controld_socket_heartbeat", us / msgs,
+        f"{sock:,.0f} msg/s over the length-prefixed socket")
+    sclient.close()
+    server.stop()
+
+    emit_json("controld", metrics={
+        "inproc_msgs_per_s": inproc,
+        "inproc_journaled_msgs_per_s": inproc_j,
+        "socket_msgs_per_s": sock,
+        "replay_entries_per_s": replay,
+    }, params={"n_members": N_MEMBERS, "hb_rounds": HB_ROUNDS})
+    return inproc
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,184 @@
+"""controld driver: the control plane as a long-running socket service.
+
+``--demo`` (the default, CI-smoked) exercises the full story end to end over
+a real length-prefixed socket:
+
+    reserve -> register members -> heartbeat/tick rounds (a straggler member
+    reports high fill and sheds calendar slots) -> one member goes silent
+    (lease lapses -> hit-less drain) -> status -> kill the daemon ->
+    recover a fresh one from the JSONL journal -> byte-identical state
+    digest -> snapshot + restore (ckpt-idiom atomic dirs) -> same digest.
+
+Exit 0 iff every check holds. ``--serve`` runs the daemon until killed, for
+real CN-daemon clients:
+
+    PYTHONPATH=src python scripts/run_controld.py --demo
+    PYTHONPATH=src python scripts/run_controld.py --serve --port 18070 \\
+        --journal /tmp/controld/journal.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+from repro.controld import (ControlDaemon, ControldClient, Journal,
+                            SocketClient, SocketServer)
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--demo", action="store_true", default=None,
+                    help="run the self-checking socket demo (default)")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve until killed instead of the demo")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=0,
+                    help="0 = ephemeral (the bound port is printed)")
+    ap.add_argument("--n-instances", type=int, default=2)
+    ap.add_argument("--n-members", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--lease-s", type=float, default=0.25)
+    ap.add_argument("--policy", choices=["proportional", "pid"],
+                    default="pid")
+    ap.add_argument("--journal", default=None,
+                    help="JSONL journal path (demo default: a tempdir)")
+    ap.add_argument("--json", default=None, help="write the summary here")
+    return ap.parse_args(argv)
+
+
+def serve(args) -> int:
+    recovered = 0
+    if args.journal and os.path.exists(args.journal):
+        # hit-less restart: replay the existing journal and keep appending
+        # to it seq-contiguously (never start a second seq-0 history)
+        journal = Journal.load(args.journal)
+        recovered = journal.seq + 1
+        daemon = ControlDaemon.recover(journal,
+                                       n_instances=args.n_instances,
+                                       lease_s=args.lease_s)
+    else:
+        # no --journal: run journal-less — an in-memory journal dies with
+        # the process anyway and would grow by one entry per heartbeat
+        journal = Journal(args.journal) if args.journal else None
+        daemon = ControlDaemon(n_instances=args.n_instances,
+                               lease_s=args.lease_s, journal=journal)
+    server = SocketServer(daemon, host=args.host, port=args.port)
+    host, port = server.start()
+    print(f"controld serving on {host}:{port} "
+          f"(journal={args.journal or 'in-memory'}, "
+          f"replayed {recovered} entries)", flush=True)
+    try:
+        while True:
+            time.sleep(1.0)
+    except KeyboardInterrupt:
+        return 0
+    finally:
+        server.stop()
+
+
+def demo(args) -> int:
+    workdir = None
+    if args.journal is None:
+        workdir = tempfile.mkdtemp(prefix="controld_demo_")
+        args.journal = os.path.join(workdir, "journal.jsonl")
+    snap_dir = os.path.join(os.path.dirname(args.journal), "snapshots")
+
+    daemon = ControlDaemon(n_instances=args.n_instances,
+                           lease_s=args.lease_s,
+                           epoch_horizon=256,
+                           journal=Journal(args.journal))
+    server = SocketServer(daemon, host=args.host, port=args.port)
+    host, port = server.start()
+    client = ControldClient(SocketClient(host, port))
+    checks: dict[str, bool] = {}
+    n = args.n_members
+
+    # -- session lifecycle over the wire --------------------------------------
+    r = client.reserve(policy=args.policy)
+    token = r["token"]
+    for m in range(n):
+        client.register(token, member_id=m, node_id=m, lane_bits=1)
+    client.tick(current_event=0)
+
+    ev = 0
+    for _ in range(args.rounds):
+        for m in range(n):
+            # member 0 is the straggler: persistently over-target fill
+            client.send_state(token, m, fill=0.9 if m == 0 else 0.3)
+        ev += 400
+        client.tick(current_event=ev)
+    status = client.status(token)
+    sess = status["sessions"][token]
+    w = {int(k): v["weight"] for k, v in sess["members"].items()}
+    checks["straggler_shed_weight"] = w[0] < min(w[m] for m in range(1, n))
+
+    # -- lease expiry == the hit-less drain path ------------------------------
+    time.sleep(args.lease_s * 1.2)  # every lease lapses; late heartbeats
+    for m in range(1, n):           # are *rejected* (protocol rule) and the
+        try:                        # tick below reaps the leases
+            client.send_state(token, m, fill=0.3)
+        except Exception:
+            pass
+    ev += 400
+    tick = client.tick(current_event=ev)
+    expired = tick["sessions"][token]["expired"]
+    checks["silent_member_lease_expired"] = 0 in expired
+    checks["heartbeat_rejected_after_expiry"] = False
+    try:
+        client.send_state(token, 0, fill=0.3)
+    except Exception:
+        checks["heartbeat_rejected_after_expiry"] = True
+    client.register(token, member_id=0, node_id=0, lane_bits=1)  # rejoin
+    ev += 400
+    client.tick(current_event=ev)
+
+    # -- kill the daemon; recover from the journal ----------------------------
+    digest = daemon.state_digest()
+    seq = daemon.journal.seq
+    server.stop()
+    client.close()
+
+    recovered = ControlDaemon.recover(
+        Journal.load(args.journal),
+        n_instances=args.n_instances, lease_s=args.lease_s,
+        epoch_horizon=256)
+    checks["journal_replay_digest_identical"] = (
+        recovered.state_digest() == digest)
+
+    # -- snapshot + restore (ckpt-idiom atomic directories) -------------------
+    recovered.journal.snapshot(snap_dir)
+    restored = ControlDaemon.recover(
+        Journal.restore(snap_dir),
+        n_instances=args.n_instances, lease_s=args.lease_s,
+        epoch_horizon=256)
+    checks["snapshot_restore_digest_identical"] = (
+        restored.state_digest() == digest)
+
+    summary = {
+        "transport": f"socket {host}:{port}",
+        "journal": args.journal,
+        "journal_entries": seq + 1,
+        "final_weights": {str(k): round(v, 4) for k, v in sorted(w.items())},
+        "checks": checks,
+    }
+    print(json.dumps(summary, indent=2))
+    failed = [k for k, ok in checks.items() if not ok]
+    if failed:
+        print("FAILED: " + ", ".join(failed), file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    if args.serve:
+        return serve(args)
+    return demo(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,13 +41,21 @@ def parse_args(argv=None):
                     help="disable control-plane feedback (control run)")
     ap.add_argument("--compare-frozen", action="store_true",
                     help="also run the frozen-weights control and compare p99")
+    ap.add_argument("--controld", action="store_true",
+                    help="run the control plane as a session daemon "
+                         "(repro.controld): CNs register/heartbeat/lease")
+    ap.add_argument("--policy", choices=["proportional", "pid"], default=None,
+                    help="controld reweighting policy (implies --controld)")
+    ap.add_argument("--compare-policy", action="store_true",
+                    help="run the scenario under the PID and proportional "
+                         "controld policies; fail if PID p99 is worse")
     ap.add_argument("--traces", action="store_true",
                     help="include full queue/weight traces in the JSON")
     ap.add_argument("--json", default=None, help="write the summary here")
     return ap.parse_args(argv)
 
 
-def build_and_run(args, frozen: bool) -> SimReport:
+def build_and_run(args, frozen: bool, policy: str | None = None) -> SimReport:
     scenario = get_scenario(args.scenario)
     extra = dict(steps=args.steps, seed=args.seed, backend=args.backend,
                  queue_engine=args.queue_engine, frozen_weights=frozen)
@@ -55,6 +63,11 @@ def build_and_run(args, frozen: bool) -> SimReport:
         extra["n_members"] = args.n_members
     if args.triggers_per_step is not None:
         extra["triggers_per_step"] = args.triggers_per_step
+    policy = policy if policy is not None else args.policy
+    if args.controld or args.compare_policy or policy is not None:
+        extra["controld"] = True
+    if policy is not None:
+        extra["controld_policy"] = policy
     cfg = scenario.build_config(**extra)
     return Simulator(cfg, dataclasses.replace(scenario)).run()
 
@@ -89,6 +102,33 @@ def main(argv=None) -> int:
                 f"control plane did not reduce p99 latency "
                 f"(closed={report.latency_p99_s:.6f}s "
                 f"frozen={control.latency_p99_s:.6f}s)")
+
+    if args.compare_policy:
+        # --compare-frozen-style gate for the policy layer: the PID fill
+        # controller must not lose to the proportional policy on p99
+        # the base report already IS one leg when its config matches (same
+        # deterministic seed): never run the identical simulation twice
+        if args.policy == "pid" and not args.frozen_weights:
+            pid = report
+        else:
+            pid = build_and_run(args, frozen=False, policy="pid")
+        if args.policy in (None, "proportional") and not args.frozen_weights:
+            prop = report
+        else:
+            prop = build_and_run(args, frozen=False, policy="proportional")
+        summary["policy_compare"] = {
+            "pid_p99_s": round(pid.latency_p99_s, 9),
+            "proportional_p99_s": round(prop.latency_p99_s, 9),
+            "pid_gain_s": round(prop.latency_p99_s - pid.latency_p99_s, 9),
+        }
+        violations.extend(f"pid policy run: {v}" for v in pid.violations)
+        violations.extend(f"proportional policy run: {v}"
+                          for v in prop.violations)
+        if pid.latency_p99_s > prop.latency_p99_s:
+            violations.append(
+                f"PID policy lost to proportional on p99 "
+                f"(pid={pid.latency_p99_s:.6f}s "
+                f"prop={prop.latency_p99_s:.6f}s)")
 
     summary["violations"] = violations
     print(json.dumps(summary, indent=2))

@@ -1,0 +1,34 @@
+"""repro.controld — session-oriented control-plane service (DESIGN.md
+§Controld).
+
+The paper's control plane as a *service*, not a function call: compute nodes
+reserve a virtual LB instance, register members, stream heartbeat telemetry,
+and hold leases whose expiry triggers the same hit-less drain as an explicit
+failure. Per-reservation pluggable reweighting policies (proportional / PID
+fill controller), an event-sourced journal with snapshot + replay for
+hit-less daemon restart, and two property-equal transports (in-process and
+length-prefixed socket).
+"""
+from repro.controld.daemon import ControlDaemon, Session, SessionError
+from repro.controld.journal import Entry, Journal
+from repro.controld.messages import (MESSAGE_TYPES, MUTATING_KINDS,
+                                     Deregister, Free, MessageError, Register,
+                                     Reply, Reserve, SendState, Status, Tick)
+from repro.controld.policy import (POLICIES, PIDFillPolicy, PolicyConfig,
+                                   ProportionalPolicy, WeightPolicy,
+                                   make_policy)
+from repro.controld.transport import (ControldClient, ControldError,
+                                      InProcTransport, SocketClient,
+                                      SocketServer, TransportError)
+
+__all__ = [
+    "ControlDaemon", "Session", "SessionError",
+    "Entry", "Journal",
+    "MESSAGE_TYPES", "MUTATING_KINDS", "MessageError",
+    "Reserve", "Free", "Register", "Deregister", "SendState", "Tick",
+    "Status", "Reply",
+    "POLICIES", "PolicyConfig", "WeightPolicy", "ProportionalPolicy",
+    "PIDFillPolicy", "make_policy",
+    "ControldClient", "ControldError", "InProcTransport", "SocketClient",
+    "SocketServer", "TransportError",
+]

@@ -1,0 +1,406 @@
+"""controld — the session-oriented control-plane daemon.
+
+The paper's control plane is a long-running service on the FPGA host: CN
+daemons *register with* it, stream telemetry to it, and it makes redirection
+decisions continuously. ``ControlDaemon`` is that service for this repro
+(DESIGN.md §Controld):
+
+* **Reservations** (multi-tenancy, paper §I-C): the daemon owns N virtual LB
+  instances; ``Reserve`` leases one to a tenant and returns a token that
+  scopes every subsequent member call. Each reservation gets its own
+  ``EpochManager`` + ``LoadBalancerControlPlane`` with the reweighting
+  policy the tenant selected (``controld.policy``).
+* **Leases**: a registered member holds a lease renewed by ``SendState``
+  heartbeats. A lease expiring at a ``Tick`` triggers the *same* hit-less
+  drain as ``mark_failed`` — removed from the next epoch, in-flight events
+  keep routing to it until the boundary. This is ``TelemetryHub.stale_after``
+  promoted from a passive snapshot flag to a protocol rule: a heartbeat for
+  a lapsed lease is rejected and the member must re-register.
+* **Ticks**: all time-driven behavior (lease expiry, session start, policy
+  feedback, epoch GC) happens in explicit ``Tick`` messages, so virtual-time
+  drivers (simnet) and journal replay are deterministic.
+* **Journal**: every mutating message is appended to an event-sourced
+  journal (``controld.journal``) with the clock instant it was handled at,
+  *before* it executes. ``recover`` replays a journal through a fresh daemon
+  and reproduces byte-identical calendar state (``state_digest``) — a
+  restarted daemon resumes mid-epoch with identical calendars.
+
+The daemon is transport-agnostic: ``handle`` takes a typed message and
+returns a ``Reply``; ``controld.transport`` provides the in-process and
+length-prefixed-socket fronts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from bisect import insort
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.controld import messages as M
+from repro.controld.journal import Entry, Journal
+from repro.controld.policy import make_policy
+from repro.core.control_plane import (ControlPolicy, LoadBalancerControlPlane,
+                                      MemberTelemetry)
+from repro.core.epoch import EpochManager
+from repro.core.tables import MemberSpec, TableError
+
+
+class SessionError(ValueError):
+    """Protocol-level rejection (bad token, lapsed lease, no free instance).
+    Returned to the client as ``Reply(ok=False)``, never raised across the
+    transport."""
+
+
+@dataclasses.dataclass
+class Session:
+    """One reservation: a tenant's lease on one virtual LB instance."""
+
+    token: str
+    instance: int
+    policy_name: str
+    manager: EpochManager
+    cp: LoadBalancerControlPlane
+    leases: dict[int, float] = dataclasses.field(default_factory=dict)
+    telemetry: dict[int, MemberTelemetry] = dataclasses.field(
+        default_factory=dict)
+    pending: dict[int, tuple[MemberSpec, float]] = dataclasses.field(
+        default_factory=dict)  # registered before the session started
+    started: bool = False
+    counters: dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"heartbeats": 0, "epoch_switches": 0,
+                                 "leases_expired": 0, "registered": 0,
+                                 "deregistered": 0})
+
+
+class ControlDaemon:
+    """Session manager over N virtual LB instances (module docstring)."""
+
+    def __init__(self, n_instances: int = 4,
+                 clock: Callable[[], float] = time.time,
+                 lease_s: float = 10.0,
+                 epoch_horizon: int = 1024,
+                 max_members: int = 64,
+                 journal: Optional[Journal] = None):
+        self.n_instances = n_instances
+        self.clock = clock
+        self.lease_s = float(lease_s)
+        self.epoch_horizon = int(epoch_horizon)
+        self.max_members = int(max_members)
+        self.journal = journal
+        self.sessions: dict[str, Session] = {}
+        self._free_instances: list[int] = list(range(n_instances))
+        self._token_counter = 0
+        self._replaying = False
+        self._handlers = {
+            M.Reserve.KIND: self._reserve,
+            M.Free.KIND: self._free,
+            M.Register.KIND: self._register,
+            M.Deregister.KIND: self._deregister,
+            M.SendState.KIND: self._send_state,
+            M.Tick.KIND: self._tick,
+            M.Status.KIND: self._status,
+        }
+
+    # -- the single entry point ----------------------------------------------
+    def handle(self, msg, now: Optional[float] = None) -> M.Reply:
+        """Journal (mutating kinds, WAL-style: before execution, so replay
+        sees the exact accepted sequence — rejected messages replay to the
+        same rejection), execute, reply. Protocol errors become
+        ``Reply(ok=False)``; anything else is a bug and propagates."""
+        fn = self._handlers.get(msg.KIND)
+        if fn is None:
+            return M.Reply(False, error=f"unhandled message {msg.KIND!r}")
+        if now is None:
+            now = float(self.clock())
+        if (msg.KIND in M.MUTATING_KINDS and not self._replaying
+                and self.journal is not None):
+            payload = M.to_wire(msg)
+            payload.pop("kind")
+            payload["now"] = now
+            self.journal.append(msg.KIND, payload)
+        try:
+            return M.Reply(True, data=fn(msg, now))
+        except SessionError as e:
+            return M.Reply(False, error=str(e))
+
+    def _session(self, token: str) -> Session:
+        s = self.sessions.get(token)
+        if s is None:
+            raise SessionError(f"unknown or expired reservation {token!r}")
+        return s
+
+    # -- reservation lifecycle ------------------------------------------------
+    def _reserve(self, msg: M.Reserve, now: float) -> dict:
+        if not self._free_instances:
+            raise SessionError(
+                f"all {self.n_instances} LB instances are reserved")
+        if msg.instance_hint >= 0:
+            if msg.instance_hint not in self._free_instances:
+                raise SessionError(
+                    f"instance {msg.instance_hint} is not free")
+            inst = msg.instance_hint
+            self._free_instances.remove(inst)
+        else:
+            inst = self._free_instances.pop(0)
+        try:
+            policy = make_policy(msg.policy, msg.policy_params)
+        except ValueError as e:
+            insort(self._free_instances, inst)
+            raise SessionError(str(e)) from None
+        token = f"r{self._token_counter:06d}"
+        self._token_counter += 1
+        manager = EpochManager(max_members=self.max_members)
+        cp = LoadBalancerControlPlane(
+            manager, ControlPolicy(epoch_horizon=self.epoch_horizon),
+            reweighter=policy)
+        self.sessions[token] = Session(token=token, instance=inst,
+                                       policy_name=policy.name,
+                                       manager=manager, cp=cp)
+        return {"token": token, "instance": inst, "policy": policy.name,
+                "lease_s": self.lease_s}
+
+    def _free(self, msg: M.Free, now: float) -> dict:
+        s = self._session(msg.token)
+        del self.sessions[msg.token]
+        insort(self._free_instances, s.instance)
+        return {"instance": s.instance, "counters": dict(s.counters)}
+
+    # -- member lifecycle -----------------------------------------------------
+    def _register(self, msg: M.Register, now: float) -> dict:
+        s = self._session(msg.token)
+        if not 0 <= msg.member_id < self.max_members:
+            raise SessionError(
+                f"member id {msg.member_id} out of range "
+                f"(max {self.max_members})")
+        # Every field a later (journaled!) step consumes is validated HERE,
+        # as a protocol rejection: a bad value that only blew up inside the
+        # starting Tick (e.g. weight=0 in cp.start) would crash *after* its
+        # WAL append and poison the journal for every future recover().
+        try:
+            weight = float(msg.weight)
+        except (TypeError, ValueError):
+            raise SessionError(
+                f"weight {msg.weight!r} is not a number") from None
+        if not (weight > 0.0) or not np.isfinite(weight):
+            raise SessionError(
+                f"weight must be positive and finite, got {msg.weight!r}")
+        try:
+            spec = MemberSpec(node_id=msg.node_id, base_lane=msg.base_lane,
+                              lane_bits=msg.lane_bits)
+        except TableError as e:
+            raise SessionError(str(e)) from None
+        expires = now + self.lease_s
+        s.leases[msg.member_id] = expires
+        s.counters["registered"] += 1
+        if s.started:
+            # (re-)joining a live session: the next tick's feedback sees the
+            # membership delta and schedules a hit-less epoch switch
+            s.cp.add_members({msg.member_id: spec}, weight=weight)
+            s.telemetry.pop(msg.member_id, None)
+        else:
+            s.pending[msg.member_id] = (spec, weight)
+        return {"member_id": msg.member_id, "lease_expires": expires}
+
+    def _deregister(self, msg: M.Deregister, now: float) -> dict:
+        s = self._session(msg.token)
+        if msg.member_id not in s.leases:
+            raise SessionError(f"member {msg.member_id} is not registered")
+        s.leases.pop(msg.member_id)
+        s.telemetry.pop(msg.member_id, None)
+        s.counters["deregistered"] += 1
+        if s.started:
+            # graceful exit == the failure drain: out of the next epoch,
+            # in-flight events keep their member (epoch immutability)
+            s.cp.mark_failed([msg.member_id])
+        else:
+            s.pending.pop(msg.member_id, None)
+        return {"member_id": msg.member_id}
+
+    def _send_state(self, msg: M.SendState, now: float) -> dict:
+        s = self._session(msg.token)
+        expires = s.leases.get(msg.member_id)
+        if expires is None:
+            raise SessionError(
+                f"member {msg.member_id} holds no lease (expired or never "
+                "registered) — re-register to rejoin")
+        if expires <= now:
+            # the protocol rule, independent of tick cadence: a lapsed lease
+            # cannot be renewed by a late heartbeat — the next Tick reaps it
+            # (the one drain path); the member must re-register
+            raise SessionError(
+                f"member {msg.member_id}'s lease lapsed at {expires:.6f} "
+                f"(now {now:.6f}) — re-register to rejoin")
+        new_expires = now + self.lease_s
+        s.leases[msg.member_id] = new_expires
+        s.telemetry[msg.member_id] = MemberTelemetry(
+            fill=float(msg.fill), rate=float(msg.rate),
+            healthy=bool(msg.healthy))
+        s.counters["heartbeats"] += 1
+        return {"member_id": msg.member_id, "lease_expires": new_expires}
+
+    # -- the daemon step ------------------------------------------------------
+    def _tick(self, msg: M.Tick, now: float) -> dict:
+        """Expire leases (-> hit-less drain), start pending sessions, run
+        each session's policy feedback, GC drained epochs."""
+        out = {}
+        gc_event = msg.gc_event if msg.gc_event >= 0 else msg.current_event
+        for token in sorted(self.sessions):
+            s = self.sessions[token]
+            expired = sorted(m for m, exp in s.leases.items() if exp <= now)
+            for m in expired:
+                s.leases.pop(m)
+                s.telemetry.pop(m, None)
+                s.counters["leases_expired"] += 1
+                if s.started:
+                    s.cp.mark_failed([m])  # the lease-expiry drain path
+                else:
+                    s.pending.pop(m, None)
+            eid = None
+            note = ""
+            if not s.started and s.pending:
+                members = {m: spec for m, (spec, _) in sorted(s.pending.items())}
+                weights = {m: w for m, (_, w) in sorted(s.pending.items())}
+                try:
+                    eid = s.cp.start(members, weights)
+                except (ValueError, RuntimeError) as e:
+                    # defense in depth: _register validates every field, but
+                    # a failed start must degrade to a note — this Tick is
+                    # already in the WAL, and an exception here would replay
+                    # as the same crash on every recover()
+                    note = f"session start failed: {e}"
+                else:
+                    s.started = True
+                    s.pending = {}
+            elif s.started and s.cp.members:
+                tele = {m: s.telemetry.get(m, MemberTelemetry())
+                        for m in s.cp.members}
+                try:
+                    eid = s.cp.feedback(tele, msg.current_event)
+                except RuntimeError as e:
+                    # every member drained — keep the last epoch live rather
+                    # than tearing the session down (members may re-register)
+                    note = str(e)
+                    eid = None
+                if eid is not None:
+                    s.counters["epoch_switches"] += 1
+                s.cp.garbage_collect(gc_event)
+            out[token] = {"epoch": eid, "expired": expired}
+            if note:
+                out[token]["note"] = note
+        return {"sessions": out, "now": now}
+
+    # -- read-only admin ------------------------------------------------------
+    def _status(self, msg: M.Status, now: float) -> dict:
+        tokens = [msg.token] if msg.token else sorted(self.sessions)
+        sessions = {}
+        for token in tokens:
+            s = self._session(token)
+            sessions[token] = {
+                "instance": s.instance,
+                "policy": s.policy_name,
+                "started": s.started,
+                "current_epoch": s.manager.current_epoch,
+                "members": {
+                    str(m): {"lease_remaining": round(exp - now, 9),
+                             "weight": s.cp.weights.get(m)}
+                    for m, exp in sorted(s.leases.items())},
+                "counters": dict(s.counters),
+            }
+        return {"sessions": sessions,
+                "free_instances": list(self._free_instances),
+                "journal_seq": self.journal.seq if self.journal else -1}
+
+    # -- event-sourced recovery ----------------------------------------------
+    def replay(self, entries: list[Entry]) -> int:
+        """Feed a journal history through the handlers with each entry's
+        recorded clock instant. Only valid on a virgin daemon."""
+        if self.sessions or self._token_counter:
+            raise ValueError("replay() requires a fresh daemon")
+        self._replaying = True
+        try:
+            for e in entries:
+                payload = dict(e.payload)
+                recorded_now = payload.pop("now")
+                msg = M.from_wire({"kind": e.kind, **payload})
+                self.handle(msg, now=recorded_now)
+        finally:
+            self._replaying = False
+        return len(entries)
+
+    @classmethod
+    def recover(cls, journal: Journal, **kwargs) -> "ControlDaemon":
+        """Rebuild a daemon from a journal: replay its entries, then keep
+        journaling seq-contiguously — and be recoverable again.
+
+        The replayed ``journal`` becomes the live journal: it already holds
+        the history and continues appending in place (to its file, for a
+        ``Journal.load``-ed one), so recovering from an on-disk journal
+        keeps persisting to it without duplicating entries. Pass
+        ``live_journal`` (must be empty; the history is adopted into it) to
+        redirect post-recovery appends elsewhere — e.g. a fresh file after
+        restoring from a snapshot directory."""
+        live = kwargs.pop("live_journal", None)
+        daemon = cls(journal=None, **kwargs)
+        daemon.replay(journal.entries)
+        if live is not None:
+            live.adopt(journal.entries)
+            daemon.journal = live
+        else:
+            daemon.journal = journal
+        # a file-backed journal's replayed entries are now redundant in RAM
+        journal.release_replayed()
+        return daemon
+
+    # -- state digest ---------------------------------------------------------
+    def state_digest(self) -> str:
+        """SHA-256 over the daemon's complete programmable state — calendar
+        bytes, LPM entries, member tables, epoch records, weights, leases,
+        policy state, counters. Replay is correct iff digests match."""
+        h = hashlib.sha256()
+
+        def put(obj):
+            h.update(json.dumps(obj, sort_keys=True, default=repr).encode())
+
+        put({"token_counter": self._token_counter,
+             "free_instances": list(self._free_instances),
+             "lease_s": self.lease_s})
+        for token in sorted(self.sessions):
+            s = self.sessions[token]
+            put({"token": token, "instance": s.instance,
+                 "policy": s.policy_name, "started": s.started,
+                 "leases": {str(k): s.leases[k] for k in sorted(s.leases)},
+                 "telemetry": {str(k): dataclasses.asdict(v)
+                               for k, v in sorted(s.telemetry.items())},
+                 "pending": {str(k): (dataclasses.asdict(v[0]), v[1])
+                             for k, v in sorted(s.pending.items())},
+                 "counters": s.counters,
+                 "weights": {str(k): v for k, v in sorted(s.cp.weights.items())},
+                 "scheduled": {str(k): v for k, v in
+                               sorted(s.cp._scheduled_weights.items())},
+                 "policy_state": s.cp.reweighter.state()})
+            em = s.manager
+            put({"current_epoch": em.current_epoch,
+                 "records": {str(eid): {
+                     "start": r.start_event, "end": r.end_event,
+                     "active": r.active,
+                     "prefixes": sorted((p.value, p.length)
+                                        for p in r.prefixes),
+                     "members": {str(m): dataclasses.asdict(sp)
+                                 for m, sp in sorted(r.members.items())}}
+                     for eid, r in sorted(em.records.items())}})
+            st = em.state
+            put({"members": {str(m): dataclasses.asdict(sp)
+                             for m, sp in sorted(st.members.items())},
+                 "epoch_rows": {str(k): v
+                                for k, v in sorted(st._epoch_rows.items())},
+                 "free_rows": list(st._free_rows),
+                 "lpm": sorted((p.value, p.length, repr(d))
+                               for p, d in st.epoch_lpm.entries.items())})
+            for eid in sorted(st.calendars):
+                h.update(np.ascontiguousarray(
+                    st.calendars[eid], dtype=np.int32).tobytes())
+        return h.hexdigest()

@@ -1,0 +1,208 @@
+"""Event-sourced state journal for the control daemon.
+
+Every state-changing message the daemon accepts (Reserve / Register /
+SendState / Tick / ...) is appended here *with the clock instant it was
+handled at*, before it executes — a classic write-ahead log. The daemon is
+deterministic given that sequence (token counters, epoch ids,
+``build_calendar``, policy arithmetic are all pure functions of message
+order), so replaying the journal through a fresh daemon reproduces
+byte-identical calendar state: restart is a *scenario*, not an outage
+(``ControlDaemon.recover``; exercised by simnet's ``cp_restart`` and
+``scripts/run_controld.py --demo``).
+
+Persistence follows ``checkpoint/ckpt.py``'s idioms: JSONL for the live
+append path (one flushed line per entry — a torn final line is detected and
+dropped on load, never replayed corrupt), and snapshots written to
+``snap_<seq>/`` directories with a ``manifest.json`` and an atomic
+tmp-then-rename so a killed snapshot never corrupts the restore source.
+``restore`` = latest snapshot + any newer live-tail entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+from typing import IO, Iterable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    seq: int
+    kind: str
+    payload: dict  # message fields + "now" (the clock instant handled at)
+
+    def to_line(self) -> str:
+        return json.dumps({"seq": self.seq, "kind": self.kind,
+                           "payload": self.payload},
+                          sort_keys=True, separators=(",", ":"))
+
+    @classmethod
+    def from_line(cls, line: str) -> "Entry":
+        d = json.loads(line)
+        return cls(seq=int(d["seq"]), kind=str(d["kind"]),
+                   payload=dict(d["payload"]))
+
+
+class Journal:
+    """Append-only entry log: in memory, on disk (JSONL), or both.
+
+    An in-memory journal (``path=None``) retains every entry in ``entries``
+    — it IS the replay source. A file-backed journal relies on the disk
+    copy instead (``retain=False``): a long-running daemon's memory stays
+    bounded no matter how many heartbeats it journals, and recovery reads
+    the file back (``load``)."""
+
+    def __init__(self, path: Optional[str] = None,
+                 retain: Optional[bool] = None):
+        self.path = path
+        self.retain = (path is None) if retain is None else retain
+        self.entries: list[Entry] = []
+        self._seq = -1
+        self._fh: Optional[IO[str]] = None
+        if path is not None:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a", encoding="utf-8")
+
+    @property
+    def seq(self) -> int:
+        """Sequence number of the last entry (-1 when empty)."""
+        return self._seq
+
+    def append(self, kind: str, payload: dict) -> Entry:
+        e = Entry(seq=self._seq + 1, kind=kind, payload=payload)
+        self._seq = e.seq
+        if self.retain:
+            self.entries.append(e)
+        if self._fh is not None:
+            self._fh.write(e.to_line() + "\n")
+            self._fh.flush()
+        return e
+
+    def adopt(self, entries: Iterable[Entry]) -> None:
+        """Install an already-replayed history as this journal's prefix (the
+        recovered daemon keeps journaling *after* it, seq-contiguous). Only
+        valid on an empty journal."""
+        if self._seq != -1 or self.entries:
+            raise ValueError("adopt() requires an empty journal")
+        for e in entries:
+            if e.seq != self._seq + 1:
+                raise ValueError(f"non-contiguous journal seq {e.seq}")
+            self._seq = e.seq
+            if self.retain:
+                self.entries.append(e)
+            if self._fh is not None:
+                self._fh.write(e.to_line() + "\n")
+        if self._fh is not None:
+            self._fh.flush()
+
+    def release_replayed(self) -> None:
+        """Drop the in-RAM entry list once it has been replayed, for
+        journals whose durable copy lives on disk (``retain=False``)."""
+        if not self.retain:
+            self.entries = []
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- load / snapshot / restore -------------------------------------------
+    @classmethod
+    def load(cls, path: str) -> "Journal":
+        """Read a JSONL journal back (for recovery). A torn final line —
+        a daemon killed mid-append — is dropped, not replayed corrupt.
+        The loaded ``entries`` are there to be replayed once (recover()
+        releases them afterwards; the file stays the durable copy)."""
+        j = cls(path=None)
+        torn = False
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as f:
+                lines = f.read().splitlines()
+            for i, line in enumerate(lines):
+                if not line.strip():
+                    continue
+                try:
+                    j.entries.append(Entry.from_line(line))
+                except (json.JSONDecodeError, KeyError, ValueError):
+                    if i == len(lines) - 1:
+                        torn = True
+                        break  # torn tail from a mid-append kill
+                    raise
+        if torn:
+            # rewrite without the partial line so future appends stay valid
+            with open(path, "w", encoding="utf-8") as f:
+                for e in j.entries:
+                    f.write(e.to_line() + "\n")
+        j._seq = j.entries[-1].seq if j.entries else -1
+        j.path = path
+        j.retain = False  # from here on the file is the source of truth
+        j._fh = open(path, "a", encoding="utf-8")
+        return j
+
+    def snapshot(self, directory: str) -> str:
+        """Atomic snapshot of the full entry history up to ``seq`` (ckpt.py
+        idiom: write to ``.tmp``, manifest last, one ``os.rename``)."""
+        final = os.path.join(directory, f"snap_{self.seq + 1:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        if not self.retain and self.path is not None:
+            # disk is the source of truth for a file-backed journal
+            if self._fh is not None:
+                self._fh.flush()
+            shutil.copyfile(self.path, os.path.join(tmp, "entries.jsonl"))
+        else:
+            with open(os.path.join(tmp, "entries.jsonl"), "w",
+                      encoding="utf-8") as f:
+                for e in self.entries:
+                    f.write(e.to_line() + "\n")
+        manifest = {"seq": self.seq, "n_entries": self.seq + 1,
+                    "time": time.time()}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        return final
+
+    @staticmethod
+    def latest_snapshot(directory: str) -> Optional[str]:
+        if not os.path.isdir(directory):
+            return None
+        snaps = [d for d in os.listdir(directory)
+                 if d.startswith("snap_") and not d.endswith(".tmp")]
+        if not snaps:
+            return None
+        return os.path.join(directory, max(snaps,
+                                           key=lambda d: int(d.split("_")[1])))
+
+    @classmethod
+    def restore(cls, directory: str,
+                tail_path: Optional[str] = None) -> "Journal":
+        """Latest snapshot under ``directory`` plus any live-tail entries in
+        ``tail_path`` with a newer seq. Returns an in-memory journal ready
+        for ``ControlDaemon.recover``."""
+        snap = cls.latest_snapshot(directory)
+        if snap is None:
+            raise FileNotFoundError(f"no snapshots under {directory}")
+        with open(os.path.join(snap, "manifest.json")) as f:
+            manifest = json.load(f)
+        j = cls(path=None)
+        with open(os.path.join(snap, "entries.jsonl"), encoding="utf-8") as f:
+            for line in f.read().splitlines():
+                if line.strip():
+                    j.entries.append(Entry.from_line(line))
+        j._seq = j.entries[-1].seq if j.entries else -1
+        if j.seq != manifest["seq"]:
+            raise ValueError(
+                f"snapshot {snap} inconsistent: manifest seq "
+                f"{manifest['seq']} vs entries {j.seq}")
+        if tail_path is not None and os.path.exists(tail_path):
+            tail = cls.load(tail_path)
+            tail.close()
+            for e in tail.entries:
+                if e.seq > j.seq:
+                    j.entries.append(e)
+                    j._seq = e.seq
+        return j

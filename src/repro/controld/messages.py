@@ -1,0 +1,192 @@
+"""Typed control-plane message schema (the controld wire protocol).
+
+The paper's control plane is a long-running *service* on the FPGA host:
+compute nodes register with it, stream telemetry to it, and hold leases that
+expire when they go silent (§I-B.4/5, the CN daemon feedback loop). This
+module is the protocol surface of that service — one frozen dataclass per
+message, a kind registry, and a canonical JSON wire form shared by both
+transports (in-process and length-prefixed socket), so the two are
+property-equal by construction: the in-proc path round-trips every message
+and reply through the same encoder the socket uses.
+
+Messages:
+
+* ``Reserve`` / ``Free``       — multi-tenant reservation of one virtual LB
+  instance (the paper's 4 instances per device, §I-C); ``Reserve`` returns a
+  token that scopes every member call to that instance.
+* ``Register`` / ``Deregister`` — member (CN) lifecycle inside a reservation.
+* ``SendState``               — the heartbeat: carries the MemberTelemetry
+  fields (fill / rate / healthy) and renews the member's lease.
+* ``Tick``                    — advances the daemon: expires leases, runs the
+  policy feedback, garbage-collects drained epochs. Explicit (not a timer)
+  so virtual-time drivers and journal replay are deterministic.
+* ``Status``                  — admin query, read-only (never journaled).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+
+_LEN = struct.Struct(">I")
+MAX_FRAME_BYTES = 1 << 20  # a control message is small; 1 MiB is corruption
+
+
+class MessageError(ValueError):
+    """Malformed frame / unknown kind / bad field set."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Reserve:
+    """Reserve one virtual LB instance. ``policy`` selects the reweighting
+    controller for this reservation (``proportional`` | ``pid``);
+    ``policy_params`` overrides its gains. ``instance_hint`` pins a specific
+    instance when free (-1 = daemon's choice)."""
+
+    KIND = "reserve"
+    policy: str = "proportional"
+    policy_params: dict = dataclasses.field(default_factory=dict)
+    instance_hint: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Free:
+    """Release a reservation: drains the session and returns the instance."""
+
+    KIND = "free"
+    token: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Register:
+    """Add a member (CN) to a reservation. Grants a lease that heartbeats
+    renew; re-registering after a lapsed lease is the recovery path."""
+
+    KIND = "register"
+    token: str = ""
+    member_id: int = 0
+    node_id: int = 0
+    base_lane: int = 0
+    lane_bits: int = 0
+    weight: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Deregister:
+    """Graceful exit: the member drains hit-lessly from the next epoch."""
+
+    KIND = "deregister"
+    token: str = ""
+    member_id: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SendState:
+    """Heartbeat: one telemetry sample (MemberTelemetry fields) + lease
+    renewal. A heartbeat for a lapsed lease is *rejected* — the member must
+    re-register (the protocol form of ``TelemetryHub.stale_after``)."""
+
+    KIND = "send_state"
+    token: str = ""
+    member_id: int = 0
+    fill: float = 0.0
+    rate: float = 1.0
+    healthy: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Tick:
+    """One daemon step at ``current_event``: expire leases (-> hit-less
+    drain), start pending sessions, run policy feedback per session, GC
+    drained epochs at ``gc_event`` (-1 = ``current_event``)."""
+
+    KIND = "tick"
+    current_event: int = 0
+    gc_event: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Status:
+    """Read-only admin query. With a token: that session; without: all."""
+
+    KIND = "status"
+    token: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Reply:
+    """Every request gets one. ``data`` is kind-specific; protocol errors
+    (bad token, lapsed lease, no free instance) come back ``ok=False`` with
+    ``error`` set — they are *replies*, not transport failures."""
+
+    ok: bool
+    data: dict = dataclasses.field(default_factory=dict)
+    error: str = ""
+
+
+MESSAGE_TYPES = {
+    cls.KIND: cls
+    for cls in (Reserve, Free, Register, Deregister, SendState, Tick, Status)
+}
+#: kinds that mutate daemon state and therefore must be journaled
+MUTATING_KINDS = frozenset(
+    k for k in MESSAGE_TYPES if k != Status.KIND)
+
+
+# -- canonical dict form ------------------------------------------------------
+def to_wire(msg) -> dict:
+    d = dataclasses.asdict(msg)
+    d["kind"] = msg.KIND
+    return d
+
+
+def from_wire(d: dict):
+    d = dict(d)
+    kind = d.pop("kind", None)
+    cls = MESSAGE_TYPES.get(kind)
+    if cls is None:
+        raise MessageError(f"unknown message kind {kind!r}")
+    try:
+        return cls(**d)
+    except TypeError as e:
+        raise MessageError(f"bad fields for {kind!r}: {e}") from None
+
+
+def reply_to_wire(r: Reply) -> dict:
+    return {"ok": r.ok, "data": r.data, "error": r.error}
+
+
+def reply_from_wire(d: dict) -> Reply:
+    try:
+        return Reply(ok=bool(d["ok"]), data=d.get("data") or {},
+                     error=d.get("error", ""))
+    except (KeyError, TypeError) as e:
+        raise MessageError(f"bad reply frame: {e}") from None
+
+
+# -- length-prefixed framing (the socket wire form) ---------------------------
+def pack_frame(obj: dict) -> bytes:
+    body = json.dumps(obj, sort_keys=True, separators=(",", ":")).encode()
+    if len(body) > MAX_FRAME_BYTES:
+        raise MessageError(f"frame too large ({len(body)} bytes)")
+    return _LEN.pack(len(body)) + body
+
+
+def read_frame(recv_exactly) -> dict | None:
+    """Read one frame via ``recv_exactly(n) -> bytes`` (returns b'' on EOF
+    at a frame boundary -> None)."""
+    head = recv_exactly(_LEN.size)
+    if not head:
+        return None
+    if len(head) != _LEN.size:
+        raise MessageError("truncated frame header")
+    (n,) = _LEN.unpack(head)
+    if n > MAX_FRAME_BYTES:
+        raise MessageError(f"frame too large ({n} bytes)")
+    body = recv_exactly(n)
+    if len(body) != n:
+        raise MessageError("truncated frame body")
+    try:
+        return json.loads(body.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise MessageError(f"undecodable frame: {e}") from None

@@ -1,0 +1,221 @@
+"""Pluggable reweighting policies for the control plane.
+
+``LoadBalancerControlPlane.update_weights`` historically hard-coded one PI
+update; that logic now lives here as ``ProportionalPolicy`` (bit-identical
+semantics, extracted verbatim) and the layer is pluggable per controld
+reservation: a tenant picks its controller at ``Reserve`` time.
+
+``PIDFillPolicy`` is the EJFAT-style per-member PID fill controller (the
+real control plane runs PID loops on CN fill level): proportional + integral
++ derivative on the fill error, with
+
+* **output clamping** — the per-update control action ``u`` is clamped to
+  ``±output_limit`` so one noisy sample can never slam a member's share;
+* **anti-windup by back-calculation** — when the output clamps, the integral
+  is rewound to the value that exactly saturates it (plus a hard
+  ``±integral_limit`` clip), so sustained saturation cannot wind the
+  integral up and the controller recovers without lag;
+* **calendar normalization** — weights are only meaningful relatively
+  (calendar share = w / sum w), so both policies renormalize live members to
+  mean 1 before clamping into ``[min_weight, max_weight]`` — the same
+  finalize step, which is why a zero-error PID reproduces the proportional
+  policy's fixed point exactly (property-tested in tests/test_controld.py).
+
+Policies duck-type telemetry (``.fill`` / ``.healthy`` attributes, i.e.
+``MemberTelemetry``) and expose ``state()``/``load_state()`` so the controld
+journal can replay a daemon to byte-identical controller state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PolicyConfig:
+    """Shared controller shape. ``kd``/limits only bind for the PID."""
+
+    target_fill: float = 0.5   # setpoint for receive-queue occupancy
+    kp: float = 0.5            # proportional gain on (target - fill)
+    ki: float = 0.1            # integral gain
+    kd: float = 0.0            # derivative gain (PID only)
+    min_weight: float = 0.05   # floor so a member stays reachable
+    max_weight: float = 8.0
+    integral_limit: float = 1.0   # hard clip on the integral term
+    output_limit: float = 2.0     # clamp on the per-update action (PID only)
+
+
+class WeightPolicy:
+    """Interface: ``update`` maps (weights, telemetry) -> new weights and
+    carries per-member controller state across calls."""
+
+    name = "base"
+
+    def __init__(self, cfg: PolicyConfig | None = None):
+        self.cfg = cfg or PolicyConfig()
+
+    # -- lifecycle ----------------------------------------------------------
+    def reset(self, member_ids) -> None:
+        for mid in member_ids:
+            self.add_member(mid)
+
+    def add_member(self, member_id: int) -> None:  # pragma: no cover
+        pass
+
+    def forget_member(self, member_id: int) -> None:  # pragma: no cover
+        pass
+
+    # -- journal support ----------------------------------------------------
+    def state(self) -> dict:
+        return {}
+
+    def load_state(self, st: dict) -> None:
+        pass
+
+    # -- the update ---------------------------------------------------------
+    def update(self, weights: dict[int, float], telemetry: dict) -> dict:
+        raise NotImplementedError
+
+    def _finalize(self, new: dict[int, float]) -> dict[int, float]:
+        """Calendar normalization: renormalize live members to mean 1 so
+        healthy members don't all saturate the ceiling and erase the
+        straggler signal, then clamp into [min_weight, max_weight].
+        Weight 0 (a deliberate drain) is preserved."""
+        p = self.cfg
+        live = [v for v in new.values() if v > 0]
+        mean = float(np.mean(live)) if live else 1.0
+        for mid in new:
+            if new[mid] > 0:
+                new[mid] = float(np.clip(new[mid] / max(mean, 1e-9),
+                                         p.min_weight, p.max_weight))
+        return new
+
+
+class ProportionalPolicy(WeightPolicy):
+    """The legacy PI update, extracted verbatim from
+    ``LoadBalancerControlPlane.update_weights``: slow/full members shed
+    slots, fast/empty members gain."""
+
+    name = "proportional"
+
+    def __init__(self, cfg: PolicyConfig | None = None):
+        super().__init__(cfg)
+        self._integral: dict[int, float] = {}
+
+    def add_member(self, member_id: int) -> None:
+        self._integral[member_id] = 0.0
+
+    def forget_member(self, member_id: int) -> None:
+        self._integral.pop(member_id, None)
+
+    def state(self) -> dict:
+        return {"integral": {str(k): v for k, v in self._integral.items()}}
+
+    def load_state(self, st: dict) -> None:
+        self._integral = {int(k): float(v)
+                          for k, v in st.get("integral", {}).items()}
+
+    def update(self, weights: dict[int, float], telemetry: dict) -> dict:
+        p = self.cfg
+        new = {}
+        for mid, w in weights.items():
+            t = telemetry.get(mid)
+            if t is None or not t.healthy:
+                new[mid] = 0.0 if (t is not None and not t.healthy) else w
+                continue
+            err = p.target_fill - t.fill  # positive => under-filled => more
+            self._integral[mid] = float(
+                np.clip(self._integral.get(mid, 0.0) + p.ki * err, -1.0, 1.0)
+            )
+            factor = 1.0 + p.kp * err + self._integral[mid]
+            # Organic decay never reaches zero — weight 0 is reserved for a
+            # deliberate drain (mark_failed / explicit weights).
+            new[mid] = w * max(factor, 0.1)
+        return self._finalize(new)
+
+
+class PIDFillPolicy(WeightPolicy):
+    """EJFAT-style per-member PID on queue fill, with output clamping and
+    back-calculation anti-windup (module docstring)."""
+
+    name = "pid"
+
+    def __init__(self, cfg: PolicyConfig | None = None):
+        super().__init__(cfg)
+        self._integral: dict[int, float] = {}
+        self._prev_err: dict[int, float] = {}
+
+    def add_member(self, member_id: int) -> None:
+        self._integral[member_id] = 0.0
+        self._prev_err.pop(member_id, None)
+
+    def forget_member(self, member_id: int) -> None:
+        self._integral.pop(member_id, None)
+        self._prev_err.pop(member_id, None)
+
+    def state(self) -> dict:
+        return {"integral": {str(k): v for k, v in self._integral.items()},
+                "prev_err": {str(k): v for k, v in self._prev_err.items()}}
+
+    def load_state(self, st: dict) -> None:
+        self._integral = {int(k): float(v)
+                          for k, v in st.get("integral", {}).items()}
+        self._prev_err = {int(k): float(v)
+                          for k, v in st.get("prev_err", {}).items()}
+
+    def update(self, weights: dict[int, float], telemetry: dict) -> dict:
+        p = self.cfg
+        new = {}
+        for mid, w in weights.items():
+            t = telemetry.get(mid)
+            if t is None or not t.healthy:
+                new[mid] = 0.0 if (t is not None and not t.healthy) else w
+                # a silent/unhealthy member's controller state is stale, not
+                # evidence — freeze it (no integration on missing samples)
+                continue
+            err = p.target_fill - t.fill
+            # derivative on the error; first sample after (re)registration
+            # contributes zero (no previous error to difference against)
+            d_err = err - self._prev_err.get(mid, err)
+            self._prev_err[mid] = err
+            integral = float(np.clip(
+                self._integral.get(mid, 0.0) + p.ki * err,
+                -p.integral_limit, p.integral_limit))
+            u_raw = p.kp * err + integral + p.kd * d_err
+            u = float(np.clip(u_raw, -p.output_limit, p.output_limit))
+            if u != u_raw:
+                # back-calculation: rewind the integral to the value that
+                # exactly saturates the output — windup never accumulates
+                integral = float(np.clip(u - p.kp * err - p.kd * d_err,
+                                         -p.integral_limit, p.integral_limit))
+            self._integral[mid] = integral
+            new[mid] = w * max(1.0 + u, 0.1)
+        return self._finalize(new)
+
+
+POLICIES: dict[str, type[WeightPolicy]] = {
+    ProportionalPolicy.name: ProportionalPolicy,
+    PIDFillPolicy.name: PIDFillPolicy,
+}
+
+
+def make_policy(name: str, params: dict | None = None) -> WeightPolicy:
+    """Build a policy by wire name with optional ``PolicyConfig`` overrides
+    (unknown override keys are a protocol error, not a silent ignore)."""
+    cls = POLICIES.get(name)
+    if cls is None:
+        raise ValueError(f"unknown policy {name!r}; have {sorted(POLICIES)}")
+    cfg = PolicyConfig()
+    for k, v in (params or {}).items():
+        if not hasattr(cfg, k):
+            raise ValueError(f"unknown policy param {k!r}")
+        try:
+            setattr(cfg, k, float(v))
+        except (TypeError, ValueError):
+            # must stay ValueError: the daemon maps it to a protocol
+            # rejection that replays identically from the journal — a
+            # TypeError here would crash handle() AND poison recovery
+            raise ValueError(
+                f"policy param {k}={v!r} is not a number") from None
+    return cls(cfg)

@@ -1,0 +1,218 @@
+"""controld transports: in-process and length-prefixed socket.
+
+Both fronts speak the exact same wire form (``controld.messages``): the
+in-process transport round-trips every request and reply through the JSON
+frame encoder before delivery, so anything that works in-proc works over the
+socket byte-for-byte (property-tested in tests/test_controld.py). In-proc is
+what simnet and the serving engine embed (deterministic, virtual-clock
+friendly); the socket server is what ``scripts/run_controld.py`` exposes for
+real CN daemons.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Optional
+
+from repro.controld import messages as M
+from repro.controld.daemon import ControlDaemon
+
+
+class TransportError(RuntimeError):
+    """The transport failed (connection, framing) — distinct from a protocol
+    rejection, which arrives as ``Reply(ok=False)``."""
+
+
+class InProcTransport:
+    """Direct call into a daemon in the same process — through the wire
+    encoding, so semantics are identical to the socket path."""
+
+    def __init__(self, daemon: ControlDaemon):
+        self.daemon = daemon
+
+    def call(self, msg) -> M.Reply:
+        wire = M.read_frame(_BufReader(M.pack_frame(M.to_wire(msg))).read)
+        reply = self.daemon.handle(M.from_wire(wire))
+        back = M.read_frame(
+            _BufReader(M.pack_frame(M.reply_to_wire(reply))).read)
+        return M.reply_from_wire(back)
+
+    def close(self) -> None:
+        pass
+
+
+class _BufReader:
+    def __init__(self, data: bytes):
+        self._data = data
+        self._pos = 0
+
+    def read(self, n: int) -> bytes:
+        out = self._data[self._pos:self._pos + n]
+        self._pos += len(out)
+        return out
+
+
+def _recv_exactly(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    remaining = n
+    while remaining:
+        chunk = sock.recv(remaining)
+        if not chunk:
+            break
+        chunks.append(chunk)
+        remaining -= len(chunk)
+    return b"".join(chunks)
+
+
+class SocketServer:
+    """Threaded length-prefixed-JSON server over a ``ControlDaemon``.
+
+    One thread per connection; a lock serializes ``daemon.handle`` (the
+    daemon is deliberately single-writer — the journal is a total order)."""
+
+    def __init__(self, daemon: ControlDaemon, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.daemon = daemon
+        self._lock = threading.Lock()
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self.host, self.port = self._sock.getsockname()
+        self._stop = threading.Event()
+        self._accept_thread: Optional[threading.Thread] = None
+        self._conn_threads: list[threading.Thread] = []
+
+    def start(self) -> tuple[str, int]:
+        self._sock.listen(16)
+        self._sock.settimeout(0.2)
+        self._accept_thread = threading.Thread(target=self._accept_loop,
+                                               daemon=True)
+        self._accept_thread.start()
+        return self.host, self.port
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except socket.timeout:
+                continue
+            except OSError:
+                break
+            t = threading.Thread(target=self._serve_conn, args=(conn,),
+                                 daemon=True)
+            t.start()
+            # prune finished connections so a long-running daemon's thread
+            # list stays bounded by *live* connections, not total served
+            self._conn_threads = [c for c in self._conn_threads
+                                  if c.is_alive()]
+            self._conn_threads.append(t)
+
+    def _serve_conn(self, conn: socket.socket) -> None:
+        with conn:
+            while not self._stop.is_set():
+                try:
+                    wire = M.read_frame(lambda n: _recv_exactly(conn, n))
+                except (M.MessageError, OSError):
+                    break
+                if wire is None:
+                    break  # clean EOF
+                try:
+                    msg = M.from_wire(wire)
+                except M.MessageError as e:
+                    reply = M.Reply(False, error=str(e))
+                else:
+                    with self._lock:
+                        reply = self.daemon.handle(msg)
+                try:
+                    conn.sendall(M.pack_frame(M.reply_to_wire(reply)))
+                except OSError:
+                    break
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(timeout=2.0)
+        for t in self._conn_threads:
+            t.join(timeout=2.0)
+
+
+class SocketClient:
+    """Blocking request/reply client over one connection."""
+
+    def __init__(self, host: str, port: int, timeout_s: float = 10.0):
+        self._sock = socket.create_connection((host, port),
+                                              timeout=timeout_s)
+
+    def call(self, msg) -> M.Reply:
+        try:
+            self._sock.sendall(M.pack_frame(M.to_wire(msg)))
+            wire = M.read_frame(lambda n: _recv_exactly(self._sock, n))
+        except (OSError, M.MessageError) as e:
+            raise TransportError(f"socket call failed: {e}") from e
+        if wire is None:
+            raise TransportError("server closed the connection")
+        return M.reply_from_wire(wire)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+class ControldError(RuntimeError):
+    """A protocol rejection surfaced by the high-level client."""
+
+
+class ControldClient:
+    """Convenience API over any transport: builds typed messages, raises
+    ``ControldError`` on ``ok=False`` replies, returns ``reply.data``."""
+
+    def __init__(self, transport):
+        self.transport = transport
+
+    def _call(self, msg) -> dict:
+        reply = self.transport.call(msg)
+        if not reply.ok:
+            raise ControldError(reply.error)
+        return reply.data
+
+    def reserve(self, policy: str = "proportional",
+                policy_params: dict | None = None,
+                instance_hint: int = -1) -> dict:
+        return self._call(M.Reserve(policy=policy,
+                                    policy_params=policy_params or {},
+                                    instance_hint=instance_hint))
+
+    def free(self, token: str) -> dict:
+        return self._call(M.Free(token=token))
+
+    def register(self, token: str, member_id: int, node_id: int | None = None,
+                 base_lane: int = 0, lane_bits: int = 0,
+                 weight: float = 1.0) -> dict:
+        return self._call(M.Register(
+            token=token, member_id=member_id,
+            node_id=member_id if node_id is None else node_id,
+            base_lane=base_lane, lane_bits=lane_bits, weight=weight))
+
+    def deregister(self, token: str, member_id: int) -> dict:
+        return self._call(M.Deregister(token=token, member_id=member_id))
+
+    def send_state(self, token: str, member_id: int, fill: float,
+                   rate: float = 1.0, healthy: bool = True) -> dict:
+        return self._call(M.SendState(token=token, member_id=member_id,
+                                      fill=fill, rate=rate, healthy=healthy))
+
+    def tick(self, current_event: int, gc_event: int = -1) -> dict:
+        return self._call(M.Tick(current_event=current_event,
+                                 gc_event=gc_event))
+
+    def status(self, token: str = "") -> dict:
+        return self._call(M.Status(token=token))
+
+    def close(self) -> None:
+        self.transport.close()

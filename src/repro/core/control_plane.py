@@ -18,8 +18,6 @@ import dataclasses
 import logging
 from typing import Optional
 
-import numpy as np
-
 from repro.core.epoch import EpochManager, ReconfigurationError
 from repro.core.tables import MemberSpec, TableError
 
@@ -46,13 +44,29 @@ class ControlPolicy:
 
 
 class LoadBalancerControlPlane:
-    """Monitors telemetry, recomputes weights, drives epoch transitions."""
+    """Monitors telemetry, recomputes weights, drives epoch transitions.
 
-    def __init__(self, manager: EpochManager, policy: ControlPolicy | None = None):
+    The reweighting math itself is pluggable (``repro.controld.policy``):
+    ``reweighter`` is any ``WeightPolicy``; the default reproduces the
+    historical proportional-PI update built from this instance's
+    ``ControlPolicy`` gains. controld reservations select a policy per
+    tenant (e.g. the EJFAT-style PID fill controller).
+    """
+
+    def __init__(self, manager: EpochManager, policy: ControlPolicy | None = None,
+                 reweighter=None):
         self.manager = manager
         self.policy = policy or ControlPolicy()
+        if reweighter is None:
+            # deferred import: controld builds on core, not the reverse —
+            # only the default-policy shim reaches back into controld
+            from repro.controld.policy import PolicyConfig, ProportionalPolicy
+            p = self.policy
+            reweighter = ProportionalPolicy(PolicyConfig(
+                target_fill=p.target_fill, kp=p.kp, ki=p.ki,
+                min_weight=p.min_weight, max_weight=p.max_weight))
+        self.reweighter = reweighter
         self.weights: dict[int, float] = {}
-        self._integral: dict[int, float] = {}
         self.members: dict[int, MemberSpec] = {}
         self.gc_skipped: list[tuple[int, str]] = []  # last sweep's (epoch_id, reason)
         self._scheduled_weights: dict[int, float] = {}  # as of the last epoch
@@ -61,40 +75,17 @@ class LoadBalancerControlPlane:
     def start(self, members: dict[int, MemberSpec], weights: Optional[dict] = None) -> int:
         self.members = dict(members)
         self.weights = {m: 1.0 for m in members} if weights is None else dict(weights)
-        self._integral = {m: 0.0 for m in members}
+        self.reweighter.reset(members)
         eid = self.manager.initialize(self.members, self.weights)
         self._scheduled_weights = dict(self.weights)
         return eid
 
     # -- feedback ------------------------------------------------------------
     def update_weights(self, telemetry: dict[int, MemberTelemetry]) -> dict[int, float]:
-        """PI update: slow/full members shed slots, fast/empty members gain."""
-        p = self.policy
-        new = {}
-        for mid, w in self.weights.items():
-            t = telemetry.get(mid)
-            if t is None or not t.healthy:
-                new[mid] = 0.0 if (t is not None and not t.healthy) else w
-                continue
-            err = p.target_fill - t.fill  # positive => under-filled => send more
-            self._integral[mid] = float(
-                np.clip(self._integral[mid] + p.ki * err, -1.0, 1.0)
-            )
-            factor = 1.0 + p.kp * err + self._integral[mid]
-            # Organic decay never reaches zero — weight 0 is reserved for a
-            # deliberate drain (mark_failed / explicit weights).
-            new[mid] = w * max(factor, 0.1)
-        # Weights are only meaningful relatively (calendar share = w / sum w):
-        # renormalize to mean 1 so healthy members don't all saturate the
-        # ceiling and erase the straggler signal.
-        live = [v for v in new.values() if v > 0]
-        mean = float(np.mean(live)) if live else 1.0
-        for mid in new:
-            if new[mid] > 0:
-                new[mid] = float(np.clip(new[mid] / max(mean, 1e-9),
-                                         p.min_weight, p.max_weight))
-        self.weights = new
-        return new
+        """One policy update: slow/full members shed slots, fast/empty
+        members gain (see the concrete ``WeightPolicy`` for the math)."""
+        self.weights = self.reweighter.update(self.weights, telemetry)
+        return self.weights
 
     def feedback(self, telemetry: dict[int, MemberTelemetry],
                  current_event: int,
@@ -139,13 +130,13 @@ class LoadBalancerControlPlane:
         for mid, spec in members.items():
             self.members[mid] = spec
             self.weights[mid] = weight
-            self._integral[mid] = 0.0
+            self.reweighter.add_member(mid)
 
     def remove_members(self, member_ids) -> None:
         for mid in member_ids:
             self.members.pop(mid, None)
             self.weights.pop(mid, None)
-            self._integral.pop(mid, None)
+            self.reweighter.forget_member(mid)
 
     def mark_failed(self, member_ids) -> None:
         """Fault handling: failed members are removed from the *next* epoch;

@@ -55,6 +55,12 @@ class ServeConfig:
     greedy: bool = True
     backend: str = "auto"        # data-plane backend (DataPlane)
     rebalance_every: int = 0     # ticks between control-plane reweights (0=off)
+    # Delegate the rebalance loop to a controld session (repro.controld):
+    # the engine reserves an LB instance, registers each replica as a
+    # leased member, and rebalance() becomes heartbeats + a daemon tick.
+    use_controld: bool = False
+    controld_policy: str = "proportional"
+    lease_s: float = 30.0        # replica lease (wall clock)
 
 
 class ServingEngine:
@@ -62,13 +68,37 @@ class ServingEngine:
         self.mcfg = model_cfg
         self.scfg = serve_cfg
         self.params = params
-        self.manager = EpochManager(max_members=max(64, serve_cfg.n_replicas))
-        self.cp = LoadBalancerControlPlane(self.manager)
-        members = {
-            i: MemberSpec(node_id=i, base_lane=0, lane_bits=serve_cfg.lane_bits)
-            for i in range(serve_cfg.n_replicas)
-        }
-        self.cp.start(members)
+        if serve_cfg.use_controld:
+            # the control plane as a service: the engine is one tenant of a
+            # ControlDaemon; replicas are leased members of its reservation
+            from repro.controld import (ControlDaemon, ControldClient,
+                                        InProcTransport)
+            # journal=None: the engine never recovers this daemon (it lives
+            # and dies with the process), and an unread in-memory journal
+            # would grow by one entry per heartbeat forever
+            self.daemon = ControlDaemon(
+                n_instances=1, lease_s=serve_cfg.lease_s,
+                max_members=max(64, serve_cfg.n_replicas), journal=None)
+            self.client = ControldClient(InProcTransport(self.daemon))
+            self.token = self.client.reserve(
+                policy=serve_cfg.controld_policy)["token"]
+            for i in range(serve_cfg.n_replicas):
+                self.client.register(self.token, member_id=i, node_id=i,
+                                     lane_bits=serve_cfg.lane_bits)
+            self.client.tick(current_event=0)  # starts the session (epoch 0)
+            session = self.daemon.sessions[self.token]
+            self.manager = session.manager
+            self.cp = session.cp
+        else:
+            self.daemon = None
+            self.manager = EpochManager(max_members=max(64, serve_cfg.n_replicas))
+            self.cp = LoadBalancerControlPlane(self.manager)
+            members = {
+                i: MemberSpec(node_id=i, base_lane=0,
+                              lane_bits=serve_cfg.lane_bits)
+                for i in range(serve_cfg.n_replicas)
+            }
+            self.cp.start(members)
         self.n_lanes = 1 << serve_cfg.lane_bits
         # per replica: decode state over n_lanes slots + slot occupancy
         self.states = [
@@ -209,19 +239,45 @@ class ServingEngine:
         return n_active
 
     def rebalance(self) -> Optional[int]:
-        """Close the loop: telemetry snapshot -> PI reweight -> (maybe) a
+        """Close the loop: telemetry snapshot -> policy reweight -> (maybe) a
         hit-less epoch switch. In-flight requests keep their member; the
         next ``_route_pending`` picks up the new tables via the audit-log
         watermark in ``_dataplane``. Drained epochs are quiesced right away
         (every event below the routed watermark has already been routed), so
-        repeated reweights never exhaust the calendar rows."""
-        eid = self.cp.feedback(self.hub.snapshot(), current_event=self.next_event)
-        if eid is not None:
-            self.stats["rebalances"] += 1
+        repeated reweights never exhaust the calendar rows.
+
+        With ``use_controld`` the same loop runs through the daemon session:
+        each replica's snapshot becomes a SendState heartbeat (renewing its
+        lease) and the feedback/GC happen inside the daemon's Tick."""
         # Watermark: everything below the smallest still-unrouted event
         # number has been through the data plane already.
         unrouted = [q.event_number for q in self.unrouted]
-        self.cp.garbage_collect(min(unrouted) if unrouted else self.next_event)
+        watermark = min(unrouted) if unrouted else self.next_event
+        if self.daemon is not None:
+            from repro.controld import ControldError
+            snap = self.hub.snapshot()
+            for m in sorted(snap):
+                t = snap[m]
+                try:
+                    self.client.send_state(self.token, m, fill=t.fill,
+                                           rate=t.rate, healthy=t.healthy)
+                except ControldError:
+                    # lease lapsed (e.g. a long gap between rebalances):
+                    # the replicas are this engine's own — re-register to
+                    # rejoin, then deliver the sample
+                    self.client.register(self.token, member_id=m, node_id=m,
+                                         lane_bits=self.scfg.lane_bits)
+                    self.client.send_state(self.token, m, fill=t.fill,
+                                           rate=t.rate, healthy=t.healthy)
+            res = self.client.tick(current_event=self.next_event,
+                                   gc_event=watermark)
+            eid = res["sessions"][self.token]["epoch"]
+        else:
+            eid = self.cp.feedback(self.hub.snapshot(),
+                                   current_event=self.next_event)
+            self.cp.garbage_collect(watermark)
+        if eid is not None:
+            self.stats["rebalances"] += 1
         return eid
 
     def run_until_done(self, max_ticks: int = 1000) -> None:

@@ -58,6 +58,26 @@ def _flap_link(sim, step: int) -> None:
                                     else nominal)
 
 
+def _lease_churn(sim, step: int) -> None:
+    """Member 1's CN daemon goes silent for the middle third: its lease
+    lapses at the daemon (-> the mark_failed hit-less drain), then it comes
+    back and must *re-register* to rejoin the calendar."""
+    lo, hi = sim.cfg.steps // 3, (2 * sim.cfg.steps) // 3
+    if step == lo:
+        sim.muted.add(1)
+    elif step == hi:
+        sim.muted.discard(1)
+        sim.reregister(1)
+
+
+def _restart_daemon_mid_run(sim, step: int) -> None:
+    """Kill the control daemon halfway and recover it from the journal —
+    calendars must come back byte-identical (state_digest audit) and the
+    plant must not notice (no accounting violations)."""
+    if step == sim.cfg.steps // 2:
+        sim.restart_daemon()
+
+
 SCENARIOS: dict[str, Scenario] = {
     "baseline": Scenario(
         name="baseline",
@@ -113,6 +133,32 @@ SCENARIOS: dict[str, Scenario] = {
         name="multi_instance",
         description="2 virtual LB instances partition DAQs and the farm",
         overrides=dict(n_instances=2, n_daqs=4, n_members=8),
+    ),
+    # -- controld scenarios: the CP is a session service (DESIGN.md §Controld)
+    "lease_churn": Scenario(
+        name="lease_churn",
+        description="a CN daemon goes silent mid-run: its lease lapses "
+                    "(hit-less drain, bundles accounted), then it "
+                    "re-registers and rejoins the calendar",
+        on_step=_lease_churn,
+        overrides=dict(controld=True, timeout_windows=30, reweight_every=2,
+                       lease_s=None),
+    ),
+    "cp_restart": Scenario(
+        name="cp_restart",
+        description="control daemon killed mid-run and recovered from the "
+                    "event-sourced journal; calendars byte-identical, "
+                    "traffic unaffected",
+        on_step=_restart_daemon_mid_run,
+        overrides=dict(controld=True, timeout_windows=30, reweight_every=3),
+    ),
+    "multi_tenant": Scenario(
+        name="multi_tenant",
+        description="2 reservations on one daemon: tenant 0 runs the "
+                    "proportional policy, tenant 1 the PID fill controller",
+        overrides=dict(controld=True, n_instances=2, n_daqs=4, n_members=8,
+                       controld_policy=("proportional", "pid"),
+                       timeout_windows=30),
     ),
 }
 

@@ -88,6 +88,14 @@ class SimConfig:
     stale_after_s: Optional[float] = None
     queue_capacity_pkts: int = 32            # telemetry backlog granularity
 
+    # controld mode: CNs are *clients* of a session-oriented control daemon
+    # (repro.controld) — register / heartbeat / lease lifecycle on the
+    # virtual clock instead of the embedded per-instance feedback call.
+    controld: bool = False
+    controld_policy: object = "proportional"  # str, or one str per instance
+    controld_policy_params: dict = dataclasses.field(default_factory=dict)
+    lease_s: Optional[float] = None          # default: 10 nominal windows
+
     def window_period_s(self, n_triggers: int, period_scale: float = 1.0) -> float:
         return n_triggers * self.trigger_period_s * period_scale
 
@@ -122,6 +130,10 @@ class SimReport:
     queue_fill_trace: list         # [(t, [fill per member])]
     per_member_segments: dict
     violations: list
+    # controld-mode lifecycle accounting (zero in embedded-CP mode)
+    daemon_restarts: int = 0
+    leases_expired: int = 0
+    heartbeats_rejected: int = 0
 
     @property
     def packets_per_sec(self) -> float:
@@ -178,15 +190,25 @@ class Simulator:
         self.instance_members: list[list[int]] = [
             list(range(i * per_inst, (i + 1) * per_inst))
             for i in range(cfg.n_instances)]
-        self.managers: list[EpochManager] = []
-        self.cps: list[LoadBalancerControlPlane] = []
-        for ids in self.instance_members:
-            em = EpochManager(max_members=max(64, 4 * cfg.n_members))
-            cp = LoadBalancerControlPlane(em)
-            cp.policy.epoch_horizon = max(16, 8 * cfg.triggers_per_step)
-            cp.start({m: MemberSpec(node_id=m, lane_bits=1) for m in ids})
-            self.managers.append(em)
-            self.cps.append(cp)
+        self.daemon = None
+        self.client = None
+        self.tokens: list[str] = []
+        self.muted: set[int] = set()          # members whose heartbeats stop
+        self.daemon_restarts = 0
+        self.restart_digest_mismatches = 0
+        self.heartbeats_rejected = 0
+        if cfg.controld:
+            self._start_controld()
+        else:
+            self.managers: list[EpochManager] = []
+            self.cps: list[LoadBalancerControlPlane] = []
+            for ids in self.instance_members:
+                em = EpochManager(max_members=max(64, 4 * cfg.n_members))
+                cp = LoadBalancerControlPlane(em)
+                cp.policy.epoch_horizon = max(16, 8 * cfg.triggers_per_step)
+                cp.start({m: MemberSpec(node_id=m, lane_bits=1) for m in ids})
+                self.managers.append(em)
+                self.cps.append(cp)
         self._dp_cache = DataPlaneCache(self.managers, backend=cfg.backend)
 
         # -- plant: DAQs, links, farm ----------------------------------------
@@ -233,6 +255,77 @@ class Simulator:
         self.queue_fill_trace: list[tuple[float, list[float]]] = []
         self.per_member_segments: dict[int, int] = defaultdict(int)
         self._expected: dict[tuple[int, int], np.ndarray] = {}
+
+    # -- controld mode: the CP is a *service* the CNs talk to ------------------
+    def _lease_s(self) -> float:
+        cfg = self.cfg
+        return (cfg.lease_s if cfg.lease_s is not None
+                else 10.0 * cfg.window_period_s(cfg.triggers_per_step))
+
+    def _start_controld(self) -> None:
+        """Stand up a ControlDaemon on the virtual clock; every CN registers
+        as a client of its instance's reservation (one tenant per virtual LB
+        instance) and will heartbeat at window boundaries."""
+        from repro.controld import (ControlDaemon, ControldClient,
+                                    InProcTransport, Journal)
+        cfg = self.cfg
+        daemon = ControlDaemon(
+            n_instances=cfg.n_instances, clock=self.clock.now,
+            lease_s=self._lease_s(),
+            epoch_horizon=max(16, 8 * cfg.triggers_per_step),
+            max_members=max(64, 4 * cfg.n_members),
+            journal=Journal())
+        client = ControldClient(InProcTransport(daemon))
+        policies = cfg.controld_policy
+        if isinstance(policies, str):
+            policies = [policies] * cfg.n_instances
+        self.tokens = []
+        for inst, ids in enumerate(self.instance_members):
+            r = client.reserve(policy=policies[inst], instance_hint=inst,
+                               policy_params=cfg.controld_policy_params)
+            self.tokens.append(r["token"])
+            for m in ids:
+                client.register(r["token"], member_id=m, node_id=m,
+                                lane_bits=1)
+        client.tick(current_event=0)  # starts every session (epoch 0)
+        self._bind_daemon(daemon, client)
+
+    def _bind_daemon(self, daemon, client) -> None:
+        self.daemon = daemon
+        self.client = client
+        sessions = [daemon.sessions[t] for t in self.tokens]
+        self.managers = [s.manager for s in sessions]
+        self.cps = [s.cp for s in sessions]
+
+    def _instance_of(self, member: int) -> int:
+        return member // (self.cfg.n_members // self.cfg.n_instances)
+
+    def reregister(self, member: int) -> None:
+        """A CN whose lease lapsed rejoins its reservation (scenario hook)."""
+        self.client.register(self.tokens[self._instance_of(member)],
+                             member_id=member, node_id=member, lane_bits=1)
+
+    def restart_daemon(self) -> None:
+        """Kill the daemon and recover a fresh one from its journal — the
+        hit-less restart scenario. Reservation tokens survive (they are
+        deterministic journal state); calendars must come back byte-identical
+        (audited via state_digest -> a violation on mismatch)."""
+        from repro.controld import ControlDaemon, ControldClient, InProcTransport
+        assert self.daemon is not None, "restart_daemon needs controld mode"
+        cfg = self.cfg
+        digest = self.daemon.state_digest()
+        recovered = ControlDaemon.recover(
+            self.daemon.journal,
+            n_instances=cfg.n_instances, clock=self.clock.now,
+            lease_s=self._lease_s(),
+            epoch_horizon=max(16, 8 * cfg.triggers_per_step),
+            max_members=max(64, 4 * cfg.n_members))
+        self.daemon_restarts += 1
+        if recovered.state_digest() != digest:
+            self.restart_digest_mismatches += 1
+        self._bind_daemon(recovered, ControldClient(InProcTransport(recovered)))
+        # recompile the routing tables from the recovered managers
+        self._dp_cache = DataPlaneCache(self.managers, backend=cfg.backend)
 
     # -- data plane cache (rebuild only after an epoch-state change) ----------
     def dataplane(self) -> DataPlane:
@@ -415,19 +508,14 @@ class Simulator:
                                        completed=done_by_member.get(m, 0),
                                        timed_out=new_t)
 
-        # Bundles that lost every segment before any reassembler saw them
-        # (WAN/downlink loss, queue drops, discards) never time out anywhere,
-        # so their emit state would leak in soak runs — purge on a horizon
-        # comfortably past the reassembly timeout and account them.
-        horizon = max(4 * (cfg.timeout_windows or 1), 64)
-        if step_idx % 32 == 31:
-            dead = [k for k, s in self.emit_step.items()
-                    if s < step_idx - horizon]
-            for k in dead:
-                self.emit_time.pop(k, None)
-                self.emit_step.pop(k, None)
-                self._expected.pop(k, None)
-            self.bundles_vanished += len(dead)
+        if cfg.controld:
+            self._controld_window(step_idx, fill, busy_s, accepted)
+            self.queue_fill_trace.append(
+                (self.clock.now(), [round(float(f), 4) for f in fill]))
+            self._purge_vanished(step_idx)
+            return
+
+        self._purge_vanished(step_idx)
 
         if (not cfg.frozen_weights and cfg.reweight_every
                 and (step_idx + 1) % cfg.reweight_every == 0):
@@ -443,6 +531,57 @@ class Simulator:
                             for m, w in cp.weights.items()}))
         self.queue_fill_trace.append(
             (self.clock.now(), [round(float(f), 4) for f in fill]))
+
+    def _purge_vanished(self, step_idx: int) -> None:
+        """Bundles that lost every segment before any reassembler saw them
+        (WAN/downlink loss, queue drops, discards) never time out anywhere,
+        so their emit state would leak in soak runs — purge on a horizon
+        comfortably past the reassembly timeout and account them."""
+        horizon = max(4 * (self.cfg.timeout_windows or 1), 64)
+        if step_idx % 32 == 31:
+            dead = [k for k, s in self.emit_step.items()
+                    if s < step_idx - horizon]
+            for k in dead:
+                self.emit_time.pop(k, None)
+                self.emit_step.pop(k, None)
+                self._expected.pop(k, None)
+            self.bundles_vanished += len(dead)
+
+    def _controld_window(self, step_idx: int, fill,
+                         busy_s, accepted) -> None:
+        """The controld-mode control loop: every live CN heartbeats its
+        *measured* occupancy (the same number the embedded hub would call
+        fill), then the daemon ticks at the reweight cadence — lease expiry,
+        policy feedback and epoch GC all happen inside the service."""
+        from repro.controld import ControldError
+        cfg = self.cfg
+        cap = max(cfg.queue_capacity_pkts, 1)
+        for m in range(cfg.n_members):
+            if m in self.muted:
+                continue  # a silent CN daemon: its lease will lapse
+            ra = self.reassemblers.get(m)
+            backlog = max(int(round(fill[m] * cap)),
+                          ra.n_incomplete if ra is not None else 0)
+            rate = 1.0
+            if busy_s is not None and accepted is not None and accepted[m] > 0:
+                step_time = float(busy_s[m] / accepted[m])
+                rate = 1.0 / step_time if step_time > 0 else 1.0
+            try:
+                self.client.send_state(
+                    self.tokens[self._instance_of(m)], m,
+                    fill=min(1.0, backlog / cap), rate=rate)
+            except ControldError:
+                # lapsed lease: the protocol says re-register, not heartbeat
+                self.heartbeats_rejected += 1
+        if (not cfg.frozen_weights and cfg.reweight_every
+                and (step_idx + 1) % cfg.reweight_every == 0):
+            res = self.client.tick(current_event=self.fleet.event_number)
+            for r in res["sessions"].values():
+                if r.get("epoch") is not None:
+                    self.epoch_switches += 1
+            self.weight_trajectory.append(
+                (step_idx, {m: round(w, 4) for cp in self.cps
+                            for m, w in cp.weights.items()}))
 
     # -- whole run --------------------------------------------------------------
     def run(self) -> SimReport:
@@ -464,6 +603,10 @@ class Simulator:
             violations.append(f"{split} events split across members")
         if self.corrupt:
             violations.append(f"{self.corrupt} corrupt bundles")
+        if self.restart_digest_mismatches:
+            violations.append(
+                f"{self.restart_digest_mismatches} daemon restarts did not "
+                "replay to byte-identical state")
         lossless = (self.wan.n_lost == 0 and self.daq_uplinks.n_lost == 0
                     and self.member_links.n_lost == 0
                     and self.farm.n_dropped == 0 and self.discarded == 0)
@@ -500,4 +643,9 @@ class Simulator:
             queue_fill_trace=self.queue_fill_trace,
             per_member_segments=dict(sorted(self.per_member_segments.items())),
             violations=violations,
+            daemon_restarts=self.daemon_restarts,
+            leases_expired=(sum(s.counters["leases_expired"]
+                                for s in self.daemon.sessions.values())
+                            if self.daemon is not None else 0),
+            heartbeats_rejected=self.heartbeats_rejected,
         )

@@ -127,3 +127,86 @@ class TestTelemetryHub:
         hub.report_step(0, 0.1)
         hub.report_failure(0)
         assert not hub.snapshot()[0].healthy
+
+
+class TestLeaseExpiryVsInflightEpochs:
+    """Satellite for controld: a member whose lease lapses *between*
+    schedule_epoch and the boundary must drain hit-lessly — the in-flight
+    epoch is immutable (its events keep routing to the lapsed member, so
+    their bundles are delivered and accounted), and the member leaves at
+    the first post-boundary reconfiguration."""
+
+    def test_drain_waits_for_the_inflight_boundary(self):
+        cp = _cp(3)
+        eid1 = cp.schedule_epoch(current_event=100, boundary=500)
+        # the lease lapses now: controld calls exactly this on expiry
+        cp.mark_failed([2])
+        # hysteresis: while traffic is still before the scheduled boundary,
+        # feedback must NOT reconfigure (the switch hasn't activated yet)
+        tele = {0: MemberTelemetry(fill=0.5), 1: MemberTelemetry(fill=0.5)}
+        assert cp.feedback(tele, current_event=300) is None
+        assert cp.manager.current_epoch == eid1
+        # in-flight events still route to the lapsed member — hit-less
+        evs = np.arange(500, 1012, dtype=np.uint64)
+        hi, lo = split64(evs)
+        r = route(cp.manager.device_tables(), hi, lo,
+                  np.zeros(len(evs), np.uint32))
+        assert 2 in set(np.asarray(r.member).tolist())
+        # once traffic crosses the boundary, the next feedback drains it
+        eid2 = cp.feedback(tele, current_event=520)
+        assert eid2 is not None
+        b2 = cp.manager.records[eid2].start_event
+        evs2 = np.arange(b2, b2 + 512, dtype=np.uint64)
+        hi2, lo2 = split64(evs2)
+        r2 = route(cp.manager.device_tables(), hi2, lo2,
+                   np.zeros(512, np.uint32))
+        assert 2 not in set(np.asarray(r2.member).tolist())
+
+    def test_every_epochs_slots_stay_fully_programmed(self):
+        """No half-programmed calendar anywhere in the transition: every
+        resident epoch's 512 slots map to a valid member throughout."""
+        cp = _cp(3)
+        cp.schedule_epoch(current_event=100, boundary=500)
+        cp.mark_failed([1])
+        cp.feedback({0: MemberTelemetry(fill=0.5),
+                     2: MemberTelemetry(fill=0.5)}, current_event=520)
+        for eid, cal in cp.manager.state.calendars.items():
+            counts = calendar_counts(cal, 3)
+            assert counts.sum() == 512, f"epoch {eid} has unprogrammed slots"
+            members = cp.manager.records[eid].members
+            for m in set(np.unique(cal).tolist()):
+                assert m in members
+
+
+class TestPolicyDelegation:
+    """update_weights now delegates to a pluggable WeightPolicy
+    (repro.controld.policy); the default must be the historical PI update."""
+
+    def test_default_reweighter_is_proportional_with_cp_gains(self):
+        from repro.controld.policy import ProportionalPolicy
+
+        cp = _cp(2)
+        assert isinstance(cp.reweighter, ProportionalPolicy)
+        assert cp.reweighter.cfg.kp == cp.policy.kp
+        assert cp.reweighter.cfg.min_weight == cp.policy.min_weight
+
+    def test_custom_reweighter_is_used(self):
+        from repro.controld.policy import PIDFillPolicy, PolicyConfig
+
+        cp = LoadBalancerControlPlane(
+            EpochManager(max_members=64), ControlPolicy(epoch_horizon=256),
+            reweighter=PIDFillPolicy(PolicyConfig(kd=0.2)))
+        cp.start({i: MemberSpec(node_id=i) for i in range(3)})
+        w = cp.update_weights({i: MemberTelemetry(fill=0.2 + 0.3 * i)
+                               for i in range(3)})
+        assert w[0] > w[2]  # emptier member gains share
+
+    def test_membership_changes_reach_the_policy(self):
+        cp = _cp(2)
+        cp.update_weights({0: MemberTelemetry(fill=0.9),
+                           1: MemberTelemetry(fill=0.1)})
+        assert 0 in cp.reweighter._integral
+        cp.remove_members([0])
+        assert 0 not in cp.reweighter._integral
+        cp.add_members({5: MemberSpec(node_id=5)})
+        assert cp.reweighter._integral[5] == 0.0

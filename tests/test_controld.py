@@ -1,0 +1,512 @@
+"""controld: session lifecycle, transports, journal replay, PID properties."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.controld import (ControlDaemon, ControldClient, ControldError,
+                            InProcTransport, Journal, SocketClient,
+                            SocketServer)
+from repro.controld import messages as M
+from repro.controld.policy import (PIDFillPolicy, PolicyConfig,
+                                   ProportionalPolicy, make_policy)
+from repro.core import route, split64
+from repro.testing.hypo import given, settings, st
+
+
+@dataclasses.dataclass
+class _T:  # telemetry duck-type (MemberTelemetry fields)
+    fill: float = 0.0
+    rate: float = 1.0
+    healthy: bool = True
+
+
+def _daemon(**kw):
+    kw.setdefault("n_instances", 2)
+    kw.setdefault("lease_s", 10.0)
+    kw.setdefault("epoch_horizon", 256)
+    t = 0.0
+
+    def clock():
+        return t
+    d = ControlDaemon(clock=kw.pop("clock", clock), **kw)
+    return d
+
+
+def _client(daemon):
+    return ControldClient(InProcTransport(daemon))
+
+
+class _ManualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestLifecycle:
+    def test_reserve_register_heartbeat_free(self):
+        d = _daemon(journal=Journal())
+        c = _client(d)
+        r = c.reserve(policy="proportional")
+        assert r["instance"] == 0 and r["policy"] == "proportional"
+        for m in range(4):
+            c.register(r["token"], member_id=m, node_id=m, lane_bits=1)
+        c.tick(current_event=0)
+        assert d.sessions[r["token"]].started
+        for m in range(4):
+            out = c.send_state(r["token"], m, fill=0.5)
+            assert out["lease_expires"] > 0
+        freed = c.free(r["token"])
+        assert freed["instance"] == 0
+        assert d._free_instances == [0, 1]
+
+    def test_token_scopes_all_member_calls(self):
+        d = _daemon()
+        c = _client(d)
+        r = c.reserve()
+        with pytest.raises(ControldError):
+            c.register("r999999", member_id=0)
+        with pytest.raises(ControldError):
+            c.send_state("bogus", 0, fill=0.1)
+        # a second tenant's token cannot touch the first tenant's members
+        r2 = c.reserve()
+        c.register(r["token"], member_id=0, node_id=0)
+        c.tick(current_event=0)
+        with pytest.raises(ControldError):
+            c.send_state(r2["token"], 0, fill=0.1)
+
+    def test_reservation_exhaustion_and_hint(self):
+        d = _daemon(n_instances=2)
+        c = _client(d)
+        r1 = c.reserve(instance_hint=1)
+        assert r1["instance"] == 1
+        c.reserve()
+        with pytest.raises(ControldError):
+            c.reserve()
+        c.free(r1["token"])
+        assert c.reserve()["instance"] == 1
+
+    def test_unknown_policy_is_rejected_and_instance_returned(self):
+        d = _daemon(n_instances=1)
+        c = _client(d)
+        with pytest.raises(ControldError):
+            c.reserve(policy="nonsense")
+        assert c.reserve()["instance"] == 0  # instance was not leaked
+
+    def test_bad_policy_param_rejected_without_poisoning_the_journal(self):
+        """A non-numeric policy param (valid JSON!) must come back as a
+        protocol rejection — not a TypeError that leaks the instance and,
+        being journaled pre-execution, crashes every future recover()."""
+        d = _daemon(n_instances=1, journal=Journal())
+        c = _client(d)
+        with pytest.raises(ControldError):
+            c.reserve(policy="pid", policy_params={"kp": None})
+        assert c.reserve()["instance"] == 0  # not leaked
+        rec = ControlDaemon.recover(d.journal, n_instances=1,
+                                    lease_s=10.0, epoch_horizon=256)
+        assert rec.state_digest() == d.state_digest()
+
+    def test_bad_register_fields_rejected_without_poisoning_the_journal(self):
+        """weight=0/nan/inf and bad lane_bits are protocol-valid JSON that
+        used to crash the *starting Tick* (after its WAL append) — they must
+        be rejected at Register time and the journal must stay replayable."""
+        d = _daemon(n_instances=1, journal=Journal())
+        c = _client(d)
+        r = c.reserve()
+        for bad in (dict(weight=0.0), dict(weight=float("nan")),
+                    dict(weight=float("inf")), dict(weight=-1.0),
+                    dict(lane_bits=99)):
+            with pytest.raises(ControldError):
+                c.register(r["token"], member_id=0, node_id=0, **bad)
+        c.register(r["token"], member_id=0, node_id=0)  # a good one
+        c.tick(current_event=0)
+        assert d.sessions[r["token"]].started
+        rec = ControlDaemon.recover(d.journal, n_instances=1,
+                                    lease_s=10.0, epoch_horizon=256)
+        assert rec.state_digest() == d.state_digest()
+
+    def test_deregister_drains_from_next_epoch(self):
+        clk = _ManualClock()
+        d = _daemon(clock=clk)
+        c = _client(d)
+        r = c.reserve()
+        for m in range(3):
+            c.register(r["token"], member_id=m, node_id=m)
+        c.tick(current_event=0)
+        c.deregister(r["token"], member_id=1)
+        c.tick(current_event=500)  # membership delta -> epoch switch
+        s = d.sessions[r["token"]]
+        evs = np.arange(2000, 2512, dtype=np.uint64)
+        hi, lo = split64(evs)
+        routed = route(s.manager.device_tables(), hi, lo,
+                       np.zeros(len(evs), np.uint32))
+        assert 1 not in set(np.asarray(routed.member).tolist())
+
+
+class TestLeases:
+    def test_lease_expiry_drains_like_mark_failed(self):
+        clk = _ManualClock()
+        d = _daemon(clock=clk, lease_s=5.0)
+        c = _client(d)
+        r = c.reserve()
+        for m in range(3):
+            c.register(r["token"], member_id=m, node_id=m)
+        c.tick(current_event=0)
+        # members 0 and 2 heartbeat; member 1 goes silent
+        clk.t = 4.0
+        c.send_state(r["token"], 0, fill=0.5)
+        c.send_state(r["token"], 2, fill=0.5)
+        clk.t = 6.0  # member 1's lease (granted at t=0) lapses
+        tick = c.tick(current_event=1000)
+        assert tick["sessions"][r["token"]]["expired"] == [1]
+        s = d.sessions[r["token"]]
+        assert 1 not in s.cp.members
+        # heartbeats for a lapsed lease are rejected: re-register to rejoin
+        with pytest.raises(ControldError):
+            c.send_state(r["token"], 1, fill=0.1)
+        c.register(r["token"], member_id=1, node_id=1)
+        c.send_state(r["token"], 1, fill=0.1)
+        c.tick(current_event=2000)
+        assert 1 in s.cp.members
+
+    def test_expiry_drain_is_hitless_for_inflight_epoch(self):
+        """Satellite: a lease lapsing between schedule_epoch and the boundary
+        must not disturb the in-flight epoch — old events keep routing to
+        the lapsed member; only the post-boundary epoch excludes it."""
+        clk = _ManualClock()
+        d = _daemon(clock=clk, lease_s=5.0, epoch_horizon=400)
+        c = _client(d)
+        r = c.reserve()
+        for m in range(3):
+            c.register(r["token"], member_id=m, node_id=m)
+        c.tick(current_event=0)
+        s = d.sessions[r["token"]]
+        # drive one reweight so an epoch boundary is scheduled ahead
+        clk.t = 1.0
+        for m in range(3):
+            c.send_state(r["token"], m, fill=0.9 if m == 2 else 0.2)
+        c.tick(current_event=100)  # schedules a boundary at ~500
+        boundary = s.manager.records[s.manager.current_epoch].start_event
+        assert boundary > 100
+        # members 0/1 keep heart-beating; member 2 goes silent and its lease
+        # lapses while that epoch is still in flight
+        clk.t = 4.0
+        c.send_state(r["token"], 0, fill=0.2)
+        c.send_state(r["token"], 1, fill=0.2)
+        clk.t = 6.5
+        tick = c.tick(current_event=200)  # hysteresis: boundary still ahead
+        assert tick["sessions"][r["token"]]["expired"] == [2]
+        assert 2 not in s.cp.members
+        # in-flight events (pre-boundary epochs) still route to member 2
+        evs = np.arange(0, boundary, dtype=np.uint64)
+        hi, lo = split64(evs)
+        routed = route(s.manager.device_tables(), hi, lo,
+                       np.zeros(len(evs), np.uint32))
+        assert 2 in set(np.asarray(routed.member).tolist())
+        # once traffic crosses the boundary, the next tick drains it
+        c.tick(current_event=boundary + 10)
+        evs2 = np.arange(boundary + 600, boundary + 1112, dtype=np.uint64)
+        hi2, lo2 = split64(evs2)
+        routed2 = route(s.manager.device_tables(), hi2, lo2,
+                        np.zeros(len(evs2), np.uint32))
+        assert 2 not in set(np.asarray(routed2.member).tolist())
+
+    def test_late_heartbeat_rejected_even_before_a_tick_reaps(self):
+        """The lease rule is independent of tick cadence: a heartbeat after
+        the expiry instant is rejected even while the lease is still
+        awaiting reaping by the next Tick."""
+        clk = _ManualClock()
+        d = _daemon(clock=clk, lease_s=5.0)
+        c = _client(d)
+        r = c.reserve()
+        c.register(r["token"], member_id=0, node_id=0)
+        c.tick(current_event=0)
+        clk.t = 6.0  # lapsed at t=5; no tick has run since
+        with pytest.raises(ControldError):
+            c.send_state(r["token"], 0, fill=0.3)
+        tick = c.tick(current_event=100)
+        assert tick["sessions"][r["token"]]["expired"] == [0]
+
+    def test_all_leases_expired_keeps_last_epoch_live(self):
+        clk = _ManualClock()
+        d = _daemon(clock=clk, lease_s=2.0)
+        c = _client(d)
+        r = c.reserve()
+        for m in range(2):
+            c.register(r["token"], member_id=m, node_id=m)
+        c.tick(current_event=0)
+        clk.t = 10.0
+        tick = c.tick(current_event=100)
+        assert tick["sessions"][r["token"]]["expired"] == [0, 1]
+        s = d.sessions[r["token"]]
+        assert s.manager.current_epoch is not None  # no teardown
+
+
+class TestTransportParity:
+    SCRIPT = [
+        M.Reserve(policy="pid", instance_hint=1),
+        M.Register(token="r000000", member_id=0, node_id=0, lane_bits=1),
+        M.Register(token="r000000", member_id=1, node_id=1),
+        M.Tick(current_event=0),
+        M.SendState(token="r000000", member_id=0, fill=0.8),
+        M.SendState(token="r000000", member_id=1, fill=0.2),
+        M.SendState(token="bogus", member_id=1, fill=0.2),  # rejection too
+        M.Tick(current_event=600),
+        M.Deregister(token="r000000", member_id=1),
+        M.Tick(current_event=1200),
+        M.Status(),
+    ]
+
+    def _play(self, transport, daemon):
+        clk_out = []
+        replies = []
+        for msg in self.SCRIPT:
+            r = transport.call(msg)
+            replies.append((r.ok, r.error, r.data))
+            clk_out.append(daemon.state_digest())
+        return replies, clk_out
+
+    def test_inproc_and_socket_property_equal(self):
+        """The same message script through both transports produces
+        identical replies AND identical daemon state at every step."""
+        clk1, clk2 = _ManualClock(), _ManualClock()
+        d1 = _daemon(clock=clk1)
+        d2 = _daemon(clock=clk2)
+        server = SocketServer(d2)
+        host, port = server.start()
+        try:
+            sc = SocketClient(host, port)
+            r1, s1 = self._play(InProcTransport(d1), d1)
+            r2, s2 = self._play(sc, d2)
+            sc.close()
+        finally:
+            server.stop()
+        assert s1 == s2
+        for (ok1, err1, data1), (ok2, err2, data2) in zip(r1, r2):
+            assert (ok1, err1) == (ok2, err2)
+            assert data1 == data2
+
+
+class TestJournalReplay:
+    def _workload(self, d):
+        clk = d.clock
+        c = _client(d)
+        r = c.reserve(policy="pid", policy_params={"kd": 0.1})
+        r2 = c.reserve(policy="proportional")
+        for m in range(4):
+            c.register(r["token"], member_id=m, node_id=m, lane_bits=1)
+        c.register(r2["token"], member_id=0, node_id=10)
+        c.tick(current_event=0)
+        ev = 0
+        for k in range(6):
+            clk.t += 1.0
+            for m in range(4):
+                c.send_state(r["token"], m, fill=0.9 if m == 0 else 0.3)
+            if k < 2:  # r2's member stops heart-beating after round 2
+                c.send_state(r2["token"], 0, fill=0.4)
+            ev += 400
+            c.tick(current_event=ev)
+        c.deregister(r["token"], member_id=3)
+        clk.t = 11.0  # past r2's lease (renewed at t=2), within r's (t=6)
+        c.tick(current_event=ev + 400)
+        return d
+
+    def test_replay_reproduces_byte_identical_state(self):
+        clk = _ManualClock()
+        d = self._workload(_daemon(clock=clk, lease_s=8.0,
+                                   journal=Journal()))
+        recovered = ControlDaemon.recover(d.journal, n_instances=2,
+                                          lease_s=8.0, epoch_horizon=256)
+        assert recovered.state_digest() == d.state_digest()
+        # calendars specifically must be byte-identical
+        for token, s in d.sessions.items():
+            s2 = recovered.sessions[token]
+            assert set(s.manager.state.calendars) == set(s2.manager.state.calendars)
+            for eid, cal in s.manager.state.calendars.items():
+                assert cal.tobytes() == s2.manager.state.calendars[eid].tobytes()
+
+    def test_recovered_daemon_keeps_working_and_journaling(self):
+        clk = _ManualClock()
+        d = self._workload(_daemon(clock=clk, lease_s=8.0,
+                                   journal=Journal()))
+        seq = d.journal.seq
+        rec = ControlDaemon.recover(d.journal, n_instances=2, lease_s=8.0,
+                                    epoch_horizon=256, clock=clk)
+        c = ControldClient(InProcTransport(rec))
+        token = sorted(rec.sessions)[0]
+        c.send_state(token, 0, fill=0.5)
+        assert rec.journal.seq == seq + 1  # seq-contiguous after recovery
+        # ...and the twice-recovered daemon still matches
+        rec2 = ControlDaemon.recover(rec.journal, n_instances=2, lease_s=8.0,
+                                     epoch_horizon=256)
+        assert rec2.state_digest() == rec.state_digest()
+
+    def test_jsonl_roundtrip_and_torn_tail(self, tmp_path):
+        path = os.path.join(tmp_path, "journal.jsonl")
+        clk = _ManualClock()
+        d = self._workload(_daemon(clock=clk, lease_s=8.0,
+                                   journal=Journal(path)))
+        digest = d.state_digest()
+        with open(path, "a") as f:
+            f.write('{"seq": 9999, "kind": "tick", "payl')  # torn append
+        loaded = Journal.load(path)
+        assert loaded.seq == d.journal.seq  # torn line dropped
+        rec = ControlDaemon.recover(loaded, n_instances=2, lease_s=8.0,
+                                    epoch_horizon=256)
+        assert rec.state_digest() == digest
+
+    def test_recover_from_file_keeps_persisting_without_duplication(
+            self, tmp_path):
+        """Recovering from an on-disk journal continues appending to the
+        same file seq-contiguously — a second recovery sees ONE history,
+        never a duplicated prefix (the --serve restart path)."""
+        path = os.path.join(tmp_path, "journal.jsonl")
+        clk = _ManualClock()
+        d = self._workload(_daemon(clock=clk, lease_s=8.0,
+                                   journal=Journal(path)))
+        d.journal.close()
+        rec = ControlDaemon.recover(Journal.load(path), n_instances=2,
+                                    lease_s=8.0, epoch_horizon=256, clock=clk)
+        assert rec.state_digest() == d.state_digest()
+        token = sorted(rec.sessions)[0]
+        ControldClient(InProcTransport(rec)).send_state(token, 0, fill=0.5)
+        rec.journal.close()
+        reloaded = Journal.load(path)
+        seqs = [e.seq for e in reloaded.entries]
+        assert seqs == list(range(len(seqs)))  # one contiguous history
+        rec2 = ControlDaemon.recover(reloaded, n_instances=2, lease_s=8.0,
+                                     epoch_horizon=256)
+        assert rec2.state_digest() == rec.state_digest()
+
+    def test_snapshot_restore(self, tmp_path):
+        clk = _ManualClock()
+        d = self._workload(_daemon(clock=clk, lease_s=8.0,
+                                   journal=Journal()))
+        snap_dir = str(tmp_path / "snaps")
+        d.journal.snapshot(snap_dir)
+        j = Journal.restore(snap_dir)
+        rec = ControlDaemon.recover(j, n_instances=2, lease_s=8.0,
+                                    epoch_horizon=256)
+        assert rec.state_digest() == d.state_digest()
+
+    def test_file_backed_journal_memory_stays_bounded(self, tmp_path):
+        """A journal mirrored to disk must not also retain every heartbeat
+        in RAM (a --serve daemon journals forever); the file is the replay
+        source, and snapshot() reads it from there."""
+        path = os.path.join(tmp_path, "journal.jsonl")
+        clk = _ManualClock()
+        d = self._workload(_daemon(clock=clk, lease_s=8.0,
+                                   journal=Journal(path)))
+        assert d.journal.entries == []          # disk-only retention
+        assert d.journal.seq > 0
+        snap_dir = str(tmp_path / "snaps")
+        d.journal.snapshot(snap_dir)            # snapshots from the file
+        rec = ControlDaemon.recover(Journal.restore(snap_dir),
+                                    n_instances=2, lease_s=8.0,
+                                    epoch_horizon=256)
+        assert rec.state_digest() == d.state_digest()
+
+
+class TestPIDProperties:
+    """Hypothesis properties for the PID fill policy (satellite task)."""
+
+    @settings(max_examples=40)
+    @given(st.lists(st.floats(min_value=0.0, max_value=1.0),
+                    min_size=2, max_size=6),
+           st.integers(min_value=1, max_value=30))
+    def test_weights_always_normalized_and_nonnegative(self, fills, steps):
+        pol = PIDFillPolicy(PolicyConfig(kd=0.2))
+        n = len(fills)
+        pol.reset(range(n))
+        w = {m: 1.0 for m in range(n)}
+        for _ in range(steps):
+            w = pol.update(w, {m: _T(fill=fills[m]) for m in range(n)})
+            for v in w.values():
+                assert v >= 0.0
+            live = [v for v in w.values() if v > 0]
+            assert live, "policy drove every member to zero"
+            for v in live:
+                assert pol.cfg.min_weight <= v <= pol.cfg.max_weight
+
+    @settings(max_examples=25)
+    @given(st.floats(min_value=0.6, max_value=1.0),
+           st.integers(min_value=50, max_value=400))
+    def test_anti_windup_bounds_integral_under_saturation(self, fill, steps):
+        # huge integral_limit: only back-calculation can bound the windup
+        cfg = PolicyConfig(kd=0.0, integral_limit=100.0, output_limit=0.5)
+        pol = PIDFillPolicy(cfg)
+        pol.reset(range(2))
+        w = {0: 1.0, 1: 1.0}
+        err = cfg.target_fill - fill  # sustained negative error
+        for _ in range(steps):
+            w = pol.update(w, {0: _T(fill=fill), 1: _T(fill=cfg.target_fill)})
+        bound = cfg.output_limit + cfg.kp * abs(err) + 1e-9
+        assert abs(pol._integral[0]) <= bound
+        # without anti-windup the clip would be the only bound (=100)
+        assert abs(pol._integral[0]) < cfg.integral_limit
+
+    @settings(max_examples=25)
+    @given(st.lists(st.floats(min_value=0.1, max_value=4.0),
+                    min_size=2, max_size=6),
+           st.integers(min_value=1, max_value=10))
+    def test_zero_error_reproduces_proportional_fixed_point(self, w0, steps):
+        """At setpoint fill, PID and proportional converge to the same
+        fixed point (the normalized clip of the weights) — the PID is a
+        strict generalization, not a different equilibrium."""
+        cfg = PolicyConfig(kd=0.3)
+        pid, prop = PIDFillPolicy(cfg), ProportionalPolicy(cfg)
+        n = len(w0)
+        pid.reset(range(n))
+        prop.reset(range(n))
+        w1 = {m: w0[m] for m in range(n)}
+        w2 = {m: w0[m] for m in range(n)}
+        tele = {m: _T(fill=cfg.target_fill) for m in range(n)}
+        for _ in range(steps):
+            w1 = pid.update(w1, tele)
+            w2 = prop.update(w2, tele)
+        assert w1 == w2
+        # and it IS a fixed point: one more step changes nothing (up to the
+        # renormalization's float round-trip, mean(w)/1.0 == 1 ± 1 ulp)
+        w_next = pid.update(dict(w1), tele)
+        assert w_next == pytest.approx(w1, rel=1e-12)
+
+    def test_unhealthy_member_goes_to_zero_both_policies(self):
+        for pol in (PIDFillPolicy(), ProportionalPolicy()):
+            pol.reset(range(3))
+            w = pol.update({0: 1.0, 1: 1.0, 2: 1.0},
+                           {0: _T(fill=0.5), 1: _T(fill=0.5, healthy=False),
+                            2: _T(fill=0.5)})
+            assert w[1] == 0.0 and w[0] > 0 and w[2] > 0
+
+    def test_make_policy_rejects_unknown_params(self):
+        with pytest.raises(ValueError):
+            make_policy("pid", {"kq": 1.0})
+        with pytest.raises(ValueError):
+            make_policy("banana")
+
+
+class TestServeEngineDelegation:
+    def test_engine_rebalance_via_daemon_session(self):
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models import model as Mo
+        from repro.serve.engine import ServeConfig, ServingEngine
+
+        cfg = get_smoke_config("yi_6b")
+        params = Mo.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServingEngine(cfg, ServeConfig(n_replicas=2, lane_bits=1,
+                                             max_len=64, rebalance_every=2,
+                                             use_controld=True), params)
+        for _ in range(4):
+            eng.submit(np.arange(5), max_new_tokens=3)
+        eng.run_until_done(max_ticks=60)
+        assert eng.stats["completed"] == 4
+        assert eng.daemon is not None
+        sess = eng.daemon.sessions[eng.token]
+        assert sess.counters["heartbeats"] > 0
+        # the engine's manager/cp ARE the session's (one control plane)
+        assert eng.manager is sess.manager

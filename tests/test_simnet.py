@@ -289,3 +289,63 @@ class TestLinkSetLoss:
         t, keep = ls.transit(link, np.zeros(4), np.zeros(4))
         assert keep.tolist() == [True, False, True, False]
         assert ls.n_lost == 2
+
+
+class TestControldScenarios:
+    """The control plane as a session service inside the simulator
+    (DESIGN.md §Controld): lease churn, hit-less daemon restart, tenancy."""
+
+    def test_lease_churn_drains_hitlessly_with_bundles_accounted(self):
+        sc = get_scenario("lease_churn")
+        sim = Simulator(sc.build_config(steps=60), sc)
+        r = sim.run()
+        assert r.violations == [], r.violations
+        assert r.leases_expired >= 1
+        # the silent member's lease lapsed -> it drained out of the calendar
+        # ... and after re-registering it carries traffic again (its segment
+        # count keeps growing after the rejoin step)
+        assert 1 in sim.daemon.sessions[sim.tokens[0]].cp.members
+        # full accounting despite the churn: nothing lost to the drain
+        assert (r.bundles_completed + r.bundles_pending + r.bundles_timed_out
+                + r.bundles_vanished) == r.bundles_sent
+
+    def test_cp_restart_replays_to_identical_state_mid_run(self):
+        sc = get_scenario("cp_restart")
+        sim = Simulator(sc.build_config(steps=40), sc)
+        r = sim.run()
+        assert r.daemon_restarts == 1
+        assert r.violations == [], r.violations  # includes the digest audit
+        assert r.bundles_completed > 0
+
+    def test_cp_restart_is_invisible_to_the_plant(self):
+        """A mid-run daemon restart must not change a single measured
+        number: the restarted run equals the unrestarted one exactly."""
+        sc = get_scenario("cp_restart")
+        with_restart = Simulator(sc.build_config(steps=36), sc).run()
+        no_hook = dataclasses.replace(sc, on_step=None)
+        without = Simulator(sc.build_config(steps=36), no_hook).run()
+        assert with_restart.latency_p99_s == without.latency_p99_s
+        assert with_restart.per_member_segments == without.per_member_segments
+        assert with_restart.epoch_switches == without.epoch_switches
+
+    def test_multi_tenant_policies_isolated(self):
+        sc = get_scenario("multi_tenant")
+        sim = Simulator(sc.build_config(steps=30), sc)
+        r = sim.run()
+        assert r.violations == [], r.violations
+        s0 = sim.daemon.sessions[sim.tokens[0]]
+        s1 = sim.daemon.sessions[sim.tokens[1]]
+        assert s0.policy_name == "proportional"
+        assert s1.policy_name == "pid"
+        # tenancy: each session only ever saw its own instance's members
+        assert set(s0.cp.members) == set(sim.instance_members[0])
+        assert set(s1.cp.members) == set(sim.instance_members[1])
+
+    def test_controld_mode_matches_embedded_cp_shape(self):
+        """controld-mode baseline stays clean and closes the loop (epoch
+        switches happen) — the service is a drop-in for the embedded CP."""
+        sc = get_scenario("baseline")
+        r = Simulator(sc.build_config(steps=30, controld=True), sc).run()
+        assert r.violations == []
+        assert r.bundles_completed == r.bundles_sent
+        assert r.heartbeats_rejected == 0
