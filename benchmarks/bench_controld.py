@@ -1,32 +1,52 @@
 """controld message-path throughput: the ops/s ceiling of the control plane.
 
 The paper's CP must absorb heartbeat telemetry from every CN at the reweight
-cadence; this bench measures the daemon's message path (SendState round
-trips) over both transports — in-process (what simnet and the serving
-engine embed) and the length-prefixed socket (what real CN daemons speak) —
-plus the journal-replay rate that bounds recovery time after a restart.
+cadence. Lanes:
 
-CI gates the in-proc rate (a regression here slows every closed-loop driver)
-and trend.py tracks all three against committed floors.
+* per-message heartbeats over both transports (in-proc / socket), journal
+  on and off, plus the journal-replay rate that bounds recovery time;
+* **batched** heartbeats (``SendStateBatch``, M=1024): one frame, one
+  journal entry, one telemetry scatter per window — gated >= 10x the
+  per-message in-proc path and >= 5x the per-message socket path;
+* the **fused policy** path: one ``update_lanes`` pass over [M] lanes vs M
+  scalar dict updates, and the 10k-member scaling case — one window of
+  telemetry ingested by a single ``SendStateBatch`` scatter plus ONE fused
+  jnp device call for the whole policy update (``FUSED_KERNEL_CALLS``
+  proves the single-dispatch claim).
+
+CI gates the in-proc rate, both batch speedups and the single-device-call
+invariant; trend.py tracks every metric against committed floors.
 """
 from __future__ import annotations
+
+import time as _t
+
+import numpy as np
 
 from benchmarks.common import emit_json, row, timeit
 from repro.controld import (ControlDaemon, ControldClient, InProcTransport,
                             Journal, SocketClient, SocketServer)
+from repro.controld import messages as M
+from repro.controld import policy as P
+from repro.core.control_plane import MemberTelemetry
 
 N_MEMBERS = 8
-HB_ROUNDS = 16  # heartbeats per timed call = N_MEMBERS * HB_ROUNDS
+HB_ROUNDS = 16   # heartbeats per timed call = N_MEMBERS * HB_ROUNDS
+M_BATCH = 1024   # batched-window lane width
+M_FARM = 10240   # the 10k-member single-device-call scaling case
 
 
-def _make(journal: bool):
+def _make(journal: bool, n_members: int = N_MEMBERS, tick: bool = True,
+          max_members: int = 64):
     daemon = ControlDaemon(n_instances=1, lease_s=1e9, epoch_horizon=256,
+                           max_members=max_members,
                            journal=Journal() if journal else None)
     client = ControldClient(InProcTransport(daemon))
     token = client.reserve(policy="pid")["token"]
-    for m in range(N_MEMBERS):
+    for m in range(n_members):
         client.register(token, member_id=m, node_id=m, lane_bits=1)
-    client.tick(current_event=0)
+    if tick:
+        client.tick(current_event=0)
     return daemon, client, token
 
 
@@ -38,7 +58,7 @@ def _hb_burst(client, token):
     return fn
 
 
-def run() -> float:
+def run() -> dict:
     msgs = N_MEMBERS * HB_ROUNDS
 
     # -- in-process transport (journal off / on) ------------------------------
@@ -56,7 +76,6 @@ def run() -> float:
 
     # -- journal replay (recovery-time bound) ---------------------------------
     n_entries = daemon_j.journal.seq + 1
-    import time as _t
     t0 = _t.perf_counter()
     ControlDaemon.recover(daemon_j.journal, n_instances=1, lease_s=1e9,
                           epoch_horizon=256)
@@ -65,29 +84,123 @@ def run() -> float:
     row("controld_journal_replay", replay_s * 1e6 / max(n_entries, 1),
         f"{replay:,.0f} entries/s over {n_entries} entries")
 
-    # -- socket transport -----------------------------------------------------
-    daemon_s = ControlDaemon(n_instances=1, lease_s=1e9, epoch_horizon=256)
+    # -- batched heartbeats, in-proc (one frame per window, M=1024) -----------
+    _, client_b, token_b = _make(journal=False, n_members=M_BATCH,
+                                 tick=False, max_members=M_BATCH)
+    ids = list(range(M_BATCH))
+    fills = [0.25 + 0.05 * (m % 16) for m in ids]
+    us = timeit(lambda: client_b.send_state_batch(token_b, ids, fills),
+                warmup=2, iters=20)
+    batched = M_BATCH / us * 1e6
+    row("controld_batched_inproc", us / M_BATCH,
+        f"{batched:,.0f} hb/s via one SendStateBatch of {M_BATCH}")
+
+    # per-message baseline over the SAME daemon and member count
+    def permsg_window():
+        for m in ids:
+            client_b.send_state(token_b, m, fill=fills[m])
+    us = timeit(permsg_window, warmup=1, iters=5)
+    permsg = M_BATCH / us * 1e6
+    batched_speedup = batched / permsg if permsg > 0 else 0.0
+    row("controld_batched_speedup", us / M_BATCH,
+        f"batched in-proc = {batched_speedup:.1f}x the per-message path")
+
+    # -- socket transport: per-message, then batched --------------------------
+    daemon_s = ControlDaemon(n_instances=1, lease_s=1e9, epoch_horizon=256,
+                             max_members=M_BATCH)
     server = SocketServer(daemon_s)
     host, port = server.start()
     sclient = ControldClient(SocketClient(host, port))
     stoken = sclient.reserve(policy="pid")["token"]
-    for m in range(N_MEMBERS):
-        sclient.register(stoken, member_id=m, node_id=m, lane_bits=1)
-    sclient.tick(current_event=0)
-    us = timeit(_hb_burst(sclient, stoken), warmup=2, iters=10)
+    # pipelined registration burst (also exercises frame pipelining)
+    replies = sclient.call_many(
+        [M.Register(token=stoken, member_id=m, node_id=m, lane_bits=1)
+         for m in range(M_BATCH)])
+    assert all(r.ok for r in replies)
+
+    def sock_permsg():
+        for _ in range(HB_ROUNDS):
+            for m in range(N_MEMBERS):
+                sclient.send_state(stoken, m, fill=0.25 + 0.05 * m)
+    us = timeit(sock_permsg, warmup=2, iters=10)
     sock = msgs / us * 1e6
     row("controld_socket_heartbeat", us / msgs,
         f"{sock:,.0f} msg/s over the length-prefixed socket")
+
+    us = timeit(lambda: sclient.send_state_batch(stoken, ids, fills),
+                warmup=2, iters=10)
+    sock_batched = M_BATCH / us * 1e6
+    sock_speedup = sock_batched / sock if sock > 0 else 0.0
+    row("controld_batched_socket", us / M_BATCH,
+        f"{sock_batched:,.0f} hb/s batched = {sock_speedup:.1f}x per-message")
     sclient.close()
     server.stop()
+
+    # -- fused policy update vs M scalar dict updates (M=512) -----------------
+    m_pol = 512
+    scalar_pol = P.PIDFillPolicy()
+    scalar_pol.reset(range(m_pol))
+    w_dict = {m: 1.0 for m in range(m_pol)}
+    tele = {m: MemberTelemetry(fill=0.25 + 0.001 * m) for m in range(m_pol)}
+    us_scalar = timeit(lambda: scalar_pol.update(dict(w_dict), tele),
+                       warmup=2, iters=20)
+    lane_pol = P.PIDFillPolicy()
+    lane_pol.reset(range(m_pol))
+    lane_ids = np.arange(m_pol)
+    lane_w = np.ones(m_pol)
+    lane_fill = 0.25 + 0.001 * np.arange(m_pol)
+    lane_healthy = np.ones(m_pol, bool)
+    us_lanes = timeit(lambda: lane_pol.update_lanes(
+        lane_ids, lane_w, lane_fill, lane_healthy), warmup=2, iters=20)
+    fused_speedup = us_scalar / us_lanes if us_lanes > 0 else 0.0
+    row("controld_fused_policy", us_lanes / m_pol,
+        f"update_lanes[{m_pol}] = {fused_speedup:.1f}x the scalar dict loop")
+
+    # -- the 10k-member farm: one scatter + ONE device call -------------------
+    _, client_f, token_f = _make(journal=False, n_members=M_FARM,
+                                 tick=False, max_members=M_FARM)
+    farm_ids = list(range(M_FARM))
+    farm_fills = (0.5 + 0.4 * np.sin(np.arange(M_FARM) / 37.0)).tolist()
+    farm_pol = P.PIDFillPolicy()
+    farm_pol.reset(range(M_FARM))
+    sess = next(iter(client_f.transport.daemon.sessions.values()))
+    ids_np = np.arange(M_FARM)
+    w_np = np.ones(M_FARM)
+
+    def farm_window():
+        client_f.send_state_batch(token_f, farm_ids, farm_fills)
+        farm_pol.update_lanes(ids_np, w_np, sess.lanes.fill[:M_FARM],
+                              sess.lanes.healthy[:M_FARM], engine="jnp")
+
+    farm_window()  # warm the jit cache before counting dispatches
+    calls0 = P.FUSED_KERNEL_CALLS
+    us = timeit(farm_window, warmup=1, iters=10)
+    calls_per_window = (P.FUSED_KERNEL_CALLS - calls0) / 11  # warmup+iters
+    farm_rate = M_FARM / us * 1e6
+    row("controld_fused_10k", us / M_FARM,
+        f"{farm_rate:,.0f} member-updates/s; {calls_per_window:.0f} device "
+        f"call(s) per 10k-member window")
 
     emit_json("controld", metrics={
         "inproc_msgs_per_s": inproc,
         "inproc_journaled_msgs_per_s": inproc_j,
         "socket_msgs_per_s": sock,
         "replay_entries_per_s": replay,
-    }, params={"n_members": N_MEMBERS, "hb_rounds": HB_ROUNDS})
-    return inproc
+        "batched_inproc_hb_per_s": batched,
+        "batched_inproc_speedup": batched_speedup,
+        "batched_socket_hb_per_s": sock_batched,
+        "batched_socket_speedup": sock_speedup,
+        "fused_policy_speedup_vs_scalar": fused_speedup,
+        "fused_10k_members_per_s": farm_rate,
+        "fused_10k_device_calls": calls_per_window,
+    }, params={"n_members": N_MEMBERS, "hb_rounds": HB_ROUNDS,
+               "m_batch": M_BATCH, "m_farm": M_FARM, "m_policy": m_pol})
+    return {
+        "inproc_msgs_per_s": inproc,
+        "batched_inproc_speedup": batched_speedup,
+        "batched_socket_speedup": sock_speedup,
+        "fused_10k_device_calls": calls_per_window,
+    }
 
 
 if __name__ == "__main__":

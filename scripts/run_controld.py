@@ -46,16 +46,39 @@ def parse_args(argv=None):
                     default="pid")
     ap.add_argument("--journal", default=None,
                     help="JSONL journal path (demo default: a tempdir)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="auto-compaction snapshot directory: with "
+                         "--compact-every the WAL rolls into snapshots and "
+                         "the live file stays bounded")
+    ap.add_argument("--compact-every", type=int, default=0,
+                    help="roll the WAL into a snapshot every N entries "
+                         "(0 = never; requires --snapshot-dir)")
     ap.add_argument("--json", default=None, help="write the summary here")
     return ap.parse_args(argv)
 
 
 def serve(args) -> int:
     recovered = 0
-    if args.journal and os.path.exists(args.journal):
+    snap_dir = args.snapshot_dir
+    compact = args.compact_every if snap_dir else 0
+    has_snap = (snap_dir is not None and args.journal is not None
+                and Journal.latest_snapshot(snap_dir) is not None)
+    if has_snap:
+        # compacted restart: the snapshot holds the WAL prefix, the journal
+        # file only the tail — replay both, then resume the tail in place
+        history = Journal.restore(snap_dir, tail_path=args.journal)
+        recovered = history.seq + 1
+        daemon = ControlDaemon.recover(
+            history, n_instances=args.n_instances, lease_s=args.lease_s,
+            live_journal=Journal.resume(args.journal, history.seq,
+                                        snapshot_dir=snap_dir,
+                                        compact_every=compact))
+    elif args.journal and os.path.exists(args.journal):
         # hit-less restart: replay the existing journal and keep appending
         # to it seq-contiguously (never start a second seq-0 history)
         journal = Journal.load(args.journal)
+        journal.snapshot_dir = snap_dir
+        journal.compact_every = compact
         recovered = journal.seq + 1
         daemon = ControlDaemon.recover(journal,
                                        n_instances=args.n_instances,
@@ -63,7 +86,8 @@ def serve(args) -> int:
     else:
         # no --journal: run journal-less — an in-memory journal dies with
         # the process anyway and would grow by one entry per heartbeat
-        journal = Journal(args.journal) if args.journal else None
+        journal = (Journal(args.journal, snapshot_dir=snap_dir,
+                           compact_every=compact) if args.journal else None)
         daemon = ControlDaemon(n_instances=args.n_instances,
                                lease_s=args.lease_s, journal=journal)
     server = SocketServer(daemon, host=args.host, port=args.port)
@@ -105,10 +129,15 @@ def demo(args) -> int:
     client.tick(current_event=0)
 
     ev = 0
+    checks["batched_heartbeats_accepted"] = True
     for _ in range(args.rounds):
-        for m in range(n):
-            # member 0 is the straggler: persistently over-target fill
-            client.send_state(token, m, fill=0.9 if m == 0 else 0.3)
+        # one SendStateBatch frame per round: the whole window of heartbeats
+        # in a single wire round trip (member 0 is the straggler:
+        # persistently over-target fill)
+        reply = client.send_state_batch(
+            token, list(range(n)), [0.9 if m == 0 else 0.3 for m in range(n)])
+        if reply["n_accepted"] != n or reply["rejected"]:
+            checks["batched_heartbeats_accepted"] = False
         ev += 400
         client.tick(current_event=ev)
     status = client.status(token)

@@ -9,11 +9,13 @@ fill controller), an event-sourced journal with snapshot + replay for
 hit-less daemon restart, and two property-equal transports (in-process and
 length-prefixed socket).
 """
-from repro.controld.daemon import ControlDaemon, Session, SessionError
+from repro.controld.daemon import (ControlDaemon, MemberLanes, Session,
+                                   SessionError)
 from repro.controld.journal import Entry, Journal
 from repro.controld.messages import (MESSAGE_TYPES, MUTATING_KINDS,
                                      Deregister, Free, MessageError, Register,
-                                     Reply, Reserve, SendState, Status, Tick)
+                                     Reply, Reserve, SendState,
+                                     SendStateBatch, Status, Tick)
 from repro.controld.policy import (POLICIES, PIDFillPolicy, PolicyConfig,
                                    ProportionalPolicy, WeightPolicy,
                                    make_policy)
@@ -22,11 +24,11 @@ from repro.controld.transport import (ControldClient, ControldError,
                                       SocketServer, TransportError)
 
 __all__ = [
-    "ControlDaemon", "Session", "SessionError",
+    "ControlDaemon", "MemberLanes", "Session", "SessionError",
     "Entry", "Journal",
     "MESSAGE_TYPES", "MUTATING_KINDS", "MessageError",
-    "Reserve", "Free", "Register", "Deregister", "SendState", "Tick",
-    "Status", "Reply",
+    "Reserve", "Free", "Register", "Deregister", "SendState",
+    "SendStateBatch", "Tick", "Status", "Reply",
     "POLICIES", "PolicyConfig", "WeightPolicy", "ProportionalPolicy",
     "PIDFillPolicy", "make_policy",
     "ControldClient", "ControldError", "InProcTransport", "SocketClient",

@@ -44,7 +44,7 @@ from repro.controld import messages as M
 from repro.controld.journal import Entry, Journal
 from repro.controld.policy import make_policy
 from repro.core.control_plane import (ControlPolicy, LoadBalancerControlPlane,
-                                      MemberTelemetry)
+                                      TelemetryArray)
 from repro.core.epoch import EpochManager
 from repro.core.tables import MemberSpec, TableError
 
@@ -53,6 +53,68 @@ class SessionError(ValueError):
     """Protocol-level rejection (bad token, lapsed lease, no free instance).
     Returned to the client as ``Reply(ok=False)``, never raised across the
     transport."""
+
+
+class MemberLanes:
+    """Array-native per-reservation member state: lease + telemetry lanes.
+
+    One lane per member id in ``[0, max_members)``. Telemetry lanes default
+    to ``MemberTelemetry()`` (fill 0, rate 1, healthy) so a registered
+    member that has not heartbeat yet reads exactly what the dict path's
+    ``telemetry.get(m, MemberTelemetry())`` produced; ``sampled`` tracks
+    which lanes hold a real sample (for status/digest views). A whole
+    heartbeat window lands as one fancy-index scatter."""
+
+    def __init__(self, max_members: int):
+        self.leased = np.zeros(max_members, bool)
+        self.lease_expires = np.full(max_members, -np.inf, np.float64)
+        self.fill = np.zeros(max_members, np.float64)
+        self.rate = np.ones(max_members, np.float64)
+        self.healthy = np.ones(max_members, bool)
+        self.sampled = np.zeros(max_members, bool)
+
+    def grant(self, member_id: int, expires: float) -> None:
+        self.leased[member_id] = True
+        self.lease_expires[member_id] = expires
+
+    def revoke(self, member_ids) -> None:
+        """Drop leases AND telemetry lanes (lease expiry / deregister)."""
+        idx = np.asarray(member_ids, np.int64)
+        self.leased[idx] = False
+        self.lease_expires[idx] = -np.inf
+        self.clear_samples(idx)
+
+    def clear_samples(self, member_ids) -> None:
+        idx = np.asarray(member_ids, np.int64)
+        self.fill[idx] = 0.0
+        self.rate[idx] = 1.0
+        self.healthy[idx] = True
+        self.sampled[idx] = False
+
+    def scatter(self, member_ids, fills, rates, healthy,
+                expires: float) -> None:
+        """One window of accepted heartbeats in one pass (last-sample-wins
+        for duplicate ids, numpy scatter semantics)."""
+        idx = np.asarray(member_ids, np.int64)
+        self.lease_expires[idx] = expires
+        self.fill[idx] = fills
+        self.rate[idx] = rates
+        self.healthy[idx] = healthy
+        self.sampled[idx] = True
+
+    # -- views (status / digest / dict-path interop) --------------------------
+    def lease_ids(self) -> list[int]:
+        return [int(m) for m in np.flatnonzero(self.leased)]
+
+    def lease_view(self) -> dict[int, float]:
+        return {int(m): float(self.lease_expires[m])
+                for m in np.flatnonzero(self.leased)}
+
+    def telemetry_view(self) -> dict[int, dict]:
+        return {int(m): {"fill": float(self.fill[m]),
+                         "rate": float(self.rate[m]),
+                         "healthy": bool(self.healthy[m])}
+                for m in np.flatnonzero(self.sampled)}
 
 
 @dataclasses.dataclass
@@ -64,9 +126,7 @@ class Session:
     policy_name: str
     manager: EpochManager
     cp: LoadBalancerControlPlane
-    leases: dict[int, float] = dataclasses.field(default_factory=dict)
-    telemetry: dict[int, MemberTelemetry] = dataclasses.field(
-        default_factory=dict)
+    lanes: MemberLanes
     pending: dict[int, tuple[MemberSpec, float]] = dataclasses.field(
         default_factory=dict)  # registered before the session started
     started: bool = False
@@ -84,13 +144,19 @@ class ControlDaemon:
                  lease_s: float = 10.0,
                  epoch_horizon: int = 1024,
                  max_members: int = 64,
-                 journal: Optional[Journal] = None):
+                 journal: Optional[Journal] = None,
+                 policy_engine: str = "np"):
         self.n_instances = n_instances
         self.clock = clock
         self.lease_s = float(lease_s)
         self.epoch_horizon = int(epoch_horizon)
         self.max_members = int(max_members)
         self.journal = journal
+        # engine for the fused per-Tick policy update ("np" = bit-identical
+        # to the scalar path; "jnp" = one device call per update). Recover a
+        # journal with the SAME engine it was written under — replay runs
+        # the same arithmetic, so digests only match engine-to-engine.
+        self.policy_engine = policy_engine
         self.sessions: dict[str, Session] = {}
         self._free_instances: list[int] = list(range(n_instances))
         self._token_counter = 0
@@ -101,6 +167,7 @@ class ControlDaemon:
             M.Register.KIND: self._register,
             M.Deregister.KIND: self._deregister,
             M.SendState.KIND: self._send_state,
+            M.SendStateBatch.KIND: self._send_state_batch,
             M.Tick.KIND: self._tick,
             M.Status.KIND: self._status,
         }
@@ -133,6 +200,17 @@ class ControlDaemon:
             raise SessionError(f"unknown or expired reservation {token!r}")
         return s
 
+    def _member_index(self, member_id) -> Optional[int]:
+        """Validated lane index, or None when ``member_id`` cannot address a
+        lane. A non-integer id (a string or float is valid JSON!) must be a
+        protocol rejection, never a TypeError/IndexError — the message is
+        already in the WAL, and a handler crash would replay forever."""
+        if isinstance(member_id, bool) or not isinstance(
+                member_id, (int, np.integer)):
+            return None
+        mid = int(member_id)
+        return mid if 0 <= mid < self.max_members else None
+
     # -- reservation lifecycle ------------------------------------------------
     def _reserve(self, msg: M.Reserve, now: float) -> dict:
         if not self._free_instances:
@@ -157,9 +235,11 @@ class ControlDaemon:
         cp = LoadBalancerControlPlane(
             manager, ControlPolicy(epoch_horizon=self.epoch_horizon),
             reweighter=policy)
+        cp.array_engine = self.policy_engine
         self.sessions[token] = Session(token=token, instance=inst,
                                        policy_name=policy.name,
-                                       manager=manager, cp=cp)
+                                       manager=manager, cp=cp,
+                                       lanes=MemberLanes(self.max_members))
         return {"token": token, "instance": inst, "policy": policy.name,
                 "lease_s": self.lease_s}
 
@@ -172,9 +252,9 @@ class ControlDaemon:
     # -- member lifecycle -----------------------------------------------------
     def _register(self, msg: M.Register, now: float) -> dict:
         s = self._session(msg.token)
-        if not 0 <= msg.member_id < self.max_members:
+        if self._member_index(msg.member_id) is None:
             raise SessionError(
-                f"member id {msg.member_id} out of range "
+                f"member id {msg.member_id!r} out of range "
                 f"(max {self.max_members})")
         # Every field a later (journaled!) step consumes is validated HERE,
         # as a protocol rejection: a bad value that only blew up inside the
@@ -194,23 +274,23 @@ class ControlDaemon:
         except TableError as e:
             raise SessionError(str(e)) from None
         expires = now + self.lease_s
-        s.leases[msg.member_id] = expires
+        s.lanes.grant(msg.member_id, expires)
         s.counters["registered"] += 1
         if s.started:
             # (re-)joining a live session: the next tick's feedback sees the
             # membership delta and schedules a hit-less epoch switch
             s.cp.add_members({msg.member_id: spec}, weight=weight)
-            s.telemetry.pop(msg.member_id, None)
+            s.lanes.clear_samples([msg.member_id])
         else:
             s.pending[msg.member_id] = (spec, weight)
         return {"member_id": msg.member_id, "lease_expires": expires}
 
     def _deregister(self, msg: M.Deregister, now: float) -> dict:
         s = self._session(msg.token)
-        if msg.member_id not in s.leases:
+        mid = self._member_index(msg.member_id)
+        if mid is None or not s.lanes.leased[mid]:
             raise SessionError(f"member {msg.member_id} is not registered")
-        s.leases.pop(msg.member_id)
-        s.telemetry.pop(msg.member_id, None)
+        s.lanes.revoke([mid])
         s.counters["deregistered"] += 1
         if s.started:
             # graceful exit == the failure drain: out of the next epoch,
@@ -222,11 +302,12 @@ class ControlDaemon:
 
     def _send_state(self, msg: M.SendState, now: float) -> dict:
         s = self._session(msg.token)
-        expires = s.leases.get(msg.member_id)
-        if expires is None:
+        mid = self._member_index(msg.member_id)
+        if mid is None or not s.lanes.leased[mid]:
             raise SessionError(
                 f"member {msg.member_id} holds no lease (expired or never "
                 "registered) — re-register to rejoin")
+        expires = float(s.lanes.lease_expires[mid])
         if expires <= now:
             # the protocol rule, independent of tick cadence: a lapsed lease
             # cannot be renewed by a late heartbeat — the next Tick reaps it
@@ -234,13 +315,64 @@ class ControlDaemon:
             raise SessionError(
                 f"member {msg.member_id}'s lease lapsed at {expires:.6f} "
                 f"(now {now:.6f}) — re-register to rejoin")
+        try:
+            fill, rate = float(msg.fill), float(msg.rate)
+        except (TypeError, ValueError):
+            # protocol rejection, not a crash: the message is already in
+            # the WAL and must replay to the same rejection
+            raise SessionError("fill/rate must be numbers") from None
         new_expires = now + self.lease_s
-        s.leases[msg.member_id] = new_expires
-        s.telemetry[msg.member_id] = MemberTelemetry(
-            fill=float(msg.fill), rate=float(msg.rate),
-            healthy=bool(msg.healthy))
+        s.lanes.scatter([mid], [fill], [rate], [bool(msg.healthy)],
+                        new_expires)
         s.counters["heartbeats"] += 1
-        return {"member_id": msg.member_id, "lease_expires": new_expires}
+        return {"member_id": mid, "lease_expires": new_expires}
+
+    def _send_state_batch(self, msg: M.SendStateBatch, now: float) -> dict:
+        """One heartbeat window for many members: a single array scatter
+        into the reservation's lanes. Per-member semantics are exactly M
+        ``SendState`` messages at this instant, except rejections are
+        per-member (in the reply) instead of per-message."""
+        s = self._session(msg.token)
+        try:
+            # every id through the same _member_index validation SendState
+            # uses: a float/bool/string/huge-int id is a per-member
+            # rejection, never an unsafe cast onto the wrong lane — and
+            # never an exception after the WAL append (OverflowError from a
+            # huge int would replay as a crash on every recover())
+            raw = list(msg.member_ids)
+            lanes = [self._member_index(m) for m in raw]
+            fills = np.asarray(msg.fills, np.float64)
+            rates = np.asarray(msg.rates, np.float64)
+            healthy = np.asarray(msg.healthy, bool)
+        except (TypeError, ValueError, OverflowError):
+            raise SessionError(
+                "batch fields must be parallel numeric arrays") from None
+        if not (fills.ndim == rates.ndim == healthy.ndim == 1
+                and len(lanes) == len(fills) == len(rates) == len(healthy)):
+            raise SessionError(
+                "batch arrays must be 1-D and the same length")
+        ids = np.asarray([-1 if ln is None else ln for ln in lanes],
+                         np.int64)
+        in_range = ids >= 0
+        ok = in_range.copy()
+        rows = np.flatnonzero(in_range)
+        sub = ids[rows]
+        ok[rows] = s.lanes.leased[sub] & (s.lanes.lease_expires[sub] > now)
+        new_expires = now + self.lease_s
+        acc = np.flatnonzero(ok)
+        if len(acc):
+            s.lanes.scatter(ids[acc], fills[acc], rates[acc], healthy[acc],
+                            new_expires)
+        n_acc = int(ok.sum())
+        s.counters["heartbeats"] += n_acc
+        rejected = {}
+        for i in np.flatnonzero(~ok).tolist():
+            if not in_range[i] or not s.lanes.leased[ids[i]]:
+                rejected[str(raw[i])] = "no lease — re-register to rejoin"
+            else:
+                rejected[str(raw[i])] = "lease lapsed — re-register to rejoin"
+        return {"n_accepted": n_acc, "lease_expires": float(new_expires),
+                "rejected": rejected}
 
     # -- the daemon step ------------------------------------------------------
     def _tick(self, msg: M.Tick, now: float) -> dict:
@@ -250,15 +382,17 @@ class ControlDaemon:
         gc_event = msg.gc_event if msg.gc_event >= 0 else msg.current_event
         for token in sorted(self.sessions):
             s = self.sessions[token]
-            expired = sorted(m for m, exp in s.leases.items() if exp <= now)
-            for m in expired:
-                s.leases.pop(m)
-                s.telemetry.pop(m, None)
-                s.counters["leases_expired"] += 1
+            lapsed = np.flatnonzero(s.lanes.leased
+                                    & (s.lanes.lease_expires <= now))
+            expired = [int(m) for m in lapsed]
+            if expired:
+                s.lanes.revoke(lapsed)
+                s.counters["leases_expired"] += len(expired)
                 if s.started:
-                    s.cp.mark_failed([m])  # the lease-expiry drain path
+                    s.cp.mark_failed(expired)  # the lease-expiry drain path
                 else:
-                    s.pending.pop(m, None)
+                    for m in expired:
+                        s.pending.pop(m, None)
             eid = None
             note = ""
             if not s.started and s.pending:
@@ -276,8 +410,15 @@ class ControlDaemon:
                     s.started = True
                     s.pending = {}
             elif s.started and s.cp.members:
-                tele = {m: s.telemetry.get(m, MemberTelemetry())
-                        for m in s.cp.members}
+                # exactly ONE fused policy update over [M] lanes: gather the
+                # members' telemetry lanes (defaults match the dict path's
+                # MemberTelemetry() for silent members) and hand the whole
+                # window to feedback as arrays — no per-member dict churn
+                ids = np.fromiter(s.cp.members.keys(), np.int64,
+                                  len(s.cp.members))
+                tele = TelemetryArray(
+                    member_ids=ids, fill=s.lanes.fill[ids],
+                    rate=s.lanes.rate[ids], healthy=s.lanes.healthy[ids])
                 try:
                     eid = s.cp.feedback(tele, msg.current_event)
                 except RuntimeError as e:
@@ -307,7 +448,7 @@ class ControlDaemon:
                 "members": {
                     str(m): {"lease_remaining": round(exp - now, 9),
                              "weight": s.cp.weights.get(m)}
-                    for m, exp in sorted(s.leases.items())},
+                    for m, exp in sorted(s.lanes.lease_view().items())},
                 "counters": dict(s.counters),
             }
         return {"sessions": sessions,
@@ -340,14 +481,21 @@ class ControlDaemon:
         the history and continues appending in place (to its file, for a
         ``Journal.load``-ed one), so recovering from an on-disk journal
         keeps persisting to it without duplicating entries. Pass
-        ``live_journal`` (must be empty; the history is adopted into it) to
-        redirect post-recovery appends elsewhere — e.g. a fresh file after
-        restoring from a snapshot directory."""
+        ``live_journal`` to redirect post-recovery appends elsewhere: either
+        an *empty* journal (the history is adopted into it — e.g. a fresh
+        file after restoring from a snapshot directory) or a
+        ``Journal.resume``-d one already positioned at the replayed seq
+        (a compacted WAL whose prefix lives in the snapshot dir)."""
         live = kwargs.pop("live_journal", None)
         daemon = cls(journal=None, **kwargs)
         daemon.replay(journal.entries)
         if live is not None:
-            live.adopt(journal.entries)
+            if live.seq == -1:
+                live.adopt(journal.entries)
+            elif live.seq != journal.seq:
+                raise ValueError(
+                    f"live_journal at seq {live.seq} does not resume the "
+                    f"replayed history at seq {journal.seq}")
             daemon.journal = live
         else:
             daemon.journal = journal
@@ -370,11 +518,12 @@ class ControlDaemon:
              "lease_s": self.lease_s})
         for token in sorted(self.sessions):
             s = self.sessions[token]
+            leases = s.lanes.lease_view()
             put({"token": token, "instance": s.instance,
                  "policy": s.policy_name, "started": s.started,
-                 "leases": {str(k): s.leases[k] for k in sorted(s.leases)},
-                 "telemetry": {str(k): dataclasses.asdict(v)
-                               for k, v in sorted(s.telemetry.items())},
+                 "leases": {str(k): leases[k] for k in sorted(leases)},
+                 "telemetry": {str(k): v for k, v in
+                               sorted(s.lanes.telemetry_view().items())},
                  "pending": {str(k): (dataclasses.asdict(v[0]), v[1])
                              for k, v in sorted(s.pending.items())},
                  "counters": s.counters,

@@ -52,14 +52,29 @@ class Journal:
     — it IS the replay source. A file-backed journal relies on the disk
     copy instead (``retain=False``): a long-running daemon's memory stays
     bounded no matter how many heartbeats it journals, and recovery reads
-    the file back (``load``)."""
+    the file back (``load``).
+
+    **Auto-compaction** (``snapshot_dir`` + ``compact_every``): every N
+    appends the journal rolls its WAL into a snapshot — the full history
+    (previous snapshot + live tail) lands atomically under
+    ``snapshot_dir/snap_<seq>/`` and the live file is truncated, so the WAL
+    stays bounded by N entries no matter how long the daemon runs. Recovery
+    for a compacted journal is ``Journal.restore(snapshot_dir,
+    tail_path=path)`` (+ ``Journal.resume`` to keep appending); a bare
+    ``load(path)`` only sees the tail."""
 
     def __init__(self, path: Optional[str] = None,
-                 retain: Optional[bool] = None):
+                 retain: Optional[bool] = None,
+                 snapshot_dir: Optional[str] = None,
+                 compact_every: int = 0):
         self.path = path
         self.retain = (path is None) if retain is None else retain
+        self.snapshot_dir = snapshot_dir
+        self.compact_every = int(compact_every)
         self.entries: list[Entry] = []
         self._seq = -1
+        self._since_compact = 0
+        self._compacted = False  # the live file no longer holds seq 0..
         self._fh: Optional[IO[str]] = None
         if path is not None:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -78,6 +93,10 @@ class Journal:
         if self._fh is not None:
             self._fh.write(e.to_line() + "\n")
             self._fh.flush()
+            if self.compact_every and self.snapshot_dir is not None:
+                self._since_compact += 1
+                if self._since_compact >= self.compact_every:
+                    self.compact()
         return e
 
     def adopt(self, entries: Iterable[Entry]) -> None:
@@ -148,10 +167,23 @@ class Journal:
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
         if not self.retain and self.path is not None:
-            # disk is the source of truth for a file-backed journal
+            # disk is the source of truth for a file-backed journal; after
+            # a compaction the history is split between the latest snapshot
+            # (the prefix) and the live file (the tail)
             if self._fh is not None:
                 self._fh.flush()
-            shutil.copyfile(self.path, os.path.join(tmp, "entries.jsonl"))
+            dst = os.path.join(tmp, "entries.jsonl")
+            prev = (self.latest_snapshot(self.snapshot_dir)
+                    if self._compacted and self.snapshot_dir else None)
+            if prev is None:
+                shutil.copyfile(self.path, dst)
+            else:
+                with open(dst, "wb") as out:
+                    with open(os.path.join(prev, "entries.jsonl"),
+                              "rb") as f:
+                        shutil.copyfileobj(f, out)
+                    with open(self.path, "rb") as f:
+                        shutil.copyfileobj(f, out)
         else:
             with open(os.path.join(tmp, "entries.jsonl"), "w",
                       encoding="utf-8") as f:
@@ -165,6 +197,37 @@ class Journal:
             shutil.rmtree(final)
         os.rename(tmp, final)
         return final
+
+    def compact(self) -> str:
+        """Roll the WAL: write a full-history snapshot under
+        ``snapshot_dir``, then truncate the live file — the snapshot is now
+        the durable prefix and the file only accumulates the newer tail.
+        Recovery: ``restore(snapshot_dir, tail_path=path)``; resume
+        appending with ``Journal.resume(path, seq, ...)``."""
+        if self.path is None or self._fh is None:
+            raise ValueError("compact() requires a file-backed journal")
+        if self.snapshot_dir is None:
+            raise ValueError("compact() requires snapshot_dir")
+        final = self.snapshot(self.snapshot_dir)
+        self._fh.close()
+        self._fh = open(self.path, "w", encoding="utf-8")  # truncate
+        self._compacted = True
+        self._since_compact = 0
+        return final
+
+    @classmethod
+    def resume(cls, path: str, base_seq: int,
+               snapshot_dir: Optional[str] = None,
+               compact_every: int = 0) -> "Journal":
+        """Continue a compacted WAL at ``base_seq`` without rewriting the
+        replayed history into it: the snapshot under ``snapshot_dir`` holds
+        the prefix, ``path`` holds (and keeps accumulating) the tail. Hand
+        this to ``ControlDaemon.recover(..., live_journal=...)``."""
+        j = cls(path=path, retain=False, snapshot_dir=snapshot_dir,
+                compact_every=compact_every)
+        j._seq = int(base_seq)
+        j._compacted = True
+        return j
 
     @staticmethod
     def latest_snapshot(directory: str) -> Optional[str]:

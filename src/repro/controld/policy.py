@@ -24,12 +24,136 @@ real control plane runs PID loops on CN fill level): proportional + integral
 Policies duck-type telemetry (``.fill`` / ``.healthy`` attributes, i.e.
 ``MemberTelemetry``) and expose ``state()``/``load_state()`` so the controld
 journal can replay a daemon to byte-identical controller state.
+
+**Array-native path** (the perf hot path): ``update_lanes`` runs the same
+controller over ``[M]`` lanes at once — weights, fill, health, integral and
+derivative state all as arrays — in one fused pass instead of M scalar
+dict updates. Two engines:
+
+* ``engine="np"`` — vectorized float64 numpy, **bit-identical** to the
+  scalar dict path (same elementwise IEEE ops, same pairwise-summation
+  mean over live members in the same lane order). This is what the daemon
+  runs per Tick, so journal replay stays byte-identical.
+* ``engine="jnp"`` — one fused, jitted jax kernel: a 10k-member farm's
+  whole policy update is a single device call (float32 on device, so
+  property-equal to the oracle within float tolerance, not bitwise).
+  ``FUSED_KERNEL_CALLS`` counts device dispatches so benchmarks can prove
+  the single-call claim.
+
+The scalar ``update`` stays as the reference oracle; the lanes path is
+property-tested element-wise against it (tests/test_controld.py), including
+missing/stale members, drains, and saturation/anti-windup edges.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+#: number of fused jnp kernel dispatches (device calls) since import —
+#: benchmarks diff this around an update to prove "one device call per tick"
+FUSED_KERNEL_CALLS = 0
+
+_PROP_JIT = None
+_PID_JIT = None
+
+
+def _finalize_lanes(xp, new, min_w, max_w):
+    """Jit-safe calendar normalization (no boolean compression): live mean
+    via masked sum / count, then the same clamp as ``_finalize``."""
+    live = new > 0
+    cnt = xp.sum(live)
+    mean = xp.where(cnt > 0,
+                    xp.sum(xp.where(live, new, 0.0)) / xp.maximum(cnt, 1),
+                    1.0)
+    scaled = xp.clip(new / xp.maximum(mean, 1e-9), min_w, max_w)
+    return xp.where(live, scaled, new)
+
+
+def _finalize_np(new, min_w, max_w):
+    """Exact-parity finalize: ``np.mean`` over the live lanes in lane order
+    is the same pairwise summation the scalar ``_finalize`` performs over
+    its python list, so the np engine matches the oracle bitwise."""
+    live = new > 0
+    mean = float(np.mean(new[live])) if live.any() else 1.0
+    scaled = np.clip(new / max(mean, 1e-9), min_w, max_w)
+    return np.where(live, scaled, new)
+
+
+def _prop_np(weights, fill, healthy, present, integral, p):
+    err = p.target_fill - fill
+    integ = np.clip(integral + p.ki * err, -1.0, 1.0)
+    upd = healthy & present
+    new = np.where(upd, weights * np.maximum(1.0 + p.kp * err + integ, 0.1),
+                   np.where(present, 0.0, weights))
+    return (_finalize_np(new, p.min_weight, p.max_weight),
+            np.where(upd, integ, integral))
+
+
+def _pid_np(weights, fill, healthy, present, integral, prev_err, has_prev, p):
+    err = p.target_fill - fill
+    d_err = np.where(has_prev, err - prev_err, 0.0)
+    integ = np.clip(integral + p.ki * err,
+                    -p.integral_limit, p.integral_limit)
+    u_raw = p.kp * err + integ + p.kd * d_err
+    u = np.clip(u_raw, -p.output_limit, p.output_limit)
+    integ = np.where(u != u_raw,
+                     np.clip(u - p.kp * err - p.kd * d_err,
+                             -p.integral_limit, p.integral_limit), integ)
+    upd = healthy & present
+    new = np.where(upd, weights * np.maximum(1.0 + u, 0.1),
+                   np.where(present, 0.0, weights))
+    return (_finalize_np(new, p.min_weight, p.max_weight),
+            np.where(upd, integ, integral),
+            np.where(upd, err, prev_err),
+            has_prev | upd)
+
+
+def _fused_kernels():
+    """Build (once) the jitted [M]-lane kernels. Gains travel as a traced
+    array argument, so one trace serves every PolicyConfig and every lane
+    count M gets exactly one compile."""
+    global _PROP_JIT, _PID_JIT
+    if _PROP_JIT is None:
+        import jax
+        import jax.numpy as jnp
+
+        def prop(weights, fill, healthy, present, integral, gains):
+            target, kp, ki, min_w, max_w = (gains[0], gains[1], gains[2],
+                                            gains[3], gains[4])
+            err = target - fill
+            integ = jnp.clip(integral + ki * err, -1.0, 1.0)
+            upd = healthy & present
+            new = jnp.where(
+                upd, weights * jnp.maximum(1.0 + kp * err + integ, 0.1),
+                jnp.where(present, 0.0, weights))
+            return (_finalize_lanes(jnp, new, min_w, max_w),
+                    jnp.where(upd, integ, integral))
+
+        def pid(weights, fill, healthy, present, integral, prev_err,
+                has_prev, gains):
+            (target, kp, ki, kd, min_w, max_w, int_lim, out_lim) = (
+                gains[0], gains[1], gains[2], gains[3], gains[4], gains[5],
+                gains[6], gains[7])
+            err = target - fill
+            d_err = jnp.where(has_prev, err - prev_err, 0.0)
+            integ = jnp.clip(integral + ki * err, -int_lim, int_lim)
+            u_raw = kp * err + integ + kd * d_err
+            u = jnp.clip(u_raw, -out_lim, out_lim)
+            integ = jnp.where(u != u_raw,
+                              jnp.clip(u - kp * err - kd * d_err,
+                                       -int_lim, int_lim), integ)
+            upd = healthy & present
+            new = jnp.where(upd, weights * jnp.maximum(1.0 + u, 0.1),
+                            jnp.where(present, 0.0, weights))
+            return (_finalize_lanes(jnp, new, min_w, max_w),
+                    jnp.where(upd, integ, integral),
+                    jnp.where(upd, err, prev_err),
+                    has_prev | upd)
+
+        _PROP_JIT = jax.jit(prop)
+        _PID_JIT = jax.jit(pid)
+    return _PROP_JIT, _PID_JIT
 
 
 @dataclasses.dataclass
@@ -76,6 +200,56 @@ class WeightPolicy:
     # -- the update ---------------------------------------------------------
     def update(self, weights: dict[int, float], telemetry: dict) -> dict:
         raise NotImplementedError
+
+    # -- the array-native update --------------------------------------------
+    def update_lanes(self, member_ids, weights, fill, healthy,
+                     present=None, engine: str = "np") -> np.ndarray:
+        """One fused policy update over ``[M]`` lanes.
+
+        ``member_ids[i]`` names lane ``i``; ``present[i]=False`` means no
+        telemetry arrived for that member this window (scalar-path
+        ``t is None``: weight and controller state are left untouched),
+        while ``present & ~healthy`` is an explicit drain (weight -> 0).
+        Per-member controller state is gathered from / scattered back to the
+        same dicts the scalar path (and the journal ``state()``) uses, so
+        the two paths are interchangeable mid-stream. Returns the new
+        weight array; ``engine="jnp"`` runs the whole update as one jitted
+        device call."""
+        raise NotImplementedError
+
+    @staticmethod
+    def _coerce_lanes(member_ids, weights, fill, healthy, present):
+        ids = np.asarray(member_ids, np.int64)
+        w = np.asarray(weights, np.float64)
+        fill = np.asarray(fill, np.float64)
+        healthy = np.asarray(healthy, bool)
+        present = (np.ones(len(ids), bool) if present is None
+                   else np.asarray(present, bool))
+        if not (ids.shape == w.shape == fill.shape == healthy.shape
+                == present.shape) or ids.ndim != 1:
+            raise ValueError("lane arrays must be 1-D and the same length")
+        return ids, w, fill, healthy, present
+
+    def _gains(self, kind: str) -> np.ndarray:
+        p = self.cfg
+        if kind == "prop":
+            vals = (p.target_fill, p.kp, p.ki, p.min_weight, p.max_weight)
+        else:
+            vals = (p.target_fill, p.kp, p.ki, p.kd, p.min_weight,
+                    p.max_weight, p.integral_limit, p.output_limit)
+        return np.asarray(vals, np.float32)
+
+    def _gather(self, store: dict, ids: np.ndarray,
+                default: float = 0.0) -> np.ndarray:
+        return np.fromiter((store.get(int(m), default) for m in ids),
+                           np.float64, count=len(ids))
+
+    @staticmethod
+    def _scatter(store: dict, ids: np.ndarray, values: np.ndarray,
+                 mask: np.ndarray) -> None:
+        if mask.any():
+            store.update(zip(ids[mask].tolist(),
+                             np.asarray(values, np.float64)[mask].tolist()))
 
     def _finalize(self, new: dict[int, float]) -> dict[int, float]:
         """Calendar normalization: renormalize live members to mean 1 so
@@ -133,6 +307,26 @@ class ProportionalPolicy(WeightPolicy):
             # deliberate drain (mark_failed / explicit weights).
             new[mid] = w * max(factor, 0.1)
         return self._finalize(new)
+
+    def update_lanes(self, member_ids, weights, fill, healthy,
+                     present=None, engine: str = "np") -> np.ndarray:
+        ids, w, fill, healthy, present = self._coerce_lanes(
+            member_ids, weights, fill, healthy, present)
+        integral = self._gather(self._integral, ids)
+        if engine == "jnp":
+            global FUSED_KERNEL_CALLS
+            prop_jit, _ = _fused_kernels()
+            new, new_integral = prop_jit(
+                w.astype(np.float32), fill.astype(np.float32), healthy,
+                present, integral.astype(np.float32), self._gains("prop"))
+            FUSED_KERNEL_CALLS += 1
+            new = np.asarray(new, np.float64)
+            new_integral = np.asarray(new_integral, np.float64)
+        else:
+            new, new_integral = _prop_np(w, fill, healthy, present,
+                                         integral, self.cfg)
+        self._scatter(self._integral, ids, new_integral, healthy & present)
+        return new
 
 
 class PIDFillPolicy(WeightPolicy):
@@ -192,6 +386,36 @@ class PIDFillPolicy(WeightPolicy):
             self._integral[mid] = integral
             new[mid] = w * max(1.0 + u, 0.1)
         return self._finalize(new)
+
+    def update_lanes(self, member_ids, weights, fill, healthy,
+                     present=None, engine: str = "np") -> np.ndarray:
+        ids, w, fill, healthy, present = self._coerce_lanes(
+            member_ids, weights, fill, healthy, present)
+        integral = self._gather(self._integral, ids)
+        # lanes with no previous error sample difference against themselves
+        # (d_err = 0), exactly like the scalar ``prev_err.get(mid, err)``
+        has_prev = np.fromiter((int(m) in self._prev_err for m in ids),
+                               bool, count=len(ids))
+        prev_err = self._gather(self._prev_err, ids)
+        if engine == "jnp":
+            global FUSED_KERNEL_CALLS
+            _, pid_jit = _fused_kernels()
+            new, new_integral, new_prev, _ = pid_jit(
+                w.astype(np.float32), fill.astype(np.float32), healthy,
+                present, integral.astype(np.float32),
+                prev_err.astype(np.float32), has_prev, self._gains("pid"))
+            FUSED_KERNEL_CALLS += 1
+            new = np.asarray(new, np.float64)
+            new_integral = np.asarray(new_integral, np.float64)
+            new_prev = np.asarray(new_prev, np.float64)
+        else:
+            new, new_integral, new_prev, _ = _pid_np(
+                w, fill, healthy, present, integral, prev_err, has_prev,
+                self.cfg)
+        upd = healthy & present
+        self._scatter(self._integral, ids, new_integral, upd)
+        self._scatter(self._prev_err, ids, new_prev, upd)
+        return new
 
 
 POLICIES: dict[str, type[WeightPolicy]] = {

@@ -7,12 +7,24 @@ socket byte-for-byte (property-tested in tests/test_controld.py). In-proc is
 what simnet and the serving engine embed (deterministic, virtual-clock
 friendly); the socket server is what ``scripts/run_controld.py`` exposes for
 real CN daemons.
+
+The socket server is a **selector loop**, not thread-per-connection: one
+event-loop thread services every connection, parsing as many frames as each
+read delivers and answering them in arrival order, so clients can
+*pipeline* — write a burst of frames, then read the replies
+(``SocketClient.call_many``) — and a heartbeat window travels as one
+``SendStateBatch`` frame instead of M round trips. The daemon stays
+single-writer by construction (one thread touches it), which is what the
+journal's total order requires; no lock needed.
 """
 from __future__ import annotations
 
+import selectors
 import socket
 import threading
 from typing import Optional
+
+import numpy as np
 
 from repro.controld import messages as M
 from repro.controld.daemon import ControlDaemon
@@ -36,6 +48,10 @@ class InProcTransport:
         back = M.read_frame(
             _BufReader(M.pack_frame(M.reply_to_wire(reply))).read)
         return M.reply_from_wire(back)
+
+    def call_many(self, msgs) -> list[M.Reply]:
+        """API parity with the socket client's pipelined burst."""
+        return [self.call(m) for m in msgs]
 
     def close(self) -> None:
         pass
@@ -64,80 +80,150 @@ def _recv_exactly(sock: socket.socket, n: int) -> bytes:
     return b"".join(chunks)
 
 
-class SocketServer:
-    """Threaded length-prefixed-JSON server over a ``ControlDaemon``.
+class _Conn:
+    """Per-connection buffers for the selector loop."""
 
-    One thread per connection; a lock serializes ``daemon.handle`` (the
-    daemon is deliberately single-writer — the journal is a total order)."""
+    __slots__ = ("sock", "rbuf", "wbuf")
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.rbuf = bytearray()
+        self.wbuf = bytearray()
+
+
+class SocketServer:
+    """Selector-loop length-prefixed-JSON server over a ``ControlDaemon``.
+
+    One event-loop thread services every connection: each readable socket
+    is drained into a per-connection buffer, every complete frame is
+    handled immediately (``messages.parse_frames``), and replies are queued
+    to a write buffer flushed as the socket drains. Clients may pipeline
+    arbitrarily many frames before reading a reply — replies come back in
+    request order. A single thread touching the daemon keeps it
+    single-writer (the journal is a total order) without a lock."""
 
     def __init__(self, daemon: ControlDaemon, host: str = "127.0.0.1",
                  port: int = 0):
         self.daemon = daemon
-        self._lock = threading.Lock()
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
         self.host, self.port = self._sock.getsockname()
         self._stop = threading.Event()
-        self._accept_thread: Optional[threading.Thread] = None
-        self._conn_threads: list[threading.Thread] = []
+        self._thread: Optional[threading.Thread] = None
+        self._sel: Optional[selectors.BaseSelector] = None
 
     def start(self) -> tuple[str, int]:
-        self._sock.listen(16)
-        self._sock.settimeout(0.2)
-        self._accept_thread = threading.Thread(target=self._accept_loop,
-                                               daemon=True)
-        self._accept_thread.start()
+        self._sock.listen(128)
+        self._sock.setblocking(False)
+        self._sel = selectors.DefaultSelector()
+        self._sel.register(self._sock, selectors.EVENT_READ, None)
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
         return self.host, self.port
 
-    def _accept_loop(self) -> None:
+    def _loop(self) -> None:
         while not self._stop.is_set():
             try:
-                conn, _ = self._sock.accept()
-            except socket.timeout:
-                continue
+                events = self._sel.select(timeout=0.2)
             except OSError:
                 break
-            t = threading.Thread(target=self._serve_conn, args=(conn,),
-                                 daemon=True)
-            t.start()
-            # prune finished connections so a long-running daemon's thread
-            # list stays bounded by *live* connections, not total served
-            self._conn_threads = [c for c in self._conn_threads
-                                  if c.is_alive()]
-            self._conn_threads.append(t)
-
-    def _serve_conn(self, conn: socket.socket) -> None:
-        with conn:
-            while not self._stop.is_set():
-                try:
-                    wire = M.read_frame(lambda n: _recv_exactly(conn, n))
-                except (M.MessageError, OSError):
-                    break
-                if wire is None:
-                    break  # clean EOF
-                try:
-                    msg = M.from_wire(wire)
-                except M.MessageError as e:
-                    reply = M.Reply(False, error=str(e))
+            for key, mask in events:
+                if key.data is None:
+                    self._accept()
                 else:
-                    with self._lock:
-                        reply = self.daemon.handle(msg)
-                try:
-                    conn.sendall(M.pack_frame(M.reply_to_wire(reply)))
-                except OSError:
-                    break
+                    try:
+                        self._service(key.data, mask)
+                    except Exception:
+                        # an unexpected handler exception must cost ONE
+                        # connection (the old thread-per-connection blast
+                        # radius), never the whole event loop — a dead loop
+                        # thread would silently hang every client
+                        self._close(key.data)
+        for key in list(self._sel.get_map().values()):
+            if key.data is not None:
+                self._close(key.data)
+        self._sel.close()
+
+    def _accept(self) -> None:
+        try:
+            conn, _ = self._sock.accept()
+        except OSError:
+            return
+        conn.setblocking(False)
+        self._sel.register(conn, selectors.EVENT_READ, _Conn(conn))
+
+    def _close(self, c: _Conn) -> None:
+        try:
+            self._sel.unregister(c.sock)
+        except (KeyError, ValueError):
+            pass
+        try:
+            c.sock.close()
+        except OSError:
+            pass
+
+    def _service(self, c: _Conn, mask: int) -> None:
+        if mask & selectors.EVENT_READ:
+            try:
+                data = c.sock.recv(1 << 16)
+            except BlockingIOError:
+                data = None
+            except OSError:
+                self._close(c)
+                return
+            if data == b"":
+                self._close(c)  # clean EOF
+                return
+            if data:
+                c.rbuf += data
+                if not self._handle_frames(c):
+                    return
+        self._flush(c)
+
+    def _handle_frames(self, c: _Conn) -> bool:
+        """Answer every complete pipelined frame in ``c.rbuf`` in order.
+        Returns False if the connection was torn down (corrupt framing)."""
+        try:
+            wires = M.parse_frames(c.rbuf)
+        except M.MessageError:
+            self._close(c)  # framing corruption: the stream is unusable
+            return False
+        for wire in wires:
+            try:
+                msg = M.from_wire(wire)
+            except M.MessageError as e:
+                reply = M.Reply(False, error=str(e))
+            else:
+                reply = self.daemon.handle(msg)
+            c.wbuf += M.pack_frame(M.reply_to_wire(reply))
+        return True
+
+    def _flush(self, c: _Conn) -> None:
+        if c.wbuf:
+            try:
+                n = c.sock.send(c.wbuf)
+                del c.wbuf[:n]
+            except BlockingIOError:
+                pass
+            except OSError:
+                self._close(c)
+                return
+        want = selectors.EVENT_READ | (selectors.EVENT_WRITE
+                                       if c.wbuf else 0)
+        try:
+            self._sel.modify(c.sock, want, c)
+        except (KeyError, ValueError):
+            pass
 
     def stop(self) -> None:
         self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
         try:
             self._sock.close()
         except OSError:
             pass
-        if self._accept_thread is not None:
-            self._accept_thread.join(timeout=2.0)
-        for t in self._conn_threads:
-            t.join(timeout=2.0)
 
 
 class SocketClient:
@@ -156,6 +242,24 @@ class SocketClient:
         if wire is None:
             raise TransportError("server closed the connection")
         return M.reply_from_wire(wire)
+
+    def call_many(self, msgs) -> list[M.Reply]:
+        """Pipelined burst: write every frame, then read the replies in
+        request order — one wire round trip for the whole batch instead of
+        one per message (the selector server answers frames as they land)."""
+        msgs = list(msgs)
+        try:
+            self._sock.sendall(
+                b"".join(M.pack_frame(M.to_wire(m)) for m in msgs))
+            replies = []
+            for _ in msgs:
+                wire = M.read_frame(lambda n: _recv_exactly(self._sock, n))
+                if wire is None:
+                    raise TransportError("server closed the connection")
+                replies.append(M.reply_from_wire(wire))
+        except (OSError, M.MessageError) as e:
+            raise TransportError(f"socket call failed: {e}") from e
+        return replies
 
     def close(self) -> None:
         try:
@@ -206,6 +310,56 @@ class ControldClient:
                    rate: float = 1.0, healthy: bool = True) -> dict:
         return self._call(M.SendState(token=token, member_id=member_id,
                                       fill=fill, rate=rate, healthy=healthy))
+
+    def send_state_batch(self, token: str, member_ids, fills,
+                         rates=None, healthy=None) -> dict:
+        """One window of heartbeats in one frame. Returns the daemon's
+        ``{"n_accepted", "lease_expires", "rejected"}`` — per-member
+        rejections (lapsed/no lease) live in ``rejected``, they do not
+        raise: the rest of the window is accepted."""
+        # np integers -> python ints for JSON; anything non-integral passes
+        # through untouched so the daemon rejects it per-member (a client-
+        # side int() would silently truncate onto the wrong lane)
+        ids = [int(m) if isinstance(m, (int, np.integer))
+               and not isinstance(m, bool) else m for m in member_ids]
+        return self._call(M.SendStateBatch(
+            token=token, member_ids=ids,
+            fills=[float(f) for f in fills],
+            rates=([1.0] * len(ids) if rates is None
+                   else [float(r) for r in rates]),
+            healthy=([True] * len(ids) if healthy is None
+                     else [bool(h) for h in healthy])))
+
+    def heartbeat_window(self, token: str, samples: dict,
+                         lane_bits: int = 0) -> dict:
+        """One batched heartbeat window from a telemetry snapshot
+        ``{member_id: MemberTelemetry-like}`` (``.fill``/``.rate``/
+        ``.healthy``). Members whose lease lapsed come back rejected; for a
+        caller that owns its members (serve engine, trainer) the right move
+        is always re-register (node_id = member_id) and resend their
+        samples — done here so every embedder shares one protocol dance.
+        Returns the first batch's reply."""
+        def send(ids):
+            return self.send_state_batch(
+                token, ids, [samples[m].fill for m in ids],
+                [samples[m].rate for m in ids],
+                [samples[m].healthy for m in ids])
+
+        ids = sorted(samples)
+        if not ids:
+            return {"n_accepted": 0, "lease_expires": 0.0, "rejected": {}}
+        reply = send(ids)
+        retry = sorted(int(m) for m in reply["rejected"])
+        for m in retry:
+            self.register(token, member_id=m, node_id=m,
+                          lane_bits=lane_bits)
+        if retry:
+            send(retry)
+        return reply
+
+    def call_many(self, msgs) -> list[M.Reply]:
+        """Raw pipelined burst of typed messages (replies, not data)."""
+        return self.transport.call_many(msgs)
 
     def tick(self, current_event: int, gc_event: int = -1) -> dict:
         return self._call(M.Tick(current_event=current_event,

@@ -18,6 +18,8 @@ import dataclasses
 import logging
 from typing import Optional
 
+import numpy as np
+
 from repro.core.epoch import EpochManager, ReconfigurationError
 from repro.core.tables import MemberSpec, TableError
 
@@ -31,6 +33,70 @@ class MemberTelemetry:
     fill: float = 0.0          # receive-queue fill fraction in [0, 1]
     rate: float = 1.0          # events/s processed (relative ok)
     healthy: bool = True
+
+
+@dataclasses.dataclass
+class TelemetryArray:
+    """One window of telemetry for ``[M]`` members as struct-of-arrays —
+    the array-native form ``update_weights``/``feedback`` accept so the
+    whole policy update runs as one fused pass (``WeightPolicy.update_lanes``)
+    instead of M scalar dict updates.
+
+    ``present[i] = False`` is the array form of a missing dict entry
+    (``telemetry.get(mid) is None``): that member's weight and controller
+    state are left untouched. ``present & ~healthy`` is an explicit drain."""
+
+    member_ids: np.ndarray      # int64[M]
+    fill: np.ndarray            # float64[M]
+    rate: np.ndarray            # float64[M]
+    healthy: np.ndarray         # bool[M]
+    present: Optional[np.ndarray] = None   # bool[M]; None = all present
+
+    @classmethod
+    def from_dict(cls, telemetry: dict, member_ids) -> "TelemetryArray":
+        """Lift a ``{member_id: MemberTelemetry | None}`` dict onto lanes
+        aligned with ``member_ids`` (missing / None -> not present)."""
+        ids = np.asarray(list(member_ids), np.int64)
+        samples = [telemetry.get(int(m)) for m in ids]
+        return cls(
+            member_ids=ids,
+            fill=np.asarray([0.0 if t is None else t.fill for t in samples],
+                            np.float64),
+            rate=np.asarray([1.0 if t is None else t.rate for t in samples],
+                            np.float64),
+            healthy=np.asarray([True if t is None else bool(t.healthy)
+                                for t in samples], bool),
+            present=np.asarray([t is not None for t in samples], bool))
+
+    def align(self, member_ids) -> "TelemetryArray":
+        """Re-lane onto ``member_ids``: members absent from this snapshot
+        come back ``present=False`` (scalar-path "no sample"). The common
+        case — already in the caller's lane order — is a no-op."""
+        ids = np.asarray(member_ids, np.int64)
+        if ids.shape == self.member_ids.shape and np.array_equal(
+                ids, self.member_ids):
+            return self
+        if len(self.member_ids) == 0:
+            # an empty window (no heartbeats at all) ≡ the empty dict: every
+            # member is simply not-present (gathering via src=0 from
+            # zero-length arrays would IndexError)
+            n = len(ids)
+            return TelemetryArray(
+                member_ids=ids, fill=np.zeros(n), rate=np.ones(n),
+                healthy=np.ones(n, bool), present=np.zeros(n, bool))
+        pos = {int(m): i for i, m in enumerate(self.member_ids.tolist())}
+        idx = np.asarray([pos.get(int(m), -1) for m in ids.tolist()],
+                         np.int64)
+        have = idx >= 0
+        src = np.where(have, idx, 0)
+        present = (np.ones(len(self.member_ids), bool)
+                   if self.present is None else self.present)
+        return TelemetryArray(
+            member_ids=ids,
+            fill=np.where(have, self.fill[src], 0.0),
+            rate=np.where(have, self.rate[src], 1.0),
+            healthy=np.where(have, self.healthy[src], True),
+            present=have & present[src])
 
 
 @dataclasses.dataclass
@@ -66,6 +132,9 @@ class LoadBalancerControlPlane:
                 target_fill=p.target_fill, kp=p.kp, ki=p.ki,
                 min_weight=p.min_weight, max_weight=p.max_weight))
         self.reweighter = reweighter
+        # engine for TelemetryArray updates: "np" (bit-identical to the
+        # scalar dict path) or "jnp" (one fused device call per update)
+        self.array_engine = "np"
         self.weights: dict[int, float] = {}
         self.members: dict[int, MemberSpec] = {}
         self.gc_skipped: list[tuple[int, str]] = []  # last sweep's (epoch_id, reason)
@@ -81,13 +150,29 @@ class LoadBalancerControlPlane:
         return eid
 
     # -- feedback ------------------------------------------------------------
-    def update_weights(self, telemetry: dict[int, MemberTelemetry]) -> dict[int, float]:
+    def update_weights(self, telemetry) -> dict[int, float]:
         """One policy update: slow/full members shed slots, fast/empty
-        members gain (see the concrete ``WeightPolicy`` for the math)."""
-        self.weights = self.reweighter.update(self.weights, telemetry)
+        members gain (see the concrete ``WeightPolicy`` for the math).
+
+        ``telemetry`` is either the classic ``{member_id: MemberTelemetry}``
+        dict or a ``TelemetryArray`` — the array form runs the whole update
+        as one fused ``update_lanes`` pass over every member (the controld
+        hot path: no per-member dict churn)."""
+        if isinstance(telemetry, TelemetryArray):
+            ids = np.fromiter(self.weights.keys(), np.int64,
+                              len(self.weights))
+            arr = telemetry.align(ids)
+            w = np.fromiter(self.weights.values(), np.float64, len(ids))
+            new = self.reweighter.update_lanes(
+                ids, w, arr.fill, arr.healthy, present=arr.present,
+                engine=self.array_engine)
+            self.weights = {int(m): float(v)
+                            for m, v in zip(ids.tolist(), new.tolist())}
+        else:
+            self.weights = self.reweighter.update(self.weights, telemetry)
         return self.weights
 
-    def feedback(self, telemetry: dict[int, MemberTelemetry],
+    def feedback(self, telemetry,
                  current_event: int,
                  reweight_threshold: float = 0.05) -> Optional[int]:
         """One closed-loop tick: PI-update the weights from telemetry and, if

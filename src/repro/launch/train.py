@@ -33,6 +33,10 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--eight-bit", action="store_true")
     ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--controld", action="store_true",
+                    help="run the ingest control plane as a controld "
+                         "session: DP workers register as leased members "
+                         "and heartbeat in one batch per recalendar")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.demo else get_config(args.arch)
@@ -43,7 +47,8 @@ def main():
         grad_compress=args.grad_compress,
         q_chunk=min(args.seq, 1024), k_chunk=min(args.seq, 1024),
     )
-    tr = Trainer(cfg, tcfg, TrainerConfig(n_members=4, ckpt_dir=args.ckpt_dir))
+    tr = Trainer(cfg, tcfg, TrainerConfig(n_members=4, ckpt_dir=args.ckpt_dir,
+                                          use_controld=args.controld))
     start = tr.init_or_restore(jax.random.PRNGKey(0))
     print(f"arch={cfg.name} params={cfg.param_count()[0]/1e6:.1f}M "
           f"resume_step={start}")

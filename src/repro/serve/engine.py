@@ -254,21 +254,12 @@ class ServingEngine:
         unrouted = [q.event_number for q in self.unrouted]
         watermark = min(unrouted) if unrouted else self.next_event
         if self.daemon is not None:
-            from repro.controld import ControldError
-            snap = self.hub.snapshot()
-            for m in sorted(snap):
-                t = snap[m]
-                try:
-                    self.client.send_state(self.token, m, fill=t.fill,
-                                           rate=t.rate, healthy=t.healthy)
-                except ControldError:
-                    # lease lapsed (e.g. a long gap between rebalances):
-                    # the replicas are this engine's own — re-register to
-                    # rejoin, then deliver the sample
-                    self.client.register(self.token, member_id=m, node_id=m,
+            # one SendStateBatch per rebalance: every replica's sample in a
+            # single frame (and a single journal entry / telemetry scatter);
+            # replicas whose lease lapsed (a long gap between rebalances)
+            # are re-registered and their samples resent by the helper
+            self.client.heartbeat_window(self.token, self.hub.snapshot(),
                                          lane_bits=self.scfg.lane_bits)
-                    self.client.send_state(self.token, m, fill=t.fill,
-                                           rate=t.rate, healthy=t.healthy)
             res = self.client.tick(current_event=self.next_event,
                                    gc_event=watermark)
             eid = res["sessions"][self.token]["epoch"]

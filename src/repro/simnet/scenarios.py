@@ -152,6 +152,17 @@ SCENARIOS: dict[str, Scenario] = {
         on_step=_restart_daemon_mid_run,
         overrides=dict(controld=True, timeout_windows=30, reweight_every=3),
     ),
+    "farm_1k": Scenario(
+        name="farm_1k",
+        description="1024-member farm across 4 virtual LB instances, every "
+                    "CN a controld client: 1024 heartbeats/window travel as "
+                    "4 SendStateBatch frames and each tick is one fused "
+                    "policy update per reservation (control-plane scaling "
+                    "smoke; 256 members/instance fits the 512-slot calendar)",
+        overrides=dict(controld=True, n_members=1024, n_instances=4,
+                       n_daqs=8, triggers_per_step=8, reweight_every=2,
+                       timeout_windows=30, queue_capacity_s=0.5),
+    ),
     "multi_tenant": Scenario(
         name="multi_tenant",
         description="2 reservations on one daemon: tenant 0 runs the "

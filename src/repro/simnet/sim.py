@@ -551,28 +551,34 @@ class Simulator:
                          busy_s, accepted) -> None:
         """The controld-mode control loop: every live CN heartbeats its
         *measured* occupancy (the same number the embedded hub would call
-        fill), then the daemon ticks at the reweight cadence — lease expiry,
-        policy feedback and epoch GC all happen inside the service."""
-        from repro.controld import ControldError
+        fill) — one ``SendStateBatch`` per instance per window, not one
+        message per CN — then the daemon ticks at the reweight cadence:
+        lease expiry, one fused policy feedback over the member lanes, and
+        epoch GC all happen inside the service."""
         cfg = self.cfg
         cap = max(cfg.queue_capacity_pkts, 1)
-        for m in range(cfg.n_members):
-            if m in self.muted:
-                continue  # a silent CN daemon: its lease will lapse
-            ra = self.reassemblers.get(m)
-            backlog = max(int(round(fill[m] * cap)),
-                          ra.n_incomplete if ra is not None else 0)
-            rate = 1.0
-            if busy_s is not None and accepted is not None and accepted[m] > 0:
-                step_time = float(busy_s[m] / accepted[m])
-                rate = 1.0 / step_time if step_time > 0 else 1.0
-            try:
-                self.client.send_state(
-                    self.tokens[self._instance_of(m)], m,
-                    fill=min(1.0, backlog / cap), rate=rate)
-            except ControldError:
-                # lapsed lease: the protocol says re-register, not heartbeat
-                self.heartbeats_rejected += 1
+        for inst, ids in enumerate(self.instance_members):
+            live, fills, rates = [], [], []
+            for m in ids:
+                if m in self.muted:
+                    continue  # a silent CN daemon: its lease will lapse
+                ra = self.reassemblers.get(m)
+                backlog = max(int(round(fill[m] * cap)),
+                              ra.n_incomplete if ra is not None else 0)
+                rate = 1.0
+                if (busy_s is not None and accepted is not None
+                        and accepted[m] > 0):
+                    step_time = float(busy_s[m] / accepted[m])
+                    rate = 1.0 / step_time if step_time > 0 else 1.0
+                live.append(m)
+                fills.append(min(1.0, backlog / cap))
+                rates.append(rate)
+            if live:
+                reply = self.client.send_state_batch(
+                    self.tokens[inst], live, fills, rates)
+                # lapsed leases come back as per-member rejections: the
+                # protocol says re-register, not heartbeat
+                self.heartbeats_rejected += len(reply["rejected"])
         if (not cfg.frozen_weights and cfg.reweight_every
                 and (step_idx + 1) % cfg.reweight_every == 0):
             res = self.client.tick(current_event=self.fleet.event_number)

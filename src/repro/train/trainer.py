@@ -40,6 +40,11 @@ class TrainerConfig:
     recalendar_every: int = 10
     epoch_horizon: int = 64  # events; small so epochs drain & rows recycle
     seed: int = 0
+    # Run the ingest control plane as a controld session (like serve/simnet):
+    # DP workers become leased members of a daemon reservation, and the
+    # recalendar cadence becomes one batched heartbeat window + a Tick.
+    use_controld: bool = False
+    lease_s: float = 30.0        # DP-worker lease (wall clock)
 
 
 class Trainer:
@@ -59,14 +64,38 @@ class Trainer:
         self.step_fn = step_fn or jax.jit(
             TS.make_train_step(model_cfg, train_cfg, mesh))
         self.hub = TelemetryHub()
-        self.manager = EpochManager(max_members=max(64, trainer_cfg.n_members))
-        self.cp = LoadBalancerControlPlane(
-            self.manager, ControlPolicy(epoch_horizon=trainer_cfg.epoch_horizon))
-        members = {
-            i: MemberSpec(node_id=i, base_lane=0, lane_bits=trainer_cfg.lane_bits)
-            for i in range(trainer_cfg.n_members)
-        }
-        self.cp.start(members)
+        if trainer_cfg.use_controld:
+            # the control plane as a service: DP workers are leased members
+            # of a daemon reservation; default (proportional) policy built
+            # from the same gains as the embedded path
+            from repro.controld import (ControlDaemon, ControldClient,
+                                        InProcTransport)
+            self.daemon = ControlDaemon(
+                n_instances=1, lease_s=trainer_cfg.lease_s,
+                epoch_horizon=trainer_cfg.epoch_horizon,
+                max_members=max(64, trainer_cfg.n_members), journal=None)
+            self.client = ControldClient(InProcTransport(self.daemon))
+            self.token = self.client.reserve()["token"]
+            for i in range(trainer_cfg.n_members):
+                self.client.register(self.token, member_id=i, node_id=i,
+                                     lane_bits=trainer_cfg.lane_bits)
+            self.client.tick(current_event=0)  # starts the session
+            session = self.daemon.sessions[self.token]
+            self.manager = session.manager
+            self.cp = session.cp
+        else:
+            self.daemon = None
+            self.manager = EpochManager(
+                max_members=max(64, trainer_cfg.n_members))
+            self.cp = LoadBalancerControlPlane(
+                self.manager,
+                ControlPolicy(epoch_horizon=trainer_cfg.epoch_horizon))
+            members = {
+                i: MemberSpec(node_id=i, base_lane=0,
+                              lane_bits=trainer_cfg.lane_bits)
+                for i in range(trainer_cfg.n_members)
+            }
+            self.cp.start(members)
         self.saver = ckpt.AsyncSaver()
         self.state = None
         self.next_event = 0
@@ -89,11 +118,30 @@ class Trainer:
         """Remove failed workers from the next epoch (hit-less)."""
         for m in member_ids:
             self.hub.report_failure(m)
+        if self.daemon is not None:
+            from repro.controld import ControldError
+            for m in member_ids:
+                try:
+                    self.client.deregister(self.token, m)
+                except ControldError:
+                    # already drained — keep the embedded path's
+                    # idempotence (mark_failed pops with a default)
+                    pass
+            self.client.tick(current_event=self.next_event,
+                             gc_event=self.next_event)
+            return
         self.cp.mark_failed(member_ids)
         self.cp.garbage_collect(self.next_event)
         self.cp.schedule_epoch(self.next_event)
 
     def add_members(self, member_ids) -> None:
+        if self.daemon is not None:
+            for m in member_ids:
+                self.client.register(self.token, member_id=m, node_id=m,
+                                     lane_bits=self.cfg.lane_bits)
+            self.client.tick(current_event=self.next_event,
+                             gc_event=self.next_event)
+            return
         specs = {m: MemberSpec(node_id=m, lane_bits=self.cfg.lane_bits)
                  for m in member_ids}
         self.cp.add_members(specs)
@@ -102,6 +150,17 @@ class Trainer:
 
     def maybe_recalendar(self, step: int) -> None:
         if step and step % self.cfg.recalendar_every == 0:
+            if self.daemon is not None:
+                # one batched heartbeat window + a Tick: the daemon runs the
+                # fused policy update, lease expiry and epoch GC in-service
+                # (lapsed leases between slow steps re-register + resend)
+                snap = {m: t for m, t in self.hub.snapshot().items()
+                        if m in self.cp.members}
+                self.client.heartbeat_window(self.token, snap,
+                                             lane_bits=self.cfg.lane_bits)
+                self.client.tick(current_event=self.next_event,
+                                 gc_event=self.next_event)
+                return
             self.cp.update_weights(self.hub.snapshot())
             self.cp.garbage_collect(self.next_event)
             self.cp.schedule_epoch(self.next_event)

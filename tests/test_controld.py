@@ -1,4 +1,5 @@
-"""controld: session lifecycle, transports, journal replay, PID properties."""
+"""controld: session lifecycle, transports, journal replay, PID properties,
+vectorized-policy parity, batched heartbeats, WAL compaction."""
 import dataclasses
 import os
 
@@ -12,6 +13,7 @@ from repro.controld import messages as M
 from repro.controld.policy import (PIDFillPolicy, PolicyConfig,
                                    ProportionalPolicy, make_policy)
 from repro.core import route, split64
+from repro.core.control_plane import MemberTelemetry, TelemetryArray
 from repro.testing.hypo import given, settings, st
 
 
@@ -254,6 +256,11 @@ class TestTransportParity:
         M.SendState(token="r000000", member_id=0, fill=0.8),
         M.SendState(token="r000000", member_id=1, fill=0.2),
         M.SendState(token="bogus", member_id=1, fill=0.2),  # rejection too
+        # a batch window, including a per-member rejection (member 9 holds
+        # no lease) — socket and in-proc must agree on the whole reply
+        M.SendStateBatch(token="r000000", member_ids=(0, 1, 9),
+                         fills=(0.7, 0.3, 0.5), rates=(1.0, 1.0, 1.0),
+                         healthy=(True, True, True)),
         M.Tick(current_event=600),
         M.Deregister(token="r000000", member_id=1),
         M.Tick(current_event=1200),
@@ -486,6 +493,428 @@ class TestPIDProperties:
             make_policy("pid", {"kq": 1.0})
         with pytest.raises(ValueError):
             make_policy("banana")
+
+
+class TestVectorPolicyParity:
+    """Satellite: the [M]-lane ``update_lanes`` path must be property-equal
+    to the scalar dict policies element-wise — including stale/missing
+    members, drains and saturation/anti-windup edges. The np engine is
+    required to match *bitwise*; the jnp engine (float32 on device) within
+    float tolerance."""
+
+    def _run_both(self, pol_cls, kd, fills, healthy, present, steps,
+                  engine="np", cfg=None):
+        cfg = cfg or PolicyConfig(kd=kd)
+        scalar, lanes = pol_cls(cfg), pol_cls(cfg)
+        n = len(fills)
+        scalar.reset(range(n))
+        lanes.reset(range(n))
+        w_s = {m: 1.0 + 0.25 * m for m in range(n)}
+        w_l = np.asarray([w_s[m] for m in range(n)], np.float64)
+        ids = np.arange(n)
+        for k in range(steps):
+            # rotate the pattern so every member cycles through
+            # present/missing/unhealthy states across steps
+            f = np.roll(np.asarray(fills, np.float64), k)
+            h = np.roll(np.asarray(healthy, bool), k)
+            pr = np.roll(np.asarray(present, bool), k)
+            tele = {m: MemberTelemetry(fill=float(f[m]), healthy=bool(h[m]))
+                    for m in range(n) if pr[m]}
+            w_s = scalar.update(w_s, tele)
+            w_l = lanes.update_lanes(ids, w_l, f, h, present=pr,
+                                     engine=engine)
+        return scalar, lanes, w_s, w_l
+
+    @settings(max_examples=30)
+    @given(st.lists(st.floats(min_value=0.0, max_value=1.0),
+                    min_size=2, max_size=8),
+           st.lists(st.booleans(), min_size=2, max_size=8),
+           st.lists(st.booleans(), min_size=2, max_size=8),
+           st.integers(min_value=1, max_value=12))
+    def test_np_engine_matches_scalar_bitwise(self, fills, healthy, present,
+                                              steps):
+        n = len(fills)
+        healthy = (healthy * n)[:n]
+        present = (present * n)[:n]
+        for pol_cls in (ProportionalPolicy, PIDFillPolicy):
+            scalar, lanes, w_s, w_l = self._run_both(
+                pol_cls, 0.3, fills, healthy, present, steps)
+            assert w_s == {m: float(w_l[m]) for m in range(n)}
+            assert scalar.state() == lanes.state()
+
+    @settings(max_examples=10)
+    @given(st.lists(st.floats(min_value=0.0, max_value=1.0),
+                    min_size=2, max_size=8),
+           st.integers(min_value=1, max_value=8))
+    def test_jnp_engine_matches_scalar_within_float32(self, fills, steps):
+        n = len(fills)
+        ones = [True] * n
+        for pol_cls in (ProportionalPolicy, PIDFillPolicy):
+            _, _, w_s, w_l = self._run_both(pol_cls, 0.2, fills, ones, ones,
+                                            steps, engine="jnp")
+            ref = np.asarray([w_s[m] for m in range(n)])
+            np.testing.assert_allclose(w_l, ref, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10)
+    @given(st.floats(min_value=0.6, max_value=1.0),
+           st.integers(min_value=50, max_value=200))
+    def test_anti_windup_parity_under_saturation(self, fill, steps):
+        """Sustained saturation with a huge integral_limit: only
+        back-calculation bounds the windup — and the lanes path must land
+        on the exact same integral as the scalar oracle."""
+        cfg = PolicyConfig(kd=0.0, integral_limit=100.0, output_limit=0.5)
+        fills = [fill, cfg.target_fill]
+        ones = [True, True]
+        scalar, lanes, w_s, w_l = self._run_both(
+            PIDFillPolicy, 0.0, fills, ones, ones, steps, cfg=cfg)
+        assert scalar._integral == lanes._integral
+        bound = cfg.output_limit + cfg.kp * abs(cfg.target_fill - fill) + 1e-9
+        assert abs(lanes._integral[0]) <= bound
+
+    def test_update_weights_accepts_telemetry_array(self):
+        """core satellite: ``update_weights``/``feedback`` take the array
+        snapshot and produce the same weights as the dict path."""
+        from repro.core.control_plane import LoadBalancerControlPlane
+        from repro.core.epoch import EpochManager
+        from repro.core.tables import MemberSpec
+
+        cps = []
+        for _ in range(2):
+            cp = LoadBalancerControlPlane(EpochManager(max_members=64))
+            cp.start({m: MemberSpec(node_id=m, lane_bits=1)
+                      for m in range(4)})
+            cps.append(cp)
+        tele = {0: MemberTelemetry(fill=0.9), 1: MemberTelemetry(fill=0.1),
+                2: MemberTelemetry(fill=0.5, healthy=False)}  # 3 missing
+        w_dict = cps[0].update_weights(tele)
+        arr = TelemetryArray.from_dict(tele, member_ids=range(4))
+        w_arr = cps[1].update_weights(arr)
+        assert w_dict == w_arr
+        # and align() re-lanes a differently-ordered snapshot identically
+        shuffled = TelemetryArray.from_dict(tele, member_ids=[2, 0, 1])
+        w3 = shuffled.align(np.arange(4))
+        assert w3.present.tolist() == [True, True, True, False]
+        assert w3.fill.tolist()[:3] == [0.9, 0.1, 0.5]
+
+
+class TestSendStateBatch:
+    def _daemon(self, **kw):
+        clk = _ManualClock()
+        kw.setdefault("n_instances", 1)
+        kw.setdefault("lease_s", 10.0)
+        d = ControlDaemon(clock=kw.pop("clock", clk), **kw)
+        d._test_clock = clk
+        return d
+
+    def test_batch_digest_equals_m_scalar_sends(self):
+        """One SendStateBatch must leave the daemon in the byte-identical
+        state of M SendState messages at the same instant."""
+        daemons = [self._daemon(), self._daemon()]
+        clients = [_client(d) for d in daemons]
+        toks = []
+        for c in clients:
+            r = c.reserve(policy="pid")
+            for m in range(5):
+                c.register(r["token"], member_id=m, node_id=m, lane_bits=1)
+            c.tick(current_event=0)
+            toks.append(r["token"])
+        fills = [0.9, 0.2, 0.4, 0.6, 0.1]
+        clients[0].send_state_batch(toks[0], range(5), fills)
+        for m in range(5):
+            clients[1].send_state(toks[1], m, fill=fills[m])
+        clients[0].tick(current_event=600)
+        clients[1].tick(current_event=600)
+        assert daemons[0].state_digest() == daemons[1].state_digest()
+
+    def test_partial_rejection_and_lease_renewal(self):
+        d = self._daemon(lease_s=5.0)
+        c = _client(d)
+        r = c.reserve()
+        for m in range(3):
+            c.register(r["token"], member_id=m, node_id=m)
+        c.tick(current_event=0)
+        d._test_clock.t = 4.0
+        c.send_state(r["token"], 0, fill=0.1)
+        c.send_state(r["token"], 1, fill=0.1)
+        d._test_clock.t = 6.0  # member 2's lease (t=0 grant) lapsed
+        reply = c.send_state_batch(r["token"], [0, 1, 2, 7],
+                                   [0.5, 0.6, 0.7, 0.8])
+        assert reply["n_accepted"] == 2
+        assert set(reply["rejected"]) == {"2", "7"}
+        assert "lapsed" in reply["rejected"]["2"]
+        assert "no lease" in reply["rejected"]["7"]
+        # accepted members got renewed to now + lease_s
+        s = next(iter(d.sessions.values()))
+        assert float(s.lanes.lease_expires[0]) == pytest.approx(11.0)
+        # the lapsed member still awaits the Tick reap (protocol unchanged)
+        tick = c.tick(current_event=100)
+        assert tick["sessions"][r["token"]]["expired"] == [2]
+
+    def test_batch_length_mismatch_rejected_and_replayable(self):
+        d = self._daemon(journal=Journal())
+        c = _client(d)
+        r = c.reserve()
+        c.register(r["token"], member_id=0, node_id=0)
+        with pytest.raises(ControldError):
+            c._call(M.SendStateBatch(token=r["token"], member_ids=(0, 1),
+                                     fills=(0.5,), rates=(1.0, 1.0),
+                                     healthy=(True, True)))
+        with pytest.raises(ControldError):
+            c._call(M.SendStateBatch(token=r["token"], member_ids=(0,),
+                                     fills=("nan-ish",), rates=(1.0,),
+                                     healthy=(True,)))
+        rec = ControlDaemon.recover(d.journal, n_instances=1, lease_s=10.0)
+        assert rec.state_digest() == d.state_digest()
+
+    def test_non_integer_member_id_is_a_protocol_rejection(self):
+        """A string/float member_id is valid JSON: it must come back as a
+        clean rejection (not a TypeError after the WAL append — which would
+        poison every future recover()), and must not kill the selector
+        server's event loop for other clients."""
+        d = self._daemon(journal=Journal())
+        c = _client(d)
+        r = c.reserve()
+        c.register(r["token"], member_id=0, node_id=0)
+        c.tick(current_event=0)
+        for bad in ("5", 1.5, True, None):
+            with pytest.raises(ControldError):
+                c._call(M.SendState(token=r["token"], member_id=bad,
+                                    fill=0.1))
+            with pytest.raises(ControldError):
+                c._call(M.Deregister(token=r["token"], member_id=bad))
+            with pytest.raises(ControldError):
+                c._call(M.Register(token=r["token"], member_id=bad))
+        rec = ControlDaemon.recover(d.journal, n_instances=1, lease_s=10.0)
+        assert rec.state_digest() == d.state_digest()
+
+    def test_server_loop_survives_a_poison_connection(self):
+        """One connection triggering an unexpected handler exception must
+        cost that connection only — the event loop keeps serving others."""
+        d = ControlDaemon(n_instances=1, lease_s=1e9)
+        server = SocketServer(d)
+        host, port = server.start()
+        try:
+            good = ControldClient(SocketClient(host, port))
+            token = good.reserve()["token"]
+            bad = SocketClient(host, port)
+            original = d.handle
+            d.handle = lambda msg, now=None: (_ for _ in ()).throw(
+                RuntimeError("injected daemon bug"))
+            with pytest.raises(Exception):
+                bad.call(M.Status())  # conn torn down, no reply
+            d.handle = original
+            assert good.status()["free_instances"] == []  # loop still alive
+        finally:
+            server.stop()
+
+    def test_align_with_empty_snapshot(self):
+        empty = TelemetryArray.from_dict({}, member_ids=[])
+        out = empty.align(np.arange(3))
+        assert out.present.tolist() == [False] * 3
+        assert out.fill.tolist() == [0.0] * 3
+
+    def test_batch_non_integer_ids_rejected_per_member(self):
+        """Batch ids go through the same _member_index validation as
+        SendState: a float/bool/huge-int id is a per-member rejection —
+        never an unsafe cast onto another member's lane, and never an
+        OverflowError after the WAL append (which would make the journal
+        permanently unrecoverable)."""
+        d = self._daemon(journal=Journal())
+        c = _client(d)
+        r = c.reserve()
+        for m in range(4):
+            c.register(r["token"], member_id=m, node_id=m)
+        c.tick(current_event=0)
+        s = next(iter(d.sessions.values()))
+        before = s.lanes.lease_expires.copy()
+        reply = c.send_state_batch(r["token"], [0, 2.9, True, 10**30],
+                                   [0.4, 0.9, 0.9, 0.9])
+        assert reply["n_accepted"] == 1
+        assert set(reply["rejected"]) == {"2.9", "True", str(10**30)}
+        # lanes 1/2/3 untouched: no truncated-id lease renewal or overwrite
+        assert (s.lanes.lease_expires[1:4] == before[1:4]).all()
+        assert float(s.lanes.fill[2]) == 0.0 and float(s.lanes.fill[1]) == 0.0
+        rec = ControlDaemon.recover(d.journal, n_instances=1, lease_s=10.0)
+        assert rec.state_digest() == d.state_digest()
+
+    def test_duplicate_ids_last_sample_wins(self):
+        d = self._daemon()
+        c = _client(d)
+        r = c.reserve()
+        c.register(r["token"], member_id=0, node_id=0)
+        c.tick(current_event=0)
+        reply = c.send_state_batch(r["token"], [0, 0, 0], [0.1, 0.5, 0.9])
+        assert reply["n_accepted"] == 3
+        s = next(iter(d.sessions.values()))
+        assert float(s.lanes.fill[0]) == 0.9
+
+    def test_cp_restart_with_batched_journal_entries(self):
+        """Acceptance: SendStateBatch journal entries replay to a
+        byte-identical state digest across a daemon kill/recover."""
+        d = self._daemon(n_instances=2, journal=Journal())
+        c = _client(d)
+        toks = []
+        for inst in range(2):
+            r = c.reserve(policy="pid" if inst else "proportional")
+            for m in range(4):
+                c.register(r["token"], member_id=m, node_id=m, lane_bits=1)
+            toks.append(r["token"])
+        c.tick(current_event=0)
+        ev = 0
+        for k in range(6):
+            d._test_clock.t += 1.0
+            for t in toks:
+                c.send_state_batch(t, range(4),
+                                   [0.2 + 0.1 * ((m + k) % 4)
+                                    for m in range(4)])
+            ev += 400
+            c.tick(current_event=ev)
+        rec = ControlDaemon.recover(d.journal, n_instances=2, lease_s=10.0)
+        assert rec.state_digest() == d.state_digest()
+        for token, s in d.sessions.items():
+            s2 = rec.sessions[token]
+            for eid, cal in s.manager.state.calendars.items():
+                assert cal.tobytes() == s2.manager.state.calendars[eid].tobytes()
+
+    def test_socket_batch_and_pipelining_parity(self):
+        """Satellite: SendStateBatch (and a pipelined call_many burst) over
+        the socket produce the same replies and daemon state as in-proc."""
+        clk1, clk2 = _ManualClock(), _ManualClock()
+        d1 = ControlDaemon(n_instances=1, lease_s=10.0, clock=clk1)
+        d2 = ControlDaemon(n_instances=1, lease_s=10.0, clock=clk2)
+        server = SocketServer(d2)
+        host, port = server.start()
+        try:
+            ct1 = InProcTransport(d1)
+            ct2 = SocketClient(host, port)
+            script = [M.Reserve(policy="pid")] + [
+                M.Register(token="r000000", member_id=m, node_id=m,
+                           lane_bits=1) for m in range(6)
+            ] + [
+                M.Tick(current_event=0),
+                M.SendStateBatch(token="r000000",
+                                 member_ids=tuple(range(6)),
+                                 fills=(0.9, 0.1, 0.3, 0.5, 0.7, 0.2),
+                                 rates=(1.0,) * 6, healthy=(True,) * 6),
+                M.Tick(current_event=600),
+                M.Status(),
+            ]
+            r1 = ct1.call_many(script)
+            r2 = ct2.call_many(script)  # one pipelined burst over the wire
+            ct2.close()
+        finally:
+            server.stop()
+        assert d1.state_digest() == d2.state_digest()
+        for a, b in zip(r1, r2):
+            assert (a.ok, a.error, a.data) == (b.ok, b.error, b.data)
+
+
+class TestJournalCompaction:
+    def _workload(self, d, rounds=8):
+        clk = d.clock
+        c = _client(d)
+        r = c.reserve(policy="pid")
+        for m in range(4):
+            c.register(r["token"], member_id=m, node_id=m, lane_bits=1)
+        c.tick(current_event=0)
+        ev = 0
+        for k in range(rounds):
+            clk.t += 1.0
+            c.send_state_batch(r["token"], range(4),
+                               [0.3 + 0.05 * ((m + k) % 4)
+                                for m in range(4)])
+            ev += 400
+            c.tick(current_event=ev)
+        return d
+
+    def test_compaction_bounds_wal_and_recovers_identically(self, tmp_path):
+        """Satellite: the WAL rolls into snapshots every N entries; the live
+        file stays bounded and recovery from snapshot+tail is
+        digest-identical."""
+        path = os.path.join(tmp_path, "journal.jsonl")
+        snap_dir = os.path.join(tmp_path, "snaps")
+        clk = _ManualClock()
+        d = self._workload(ControlDaemon(
+            n_instances=1, lease_s=100.0, clock=clk,
+            journal=Journal(path, snapshot_dir=snap_dir, compact_every=5)))
+        digest = d.state_digest()
+        total = d.journal.seq + 1
+        with open(path) as f:
+            tail_lines = len([ln for ln in f.read().splitlines() if ln])
+        assert tail_lines < 5 <= total  # the WAL never exceeds N entries
+        assert Journal.latest_snapshot(snap_dir) is not None
+        history = Journal.restore(snap_dir, tail_path=path)
+        assert history.seq == d.journal.seq
+        rec = ControlDaemon.recover(history, n_instances=1, lease_s=100.0)
+        assert rec.state_digest() == digest
+
+    def test_resumed_daemon_stays_seq_contiguous_and_compacting(
+            self, tmp_path):
+        path = os.path.join(tmp_path, "journal.jsonl")
+        snap_dir = os.path.join(tmp_path, "snaps")
+        clk = _ManualClock()
+        d = self._workload(ControlDaemon(
+            n_instances=1, lease_s=100.0, clock=clk,
+            journal=Journal(path, snapshot_dir=snap_dir, compact_every=5)))
+        d.journal.close()
+        seq0 = d.journal.seq
+        history = Journal.restore(snap_dir, tail_path=path)
+        rec = ControlDaemon.recover(
+            history, n_instances=1, lease_s=100.0, clock=clk,
+            live_journal=Journal.resume(path, history.seq,
+                                        snapshot_dir=snap_dir,
+                                        compact_every=5))
+        assert rec.state_digest() == d.state_digest()
+        c = _client(rec)
+        token = sorted(rec.sessions)[0]
+        for k in range(12):  # crosses at least one more compaction
+            clk.t += 1.0
+            c.send_state_batch(token, range(4), [0.4] * 4)
+        assert rec.journal.seq == seq0 + 12
+        # a second full recovery still sees ONE contiguous history
+        rec.journal.close()
+        history2 = Journal.restore(snap_dir, tail_path=path)
+        assert [e.seq for e in history2.entries] == list(
+            range(history2.seq + 1))
+        rec2 = ControlDaemon.recover(history2, n_instances=1, lease_s=100.0)
+        assert rec2.state_digest() == rec.state_digest()
+
+
+class TestTrainerControldClient:
+    def test_trainer_ingest_via_daemon_session(self):
+        """Satellite: launch/train DP workers register as leased members on
+        a daemon session instead of the embedded CP (like serve/simnet)."""
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.train import optimizer as OPT
+        from repro.train import train_step as TS
+        from repro.train.trainer import Trainer, TrainerConfig
+
+        cfg = get_smoke_config("yi_6b")
+        tcfg = TS.TrainConfig(adamw=OPT.AdamWConfig(lr=1e-3, decay_steps=10),
+                              remat=False, lb_ingest=False,
+                              q_chunk=16, k_chunk=16)
+        tr = Trainer(cfg, tcfg,
+                     TrainerConfig(n_members=4, recalendar_every=2,
+                                   ckpt_every=1000,
+                                   ckpt_dir="/tmp/repro_controld_train",
+                                   use_controld=True))
+        tr.init_or_restore(jax.random.PRNGKey(0))
+        hist = tr.run(4, batch=2, seq=16)
+        assert len(hist) == 4
+        sess = tr.daemon.sessions[tr.token]
+        assert sess.counters["heartbeats"] >= 4  # batched windows landed
+        assert tr.cp is sess.cp and tr.manager is sess.manager
+        # failure drain goes through the protocol: deregister + tick
+        tr.handle_failure([3])
+        assert 3 not in tr.cp.members
+        assert sess.counters["deregistered"] == 1
+        # idempotent like the embedded path's mark_failed (pop-with-default)
+        tr.handle_failure([3])
+        assert sess.counters["deregistered"] == 1
+        tr.add_members([3])
+        assert 3 in tr.cp.members
 
 
 class TestServeEngineDelegation:
