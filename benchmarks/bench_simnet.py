@@ -10,8 +10,11 @@ Two figures:
   **CI gate: >= 100k simulated packets/sec on the batched (np) path.**
 * ``simnet_closed_loop`` — the full scenario loop (DAQ generation,
   segmentation, routing through ``DataPlane``, reassembly, telemetry, CP
-  feedback). Reported for the trend table; the pre-existing stages have
-  their own gated benches (dispatch, ingest, route_throughput).
+  feedback), timed on BOTH engines: the fused device-resident superblock
+  path (``simnet.fused``, the default — **CI gate: >= 100k pkt/s**) and the
+  per-window host loop (the parity oracle, kept for the trend table). The
+  fused figure also asserts the jit-discipline invariants: one trace for
+  the whole run and one jitted dispatch per superblock.
 """
 from __future__ import annotations
 
@@ -67,13 +70,13 @@ def _core_window(queue_engine: str, n_windows: int = 5) -> float:
     return n_windows * N / dt
 
 
-def _closed_loop() -> float:
-    cfg = SimConfig(steps=20, triggers_per_step=64, n_daqs=4, n_members=16,
-                    mean_bundle_bytes=12_000)
-    Simulator(cfg).run()  # warm the jit caches
-    r = Simulator(SimConfig(steps=40, triggers_per_step=64, n_daqs=4,
-                            n_members=16, mean_bundle_bytes=12_000)).run()
+def _closed_loop(engine: str) -> float:
+    kw = dict(triggers_per_step=64, n_daqs=4, n_members=16,
+              mean_bundle_bytes=12_000, engine=engine)
+    Simulator(SimConfig(steps=20, **kw)).run()  # warm the jit caches
+    r = Simulator(SimConfig(steps=40, **kw)).run()
     assert not r.violations, r.violations
+    assert r.engine == engine, (r.engine, engine)
     return r.packets_per_sec
 
 
@@ -84,18 +87,38 @@ def run():
     pps_jnp = _core_window("jnp")
     row("simnet_core_jnp", 1e6 / pps_jnp,
         f"{pps_jnp:,.0f} simulated pkt/s (lax.scan farm engine)")
-    pps_loop = _closed_loop()
-    row("simnet_closed_loop", 1e6 / pps_loop,
-        f"{pps_loop:,.0f} pkt/s full loop (DAQ+route+reassembly+CP)")
+
+    from repro.simnet import fused
+    calls0, traces0 = fused.FUSED_STEP_CALLS, fused.FUSED_TRACES
+    pps_fused = _closed_loop("fused")
+    calls = fused.FUSED_STEP_CALLS - calls0
+    traces = fused.FUSED_TRACES - traces0
+    # jit discipline: one trace for both runs (same shapes), one jitted
+    # dispatch per superblock (20+40 windows / 8-window superblocks = 8)
+    assert traces == 1, f"retrace: {traces} traces for same-shape configs"
+    assert calls == 8, f"{calls} dispatches for 8 superblocks"
+    row("simnet_closed_loop_fused", 1e6 / pps_fused,
+        f"{pps_fused:,.0f} pkt/s fused loop (want >= 100k; "
+        f"{calls} dispatches, {traces} trace)")
+    pps_host = _closed_loop("host")
+    row("simnet_closed_loop_host", 1e6 / pps_host,
+        f"{pps_host:,.0f} pkt/s host loop (the parity oracle)")
 
     emit_json("simnet", metrics={
         "core_np_pkts_per_s": pps_np,
         "core_jnp_pkts_per_s": pps_jnp,
-        "closed_loop_pkts_per_s": pps_loop,
+        # the default engine's figure is THE closed-loop number
+        "closed_loop_pkts_per_s": pps_fused,
+        "fused_loop_pkts_per_s": pps_fused,
+        "host_loop_pkts_per_s": pps_host,
+        "fused_speedup_vs_host": pps_fused / pps_host,
+        "fused_device_calls_per_superblock": 1.0,
+        "fused_retraces": float(traces),
     }, params={
         "n_packets_per_window": N, "n_members": M, "n_daqs": N_DAQS,
         "closed_loop": {"steps": 40, "triggers_per_step": 64, "n_daqs": 4,
                         "n_members": 16},
+        "fused_dispatches": calls,
     })
     return pps_np
 

@@ -60,6 +60,12 @@ def parse_args(argv=None):
     ap.add_argument("--timeout-windows", type=int, default=4)
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=["loop", "fused", "host"],
+                    default="loop",
+                    help="loop = this script's inline per-step loop; "
+                         "fused/host = run the equivalent virtual-time "
+                         "simulation through repro.simnet's fused "
+                         "(device-resident superblock) or host engine")
     ap.add_argument("--json", default=None, help="write the summary here")
     return ap.parse_args(argv)
 
@@ -79,8 +85,56 @@ def scenario_transport(args) -> TransportConfig:
     return cfg
 
 
+def run_simulator(args) -> int:
+    """--engine fused/host: the same closed loop on the virtual-time
+    simulator (repro.simnet), where the engine choice is meaningful. The
+    WAN loss/dup knobs map onto the simnet WAN link; ``reorder`` arrives
+    via jitter (the simnet WAN has no explicit reorder window)."""
+    from repro.simnet import SimConfig, Simulator
+    from repro.simnet.links import LinkConfig
+
+    if args.scenario == "elastic":
+        print("--engine fused/host does not support the elastic scenario "
+              "(membership hooks run per-step on host); use --engine loop",
+              file=sys.stderr)
+        return 2
+    tcfg = scenario_transport(args)
+    scale = None
+    if args.scenario == "straggler":
+        scale = np.ones((args.n_members,))
+        scale[0] = 4.0
+    cfg = SimConfig(
+        steps=args.steps, n_members=args.n_members, n_daqs=args.n_daqs,
+        triggers_per_step=args.triggers_per_step,
+        mean_bundle_bytes=args.mean_bundle_bytes,
+        mtu_payload=args.mtu_payload, seed=args.seed, backend=args.backend,
+        wan=LinkConfig(prop_delay_s=1e-3, jitter_s=2e-4,
+                       loss_prob=tcfg.loss_prob,
+                       duplicate_prob=tcfg.duplicate_prob, seed=args.seed),
+        service_scale=scale, reweight_every=args.reweight_every,
+        timeout_windows=max(args.timeout_windows, 1), engine=args.engine)
+    report = Simulator(cfg).run()
+    summary = report.to_dict()
+    print(json.dumps(summary, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
+    violations = list(report.violations)
+    if args.scenario == "straggler" and args.steps >= 20:
+        weights = {int(k): v for k, v in report.final_weights.items()}
+        w = weights.get(0, 1.0)
+        if w >= 1.0:
+            violations.append(f"straggler weight not shed (w={w:.2f})")
+    if violations:
+        print("FAILED: " + "; ".join(violations), file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv=None) -> int:
     args = parse_args(argv)
+    if args.engine != "loop":
+        return run_simulator(args)
     t_start = time.perf_counter()
 
     em = EpochManager(max_members=max(64, 4 * args.n_members))

@@ -37,6 +37,11 @@ def parse_args(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="auto")
     ap.add_argument("--queue-engine", choices=["np", "jnp"], default="np")
+    ap.add_argument("--engine", choices=["fused", "host"], default="fused",
+                    help="fused = device-resident closed loop (one jitted "
+                         "superblock per K windows; falls back to host for "
+                         "configs outside its scope); host = per-window "
+                         "Python loop (the parity oracle)")
     ap.add_argument("--frozen-weights", action="store_true",
                     help="disable control-plane feedback (control run)")
     ap.add_argument("--compare-frozen", action="store_true",
@@ -58,7 +63,8 @@ def parse_args(argv=None):
 def build_and_run(args, frozen: bool, policy: str | None = None) -> SimReport:
     scenario = get_scenario(args.scenario)
     extra = dict(steps=args.steps, seed=args.seed, backend=args.backend,
-                 queue_engine=args.queue_engine, frozen_weights=frozen)
+                 queue_engine=args.queue_engine, frozen_weights=frozen,
+                 engine=args.engine)
     if args.n_members is not None:
         extra["n_members"] = args.n_members
     if args.triggers_per_step is not None:

@@ -165,6 +165,7 @@ class ControlDaemon:
             M.Reserve.KIND: self._reserve,
             M.Free.KIND: self._free,
             M.Register.KIND: self._register,
+            M.RegisterBatch.KIND: self._register_batch,
             M.Deregister.KIND: self._deregister,
             M.SendState.KIND: self._send_state,
             M.SendStateBatch.KIND: self._send_state_batch,
@@ -250,40 +251,83 @@ class ControlDaemon:
         return {"instance": s.instance, "counters": dict(s.counters)}
 
     # -- member lifecycle -----------------------------------------------------
-    def _register(self, msg: M.Register, now: float) -> dict:
-        s = self._session(msg.token)
-        if self._member_index(msg.member_id) is None:
+    def _validate_member(self, member_id, node_id, base_lane, lane_bits,
+                         weight) -> tuple[int, MemberSpec, float]:
+        """One member's registration fields -> (lane, spec, weight), or a
+        ``SessionError``. Every field a later (journaled!) step consumes is
+        validated HERE, as a protocol rejection: a bad value that only blew
+        up inside the starting Tick (e.g. weight=0 in cp.start) would crash
+        *after* its WAL append and poison the journal for every future
+        recover()."""
+        mid = self._member_index(member_id)
+        if mid is None:
             raise SessionError(
-                f"member id {msg.member_id!r} out of range "
+                f"member id {member_id!r} out of range "
                 f"(max {self.max_members})")
-        # Every field a later (journaled!) step consumes is validated HERE,
-        # as a protocol rejection: a bad value that only blew up inside the
-        # starting Tick (e.g. weight=0 in cp.start) would crash *after* its
-        # WAL append and poison the journal for every future recover().
         try:
-            weight = float(msg.weight)
+            w = float(weight)
         except (TypeError, ValueError):
             raise SessionError(
-                f"weight {msg.weight!r} is not a number") from None
-        if not (weight > 0.0) or not np.isfinite(weight):
+                f"weight {weight!r} is not a number") from None
+        if not (w > 0.0) or not np.isfinite(w):
             raise SessionError(
-                f"weight must be positive and finite, got {msg.weight!r}")
+                f"weight must be positive and finite, got {weight!r}")
         try:
-            spec = MemberSpec(node_id=msg.node_id, base_lane=msg.base_lane,
-                              lane_bits=msg.lane_bits)
-        except TableError as e:
+            spec = MemberSpec(node_id=node_id, base_lane=base_lane,
+                              lane_bits=lane_bits)
+        except (TableError, TypeError) as e:
             raise SessionError(str(e)) from None
-        expires = now + self.lease_s
-        s.lanes.grant(msg.member_id, expires)
+        return mid, spec, w
+
+    def _admit(self, s: Session, mid: int, spec: MemberSpec, weight: float,
+               expires: float) -> None:
+        s.lanes.grant(mid, expires)
         s.counters["registered"] += 1
         if s.started:
             # (re-)joining a live session: the next tick's feedback sees the
             # membership delta and schedules a hit-less epoch switch
-            s.cp.add_members({msg.member_id: spec}, weight=weight)
-            s.lanes.clear_samples([msg.member_id])
+            s.cp.add_members({mid: spec}, weight=weight)
+            s.lanes.clear_samples([mid])
         else:
-            s.pending[msg.member_id] = (spec, weight)
+            s.pending[mid] = (spec, weight)
+
+    def _register(self, msg: M.Register, now: float) -> dict:
+        s = self._session(msg.token)
+        mid, spec, weight = self._validate_member(
+            msg.member_id, msg.node_id, msg.base_lane, msg.lane_bits,
+            msg.weight)
+        expires = now + self.lease_s
+        self._admit(s, mid, spec, weight, expires)
         return {"member_id": msg.member_id, "lease_expires": expires}
+
+    def _register_batch(self, msg: M.RegisterBatch, now: float) -> dict:
+        """One bring-up wave in one journal entry. Per-member semantics are
+        exactly N ``Register`` messages at this instant, except validation
+        failures are per-member (in the reply's ``rejected`` map) instead of
+        per-message; duplicates of an id resolve last-spec-wins."""
+        s = self._session(msg.token)
+        try:
+            cols = [list(msg.member_ids), list(msg.node_ids),
+                    list(msg.base_lanes), list(msg.lane_bits),
+                    list(msg.weights)]
+        except TypeError:
+            raise SessionError(
+                "batch fields must be parallel arrays") from None
+        if len({len(c) for c in cols}) != 1:
+            raise SessionError("batch arrays must be the same length")
+        expires = now + self.lease_s
+        accepted, rejected = [], {}
+        for member_id, node_id, base_lane, lane_bits, weight in zip(*cols):
+            try:
+                mid, spec, w = self._validate_member(
+                    member_id, node_id, base_lane, lane_bits, weight)
+            except SessionError as e:
+                rejected[str(member_id)] = str(e)
+                continue
+            self._admit(s, mid, spec, w, expires)
+            accepted.append(mid)
+        return {"n_accepted": len(accepted), "member_ids": accepted,
+                "lease_expires": expires, "rejected": rejected}
 
     def _deregister(self, msg: M.Deregister, now: float) -> dict:
         s = self._session(msg.token)

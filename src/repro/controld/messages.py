@@ -15,6 +15,9 @@ Messages:
   instance (the paper's 4 instances per device, §I-C); ``Reserve`` returns a
   token that scopes every member call to that instance.
 * ``Register`` / ``Deregister`` — member (CN) lifecycle inside a reservation.
+* ``RegisterBatch``            — one bring-up wave of registrations in a
+  single frame (parallel arrays), one journal entry; per-member validation
+  failures are rejected individually in the reply.
 * ``SendState``               — the heartbeat: carries the MemberTelemetry
   fields (fill / rate / healthy) and renews the member's lease.
 * ``SendStateBatch``          — one *window* of heartbeats for many members
@@ -75,6 +78,26 @@ class Register:
     base_lane: int = 0
     lane_bits: int = 0
     weight: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RegisterBatch:
+    """One session bring-up (or rejoin wave) of many members in a single
+    frame: parallel arrays of member ids / node ids / lanes / weights. The
+    daemon handles it as one journal entry with per-member semantics exactly
+    ``Register`` at a shared instant — members that fail validation (bad id,
+    bad weight, bad lane spec) are *individually* rejected in the reply's
+    ``rejected`` map while the rest are admitted; duplicates of a member id
+    resolve last-spec-wins. At 10k members this turns ~0.5 s of per-member
+    round trips into one frame."""
+
+    KIND = "register_batch"
+    token: str = ""
+    member_ids: tuple = ()
+    node_ids: tuple = ()
+    base_lanes: tuple = ()
+    lane_bits: tuple = ()
+    weights: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,8 +172,8 @@ class Reply:
 
 MESSAGE_TYPES = {
     cls.KIND: cls
-    for cls in (Reserve, Free, Register, Deregister, SendState,
-                SendStateBatch, Tick, Status)
+    for cls in (Reserve, Free, Register, RegisterBatch, Deregister,
+                SendState, SendStateBatch, Tick, Status)
 }
 #: kinds that mutate daemon state and therefore must be journaled
 MUTATING_KINDS = frozenset(

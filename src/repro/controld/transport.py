@@ -303,6 +303,34 @@ class ControldClient:
             node_id=member_id if node_id is None else node_id,
             base_lane=base_lane, lane_bits=lane_bits, weight=weight))
 
+    def register_batch(self, token: str, member_ids, node_ids=None,
+                       base_lanes=None, lane_bits=0, weights=None) -> dict:
+        """One bring-up wave in one frame. ``node_ids`` defaults to the
+        member ids; ``lane_bits`` may be a scalar (applied to every member)
+        or a parallel array. Returns the daemon's ``{"n_accepted",
+        "member_ids", "lease_expires", "rejected"}`` — per-member
+        validation failures live in ``rejected``, they do not raise: the
+        rest of the wave is admitted."""
+        # np integers -> python ints for JSON; anything non-integral passes
+        # through untouched so the daemon rejects it per-member (a client-
+        # side int() would silently truncate onto the wrong lane)
+        def as_id(m):
+            return (int(m) if isinstance(m, (int, np.integer))
+                    and not isinstance(m, bool) else m)
+
+        ids = [as_id(m) for m in member_ids]
+        n = len(ids)
+        if np.isscalar(lane_bits):
+            lane_bits = [lane_bits] * n
+        return self._call(M.RegisterBatch(
+            token=token, member_ids=ids,
+            node_ids=(list(ids) if node_ids is None
+                      else [as_id(m) for m in node_ids]),
+            base_lanes=([0] * n if base_lanes is None else list(base_lanes)),
+            lane_bits=[as_id(b) for b in lane_bits],
+            weights=([1.0] * n if weights is None
+                     else [float(w) for w in weights])))
+
     def deregister(self, token: str, member_id: int) -> dict:
         return self._call(M.Deregister(token=token, member_id=member_id))
 
@@ -350,10 +378,8 @@ class ControldClient:
             return {"n_accepted": 0, "lease_expires": 0.0, "rejected": {}}
         reply = send(ids)
         retry = sorted(int(m) for m in reply["rejected"])
-        for m in retry:
-            self.register(token, member_id=m, node_id=m,
-                          lane_bits=lane_bits)
         if retry:
+            self.register_batch(token, retry, lane_bits=lane_bits)
             send(retry)
         return reply
 

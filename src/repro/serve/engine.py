@@ -82,9 +82,9 @@ class ServingEngine:
             self.client = ControldClient(InProcTransport(self.daemon))
             self.token = self.client.reserve(
                 policy=serve_cfg.controld_policy)["token"]
-            for i in range(serve_cfg.n_replicas):
-                self.client.register(self.token, member_id=i, node_id=i,
-                                     lane_bits=serve_cfg.lane_bits)
+            self.client.register_batch(self.token,
+                                       range(serve_cfg.n_replicas),
+                                       lane_bits=serve_cfg.lane_bits)
             self.client.tick(current_event=0)  # starts the session (epoch 0)
             session = self.daemon.sessions[self.token]
             self.manager = session.manager

@@ -1,0 +1,711 @@
+"""Device-resident closed loop: the per-window simnet step as ONE program.
+
+The host engine (``sim.Simulator.step``) ping-pongs Python between seven
+already-vectorized array programs every window — route (device), downlink
+FIFO (numpy), farm Lindley scan, reassembly sort, telemetry dicts, policy,
+calendar rebuild — so the composed system measures ~22k pkt/s while the
+routing core alone sustains ~760k. This module is the paper's actual shape:
+the steady-state loop is a single compiled artifact (the FPGA forwards at
+line rate; the control plane only intervenes at epoch boundaries), and host
+code runs only at *reconfiguration* boundaries.
+
+Split of labor (DESIGN.md §Fused closed loop):
+
+* **Host precompute (the plant).** Everything control-INDEPENDENT is
+  precomputed per run with the simulator's real stateful objects — DAQ
+  emission (``DAQFleet``), segmentation, uplink + WAN serialization/loss
+  (``LinkSet``/``Link``), and the per-window downlink randomness
+  (``draw_window`` with the member links' own seed/window counter). Within
+  the fused scope every packet routes valid, so the downlink draw count per
+  window is known before routing — the one fact that makes the plant
+  separable from the control loop.
+* **Device scan (the closed loop).** Routing against an epoch *ring*,
+  per-member downlink FIFO serialization, the bounded Lindley farm queues,
+  sort-based completion/duplicate detection, reassembly-timeout buckets,
+  measured-occupancy telemetry, the proportional-PI policy and the full
+  512-slot calendar rebuild (largest-remainder quotas + smooth weighted
+  round-robin + quota enforcement) all run inside one ``lax.scan`` over a
+  K-window superblock, jitted with the carry buffer-donated. Python
+  branches became masks; the epoch-switch decision is a masked in-scan
+  update with the hysteresis state (scheduled weights, current epoch start)
+  carried as arrays.
+
+Numerical contract: every elementwise operation mirrors the host engine's
+op-for-op (same association, same clip/round semantics, numpy's pairwise
+mean replicated exactly for the lane counts the engine admits), so fused
+and host runs produce identical counters and (empirically, asserted by
+tests/test_fused.py) identical latencies on the supported scenarios. The
+host loop stays as the parity oracle (``engine="host"``).
+
+``FUSED_STEP_CALLS`` counts jitted superblock dispatches and
+``FUSED_TRACES`` counts compiles — CI's jit-discipline check asserts one
+compile total and one dispatch per superblock across heterogeneous
+same-shape configs (same policy as ``controld.policy.FUSED_KERNEL_CALLS``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from repro.core.calendar import build_calendar
+from repro.core.protocol import CALENDAR_SLOTS, HEADER_BYTES, split64
+from repro.core.router import route as _route
+from repro.core.tables import MAX_EPOCH_ROWS, DeviceTables
+from repro.data.segmentation import SEG_HDR_BYTES, next_pow2, segment_bundles
+from repro.data.transport import draw_window
+from repro.simnet.sim import IP_UDP_BYTES
+
+#: jitted superblock dispatches since import (one per K-window superblock)
+FUSED_STEP_CALLS = 0
+#: traces (compiles) of the superblock program since import — heterogeneous
+#: same-shape configs must share one trace (params travel as traced arrays)
+FUSED_TRACES = 0
+
+DEFAULT_SUPERBLOCK = 8
+_RING = MAX_EPOCH_ROWS  # resident calendars in the scan-carried epoch ring
+
+# numpy's small-array quicksort is insertion sort (stable) up to this many
+# elements — above it np.argsort(-rem) tie order in the calendar quota step
+# is not reproducible with jnp's stable argsort, so the fused engine demurs
+_STABLE_ARGSORT_MAX = 16
+
+
+def unsupported_reason(cfg, scenario=None) -> Optional[str]:
+    """Why this (config, scenario) must run on the host engine, or None.
+
+    The fused program covers the embedded-CP single-instance loop with
+    hook-free scenarios; anything that mutates the plant mid-run (traffic
+    shaping, link flaps, controld lease churn) re-introduces host control
+    flow between windows and stays on the oracle path.
+    """
+    if cfg.controld:
+        return "controld sessions are host-side daemons"
+    if cfg.n_instances != 1:
+        return "multi-instance partitions the farm host-side"
+    if scenario is not None:
+        if scenario.traffic is not None:
+            return "scenario shapes traffic per step"
+        if scenario.trigger_boost is not None:
+            return "scenario boosts trigger sizes per step"
+        if scenario.on_step is not None:
+            return "scenario mutates the plant per step"
+    if cfg.stale_after_s is not None:
+        return "staleness tracking needs host telemetry timestamps"
+    if cfg.n_members > _STABLE_ARGSORT_MAX:
+        return "calendar quota tie-break only reproducible for <=16 members"
+    if not cfg.timeout_windows or cfg.timeout_windows < 1:
+        return "reassembly timeout buckets need timeout_windows >= 1"
+    # completion keys pack (event_lo, daq, seg) into one u64 lane
+    ev_bound = (1 << 20) + 7 * cfg.steps * cfg.triggers_per_step
+    if ev_bound >= (1 << 31):
+        return "event numbers would overflow the packed completion key"
+    if cfg.n_daqs >= (1 << 16):
+        return "daq ids must fit the packed completion key"
+    return None
+
+
+def fused_supported(cfg, scenario=None) -> bool:
+    return unsupported_reason(cfg, scenario) is None
+
+
+# ---------------------------------------------------------------------------
+# exact numpy arithmetic on device
+# ---------------------------------------------------------------------------
+
+def _np_sum(x, m: int):
+    """Bitwise replication of numpy's pairwise ``add.reduce`` over ``m``
+    lanes (m <= 128): sequential below 8, the 8-way unrolled accumulator
+    with the fixed combine tree above. ``np.mean`` (the policy finalize) and
+    ``w.sum()`` (calendar quotas) both reduce through this path on the host,
+    so the device must associate identically or weight hysteresis / quota
+    floors could flip on a ULP."""
+    if m < 8:
+        s = x[0]
+        for i in range(1, m):
+            s = s + x[i]
+        return s
+    r = [x[j] for j in range(8)]
+    i = 8
+    while i < m - (m % 8):
+        for j in range(8):
+            r[j] = r[j] + x[i + j]
+        i += 8
+    s = ((r[0] + r[1]) + (r[2] + r[3])) + ((r[4] + r[5]) + (r[6] + r[7]))
+    for k in range(i, m):
+        s = s + x[k]
+    return s
+
+
+def _device_calendar(w, n_slots: int):
+    """``core.calendar.build_calendar`` as a traced program: largest-
+    remainder quotas (surplus/deficit fixups as masked bounded loops — the
+    host's data-dependent ``while`` moves at most M slots), the 512-step
+    smooth-weighted-round-robin scan, then the exact-quota corrective walk.
+    Op-for-op with the numpy implementation; all members live (w > 0)."""
+    m = w.shape[0]
+    total = _np_sum(w, m)
+    ideal = w / total * n_slots
+    counts = jnp.floor(ideal).astype(jnp.int64)
+    counts = jnp.where(counts == 0, 1, counts)  # every live member reachable
+    rem = ideal - jnp.floor(ideal)
+
+    def surplus(_, cnts):
+        over = jnp.where(cnts > 1, cnts.astype(jnp.float64) - ideal, -jnp.inf)
+        pick = jnp.argmax(over)  # first-max, same as np.argmax
+        dec = (jnp.sum(cnts) > n_slots).astype(cnts.dtype)
+        return cnts.at[pick].add(-dec)
+
+    counts = jax.lax.fori_loop(0, m, surplus, counts)
+    order = jnp.argsort(-rem)  # stable; np quicksort is stable for m <= 16
+
+    def deficit(i, cnts):
+        inc = (jnp.sum(cnts) < n_slots).astype(cnts.dtype)
+        return cnts.at[order[i]].add(inc)
+
+    counts = jax.lax.fori_loop(0, m, deficit, counts)
+
+    remaining = counts.astype(jnp.float64)
+
+    def swrr(credit, _):
+        credit = credit + remaining
+        pick = jnp.argmax(credit)
+        credit = credit.at[pick].add(-float(n_slots))
+        return credit, pick.astype(jnp.int32)
+
+    _, cal = jax.lax.scan(swrr, jnp.zeros((m,), jnp.float64), None,
+                          length=n_slots)
+
+    have = jnp.zeros((m,), jnp.int64).at[cal].add(1)
+    deficit_m = have < counts
+    len_def = jnp.sum(deficit_m.astype(jnp.int32))
+    def_ids = jnp.sort(jnp.where(deficit_m, jnp.arange(m, dtype=jnp.int32),
+                                 m))
+    need = jnp.where(deficit_m, counts - have, 0)
+
+    def enforce(c3, cal_s):
+        have, need, di = c3
+        d = jnp.clip(def_ids[jnp.clip(di, 0, m - 1)], 0, m - 1)
+        cond = (have[cal_s] > counts[cal_s]) & (di < len_def)
+        c1 = cond.astype(jnp.int64)
+        out = jnp.where(cond, d, cal_s)
+        have = have.at[cal_s].add(-c1).at[d].add(c1)
+        need = need.at[d].add(-c1)
+        di = di + (cond & (need[d] == 0)).astype(jnp.int32)
+        return (have, need, di), out.astype(jnp.int32)
+
+    _, cal = jax.lax.scan(enforce, (have, need, jnp.int32(0)), cal)
+    return cal
+
+
+# ---------------------------------------------------------------------------
+# the fused per-window step + superblock scan
+# ---------------------------------------------------------------------------
+
+def _window_step(carry, x, params):
+    """One window: route -> downlink FIFO -> farm -> completion ->
+    timeout buckets -> telemetry -> policy -> (masked) epoch switch.
+    Every branch of the host step is a mask; padding windows/rows are exact
+    carry no-ops."""
+    i32, f64 = jnp.int32, jnp.float64
+    valid = x["valid"]
+    n = valid.shape[0]
+    m_count = carry["weights"].shape[0]
+    g_count = x["nseg_b"].shape[0]
+    idx = jnp.arange(n, dtype=i32)
+
+    # -- 1) route against the scan-carried epoch ring ----------------------
+    tables = DeviceTables(
+        seg_start_hi=carry["ring_hi"], seg_start_lo=carry["ring_lo"],
+        seg_row=jnp.arange(_RING, dtype=i32), calendars=carry["ring_cal"],
+        member_node=jnp.arange(m_count, dtype=i32),
+        member_base_lane=jnp.zeros((m_count,), i32),
+        member_lane_mask=jnp.zeros((m_count,), i32),
+        member_valid=jnp.ones((m_count,), i32))
+    r = _route(tables, x["ev_hi"], x["ev_lo"], jnp.zeros((n,), i32))
+    memb = r.member
+    invalid = jnp.sum(valid & ~r.valid)  # expected 0 in fused scope
+    mc = jnp.clip(memb, 0, m_count - 1)
+
+    # -- 2) downlink: segmented FIFO (links.fifo_departures_multi) ---------
+    lk = jnp.where(valid, memb, m_count).astype(i32)
+    tx = jnp.where(valid, x["bytes"] / params["link_rate"], 0.0)
+    t_rdy = jnp.where(valid, x["t_out"], 0.0)
+    s_lk, s_t, s_idx, s_tx = jax.lax.sort((lk, t_rdy, idx, tx), num_keys=3)
+    new = jnp.concatenate([jnp.ones((1,), bool), s_lk[1:] != s_lk[:-1]])
+    svalid = s_lk < m_count
+    gid = jnp.cumsum(new.astype(i32)) - 1
+    cs = jnp.cumsum(s_tx)
+    seg_base = jax.lax.cummax(jnp.where(new, cs - s_tx, -jnp.inf))
+    c = cs - seg_base
+    a = s_t - (c - s_tx)
+    busy_ext = jnp.concatenate([carry["dl_busy"], jnp.full((1,), -jnp.inf)])
+    a = jnp.where(new, jnp.maximum(a, busy_ext[s_lk]), a)
+    amax = jnp.max(jnp.where(svalid, a, -jnp.inf))
+    amin = jnp.min(jnp.where(svalid, a, jnp.inf))
+    span = jnp.where(jnp.isfinite(amax), (amax - amin) + 1.0, 0.0)
+    off = gid.astype(f64) * span
+    run = jax.lax.cummax(jnp.where(svalid, a + off, -jnp.inf))
+    dep_s = c + (run - off)
+    last = jnp.concatenate([new[1:], jnp.ones((1,), bool)])
+    dl_busy = carry["dl_busy"].at[
+        jnp.where(last & svalid, s_lk, m_count)].max(dep_s, mode="drop")
+    dep_row = jnp.zeros((n,), f64).at[s_idx].set(dep_s)
+    # host: arrive = dep + prop_delay + jitter * jitter_s (same association)
+    t_cn = (dep_row + params["dl_prop"]) + x["jadd"]
+
+    # -- 3) farm: bounded Lindley queues (queues._serve_np) ----------------
+    fvalid = valid & x["keep"]
+    fm = jnp.where(fvalid, memb, m_count).astype(i32)
+    ft = jnp.where(fvalid, t_cn, 0.0)
+    svc = jnp.where(fvalid,
+                    params["per_pkt"][mc] + x["bytes"] * params["per_byte"][mc],
+                    0.0)
+    s_fm, s_ft, s_fi, s_sv = jax.lax.sort((fm, ft, idx, svc), num_keys=3)
+    fnew = jnp.concatenate([jnp.ones((1,), bool), s_fm[1:] != s_fm[:-1]])
+    col = idx - jax.lax.cummax(jnp.where(fnew, idx, 0))
+    tm = jnp.zeros((m_count, n), f64).at[s_fm, col].set(s_ft, mode="drop")
+    sm = jnp.zeros((m_count, n), f64).at[s_fm, col].set(s_sv, mode="drop")
+    vm = jnp.zeros((m_count, n), bool).at[s_fm, col].set(
+        jnp.ones((n,), bool), mode="drop")
+
+    def serve(c2, xc):
+        w, t_last = c2
+        t_col, s_col, v = xc
+        t = jnp.where(v, jnp.maximum(t_col, t_last), t_last)
+        w = jnp.maximum(w - (t - t_last), 0.0)
+        d = v & (w + s_col > params["cap_s"])
+        acc = v & ~d
+        dep = jnp.where(acc, t + w + s_col, jnp.inf)
+        w = jnp.where(acc, w + s_col, w)
+        return (w, t), (dep, d)
+
+    (farm_w, farm_t), (dep_c, drop_c) = jax.lax.scan(
+        serve, (carry["farm_w"], carry["farm_t"]), (tm.T, sm.T, vm.T))
+    fmc = jnp.clip(s_fm, 0, m_count - 1)
+    dep_sorted = jnp.where(svalid_f := (s_fm < m_count),
+                           dep_c.T[fmc, col], jnp.inf)
+    drop_sorted = svalid_f & drop_c.T[fmc, col]
+    farm_dep = jnp.full((n,), jnp.inf).at[s_fi].set(dep_sorted)
+    farm_drop = jnp.zeros((n,), bool).at[s_fi].set(drop_sorted)
+    qdrop = jnp.sum(farm_drop)
+    acc = fvalid & ~farm_drop
+    acc_m = jnp.zeros((m_count,), jnp.int64).at[
+        jnp.where(acc, memb, m_count)].add(1, mode="drop")
+    recv = acc_m > 0
+
+    # -- 4) completion: sort-based dedup + per-bundle counts ---------------
+    key = ((x["ev_lo"].astype(jnp.uint64) << 32)
+           | (x["daq"].astype(jnp.uint64) << 16)
+           | x["seg"].astype(jnp.uint64))
+    nacc = (~acc).astype(jnp.uint32)
+    s_na, s_key, s_dep, s_lidx = jax.lax.sort(
+        (nacc, key, farm_dep, x["lidx"]), num_keys=2)
+    s_acc = s_na == 0
+    same = jnp.concatenate([jnp.zeros((1,), bool),
+                            (s_key[1:] == s_key[:-1])
+                            & s_acc[1:] & s_acc[:-1]])
+    uniq = s_acc & ~same
+    tri = jnp.cumsum(uniq.astype(i32)) - 1
+    # first-served copy of a segment = the copy with the minimal departure
+    # (FIFO per member: service completions are nondecreasing in arrival
+    # order) — exactly the host's dedup-in-service-order rule
+    tri_min = jnp.full((n,), jnp.inf).at[
+        jnp.where(s_acc, tri, n)].min(s_dep, mode="drop")
+    val = tri_min[jnp.clip(tri, 0, n - 1)]
+    cnt_b = jnp.zeros((g_count,), i32).at[
+        jnp.where(uniq, s_lidx, g_count)].add(1, mode="drop")
+    tdone_raw = jnp.full((g_count,), -jnp.inf).at[
+        jnp.where(uniq, s_lidx, g_count)].max(val, mode="drop")
+    dups = jnp.sum(s_acc.astype(jnp.int64)) - jnp.sum(uniq.astype(jnp.int64))
+    done_b = (cnt_b == x["nseg_b"]) & (cnt_b > 0)
+    any_b = cnt_b > 0
+    t_done_b = jnp.where(done_b, tdone_raw, 0.0)
+    mem_b = jnp.full((g_count,), -1, i32).at[
+        jnp.where(valid, x["lidx"], g_count)].max(memb, mode="drop")
+    new_pend = jnp.zeros((m_count,), i32).at[
+        jnp.where(any_b & ~done_b, jnp.clip(mem_b, 0, m_count - 1),
+                  m_count)].add(1, mode="drop")
+
+    # -- 5) reassembly-timeout buckets (BatchReassembler aging) ------------
+    # buckets[m, j] = pending groups that have survived j member-pushes; a
+    # push shifts, expires slot A-1 and admits this window's new groups
+    buckets = carry["buckets"]
+    timed = jnp.sum(jnp.where(recv, buckets[:, -1], 0).astype(jnp.int64))
+    shifted = jnp.concatenate([new_pend[:, None], buckets[:, :-1]], axis=1)
+    buckets = jnp.where(recv[:, None], shifted, buckets)
+    pend_m = jnp.sum(buckets, axis=1)
+
+    # -- 6) measured telemetry at the window boundary ----------------------
+    w_dec = jnp.maximum(farm_w - jnp.maximum(x["wend"] - farm_t, 0.0), 0.0)
+    fill_farm = w_dec / params["cap_s"]
+    backlog_q = jnp.rint(fill_farm * params["cap_pkts"])  # host round() is
+    backlog = jnp.maximum(backlog_q, pend_m.astype(f64))  # banker's too
+    fill_t = jnp.minimum(1.0, backlog / params["cap_div"])
+
+    # -- 7) proportional-PI policy + finalize (policy._prop update) --------
+    err = params["target"] - fill_t
+    integ_new = jnp.clip(carry["integral"] + params["ki"] * err, -1.0, 1.0)
+    factor = 1.0 + params["kp"] * err + integ_new
+    grow = carry["weights"] * jnp.maximum(factor, 0.1)
+    mean = _np_sum(grow, m_count) / float(m_count)
+    wfin = jnp.clip(grow / jnp.maximum(mean, 1e-9),
+                    params["min_w"], params["max_w"])
+    upd = x["reweight"] & x["win_valid"]
+    integral = jnp.where(upd, integ_new, carry["integral"])
+    weights = jnp.where(upd, wfin, carry["weights"])
+
+    # -- 8) hysteresis + masked epoch switch -------------------------------
+    past = x["cur_event"] >= carry["cur_start"]
+    delta = jnp.any(jnp.abs(wfin - carry["sched_w"]) / carry["sched_w"]
+                    > params["rw_thresh"])
+    do_sw = upd & past & delta
+
+    def switch(op):
+        ring_hi, ring_lo, ring_cal, _, _ = op
+        boundary = jnp.maximum(x["cur_event"] + params["horizon"],
+                               carry["cur_start"] + 1)
+        cal = _device_calendar(wfin, ring_cal.shape[1])
+        ring_hi = jnp.concatenate(
+            [ring_hi[1:], (boundary >> 32).astype(jnp.uint32)[None]])
+        ring_lo = jnp.concatenate(
+            [ring_lo[1:], (boundary & 0xFFFFFFFF).astype(jnp.uint32)[None]])
+        ring_cal = jnp.concatenate([ring_cal[1:], cal[None]], axis=0)
+        return ring_hi, ring_lo, ring_cal, boundary, wfin
+
+    ring_hi, ring_lo, ring_cal, cur_start, sched_w = jax.lax.cond(
+        do_sw, switch, lambda op: op,
+        (carry["ring_hi"], carry["ring_lo"], carry["ring_cal"],
+         carry["cur_start"], carry["sched_w"]))
+
+    new_carry = dict(dl_busy=dl_busy, farm_w=farm_w, farm_t=farm_t,
+                     ring_hi=ring_hi, ring_lo=ring_lo, ring_cal=ring_cal,
+                     cur_start=cur_start, weights=weights, integral=integral,
+                     sched_w=sched_w, buckets=buckets)
+    ys = dict(done_b=done_b, t_done_b=t_done_b, any_b=any_b, mem_b=mem_b,
+              acc_m=acc_m, fill=fill_farm, weights=weights,
+              dups=dups, timed=timed, qdrop=qdrop.astype(jnp.int64),
+              invalid=invalid.astype(jnp.int64), switched=do_sw)
+    return new_carry, ys
+
+
+def _superblock_impl(carry, xs, params):
+    global FUSED_TRACES
+    FUSED_TRACES += 1
+    return jax.lax.scan(lambda c, x: _window_step(c, x, params), carry, xs)
+
+
+_SUPERBLOCK = jax.jit(_superblock_impl, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class FusedEngine:
+    """Runs one supported scenario end to end: host plant precompute, the
+    jitted superblock scan, then numpy post-processing into a ``SimReport``
+    identical (counters exactly, floats within fp tolerance) to the host
+    engine's. Construct from an already-built ``Simulator``."""
+
+    def __init__(self, sim, superblock: int = DEFAULT_SUPERBLOCK):
+        self.sim = sim
+        self.cfg = sim.cfg
+        self.superblock = max(1, int(superblock))
+        self.final_carry: Optional[dict] = None
+        self.n_superblocks = 0
+
+    # -- host plant precompute (control-independent randomness) ------------
+    def _precompute(self):
+        cfg, sim = self.cfg, self.sim
+        W = cfg.steps
+        G = cfg.triggers_per_step * cfg.n_daqs
+        period = cfg.window_period_s(cfg.triggers_per_step)
+        ml = cfg.member_link
+        dl_seed = sim.member_links.seed
+        rows, meta = [], []
+        t_clock, dl_ctr = 0.0, 0
+        packets_sent = packets_delivered = lost_dl = 0
+        emit_all = np.zeros((W, G))
+        nseg_all = np.zeros((W, G), np.int32)
+        ev_all = np.zeros((W, G), np.uint64)
+        daq_all = np.zeros((W, G), np.int32)
+        for i in range(W):
+            t0 = t_clock
+            window_end = t0 + period
+            t_clock = window_end
+            bundles = sim.fleet.bundle_window(cfg.triggers_per_step)
+            trigger_t = (t0 + np.arange(cfg.triggers_per_step)
+                         * cfg.trigger_period_s * 1.0)
+            emit_b = np.repeat(trigger_t, cfg.n_daqs)
+            batch = segment_bundles(bundles, cfg.mtu_payload)
+            packets_sent += len(batch)
+            bundle_of_row = np.cumsum(batch.seg_index == 0) - 1
+            wire = (batch.payload_len.astype(np.float64)
+                    + HEADER_BYTES + SEG_HDR_BYTES + IP_UDP_BYTES)
+            t_up, up_keep = sim.daq_uplinks.transit(
+                batch.daq_id.astype(np.int64), emit_b[bundle_of_row], wire)
+            rows_up = np.flatnonzero(up_keep)
+            dlv = sim.wan.transit(t_up[rows_up], wire[rows_up])
+            src = rows_up[dlv.src]
+            n3 = len(src)
+            packets_delivered += n3
+            if n3:
+                # the member links' own stream, advanced only on non-empty
+                # windows (the host step returns before transit when nothing
+                # arrived) — loss/jitter identical to LinkSet.transit
+                keep, _d, jit_u, _e = draw_window(
+                    dl_seed, dl_ctr, n3, loss_prob=float(ml.loss_prob),
+                    duplicate_prob=0.0, jitter_scale=1.0)
+                dl_ctr += 1
+                jadd = jit_u * float(ml.jitter_s)
+                lost_dl += int((~keep).sum())
+            else:
+                keep = np.zeros((0,), bool)
+                jadd = np.zeros((0,))
+            hi, lo = split64(batch.event_number[src])
+            rows.append(dict(
+                ev_hi=hi.astype(np.uint32), ev_lo=lo.astype(np.uint32),
+                daq=batch.daq_id[src].astype(np.int32),
+                seg=batch.seg_index[src].astype(np.int32),
+                lidx=bundle_of_row[src].astype(np.int32),
+                bytes=wire[src],
+                t_out=dlv.t_arrive + cfg.lb_latency_s,
+                keep=keep, jadd=jadd))
+            nseg_b = np.zeros((G,), np.int32)
+            nseg_b[bundle_of_row] = batch.n_segs
+            ev_all[i][bundle_of_row] = batch.event_number
+            daq_all[i][bundle_of_row] = batch.daq_id
+            emit_all[i] = emit_b
+            nseg_all[i] = nseg_b
+            reweight = (not cfg.frozen_weights and cfg.reweight_every
+                        and (i + 1) % cfg.reweight_every == 0)
+            meta.append(dict(nseg_b=nseg_b, reweight=bool(reweight),
+                             win_valid=True, wend=window_end,
+                             cur_event=sim.fleet.event_number))
+        npad = next_pow2(max((len(r["ev_hi"]) for r in rows), default=1))
+        return dict(rows=rows, meta=meta, npad=npad, G=G, W=W,
+                    packets_sent=packets_sent,
+                    packets_delivered=packets_delivered, lost_dl=lost_dl,
+                    sim_time=t_clock, emit=emit_all, nseg=nseg_all,
+                    ev=ev_all, daq=daq_all)
+
+    def _stack_xs(self, plant):
+        """Pad rows to one global Npad and windows to a whole number of
+        superblocks (padding windows are exact carry no-ops), then stack."""
+        npad, K = plant["npad"], self.superblock
+        W, G = plant["W"], plant["G"]
+        Wp = ((W + K - 1) // K) * K
+        spec = [("ev_hi", np.uint32), ("ev_lo", np.uint32),
+                ("daq", np.int32), ("seg", np.int32), ("lidx", np.int32),
+                ("bytes", np.float64), ("t_out", np.float64),
+                ("keep", bool), ("jadd", np.float64)]
+        xs = {k: np.zeros((Wp, npad), dt) for k, dt in spec}
+        xs["valid"] = np.zeros((Wp, npad), bool)
+        xs["nseg_b"] = np.zeros((Wp, G), np.int32)
+        xs["reweight"] = np.zeros((Wp,), bool)
+        xs["win_valid"] = np.zeros((Wp,), bool)
+        xs["wend"] = np.zeros((Wp,))
+        xs["cur_event"] = np.zeros((Wp,), np.int64)
+        for i, (r, mt) in enumerate(zip(plant["rows"], plant["meta"])):
+            n3 = len(r["ev_hi"])
+            for k, _ in spec:
+                xs[k][i, :n3] = r[k]
+            xs["valid"][i, :n3] = True
+            xs["nseg_b"][i] = mt["nseg_b"]
+            xs["reweight"][i] = mt["reweight"]
+            xs["win_valid"][i] = mt["win_valid"]
+            xs["wend"][i] = mt["wend"]
+            xs["cur_event"][i] = mt["cur_event"]
+        return xs, Wp
+
+    def _initial_carry(self):
+        cfg = self.cfg
+        M = cfg.n_members
+        cal0 = build_calendar(np.arange(M, dtype=np.int32), np.ones((M,)),
+                              n_slots=CALENDAR_SLOTS)
+        # all ring entries start as (start 0, epoch-0 calendar): starts stay
+        # sorted ascending across shift-appends, and "newest start <= event"
+        # always picks the live epoch — duplicated oldest rows are harmless
+        return dict(
+            dl_busy=np.full((M,), -np.inf),
+            farm_w=np.zeros((M,)), farm_t=np.zeros((M,)),
+            ring_hi=np.zeros((_RING,), np.uint32),
+            ring_lo=np.zeros((_RING,), np.uint32),
+            ring_cal=np.tile(cal0.astype(np.int32), (_RING, 1)),
+            cur_start=np.int64(0),
+            weights=np.ones((M,)), integral=np.zeros((M,)),
+            sched_w=np.ones((M,)),
+            buckets=np.zeros((M, cfg.timeout_windows), np.int32))
+
+    def _params(self):
+        cfg = self.cfg
+        farm = self.sim.farm.cfg
+        return dict(
+            per_pkt=farm.per_packet_s, per_byte=farm.per_byte_s,
+            cap_s=farm.capacity_s,
+            link_rate=np.float64(cfg.member_link.rate_Bps),
+            dl_prop=np.float64(cfg.member_link.prop_delay_s),
+            target=np.float64(0.5), kp=np.float64(0.5), ki=np.float64(0.1),
+            min_w=np.float64(0.05), max_w=np.float64(8.0),
+            cap_pkts=np.float64(cfg.queue_capacity_pkts),
+            cap_div=np.float64(max(cfg.queue_capacity_pkts, 1)),
+            horizon=np.int64(max(16, 8 * cfg.triggers_per_step)),
+            rw_thresh=np.float64(0.05))
+
+    def _run_device(self, xs, Wp):
+        global FUSED_STEP_CALLS
+        K = self.superblock
+        with enable_x64():
+            carry = {k: jnp.asarray(v) for k, v in self._initial_carry().items()}
+            params = {k: jnp.asarray(v) for k, v in self._params().items()}
+            chunks = []
+            for s in range(0, Wp, K):
+                blk = {k: jnp.asarray(v[s:s + K]) for k, v in xs.items()}
+                carry, ys = _SUPERBLOCK(carry, blk, params)
+                FUSED_STEP_CALLS += 1
+                self.n_superblocks += 1
+                chunks.append(jax.device_get(ys))
+            self.final_carry = jax.device_get(carry)
+        return {k: np.concatenate([c[k] for c in chunks]) for k in chunks[0]}
+
+    def state_digest(self) -> tuple:
+        """Cross-superblock carry state, hashable — the property test
+        asserts K=1 and K=8 splits land on identical digests."""
+        fc = self.final_carry
+        assert fc is not None, "run() first"
+        return tuple(
+            (k, np.asarray(fc[k]).tobytes()) for k in sorted(fc))
+
+    # -- accounting replication (host dict bookkeeping, vectorized) --------
+    def _vanished(self, plant, ys):
+        """Replicates ``Simulator._purge_vanished``: a bundle's emit entry
+        is popped at completion, at reassembly timeout (the timeout-th push
+        of its member after entry), or counted vanished at the first purge
+        step past the horizon that finds it still tracked."""
+        cfg = self.cfg
+        W, G, M = plant["W"], plant["G"], cfg.n_members
+        T = cfg.timeout_windows
+        horizon = max(4 * (T or 1), 64)
+        done = ys["done_b"][:W]
+        anyb = ys["any_b"][:W]
+        memb = ys["mem_b"][:W]
+        recv = np.asarray(ys["acc_m"][:W]) > 0
+        big = np.iinfo(np.int64).max
+        pop = np.full((W, G), big)
+        wcol = np.repeat(np.arange(W)[:, None], G, axis=1)
+        pop[done] = wcol[done]
+        pend = anyb & ~done
+        for m in range(M):
+            rw = np.flatnonzero(recv[:, m])
+            if len(rw) == 0:
+                continue
+            pos_of = np.full((W,), -1, np.int64)
+            pos_of[rw] = np.arange(len(rw))
+            sel = pend & (memb == m)
+            ws, gs = np.nonzero(sel)
+            if len(ws) == 0:
+                continue
+            tgt = pos_of[ws] + T
+            has = tgt < len(rw)
+            pop[ws, gs] = np.where(has, rw[np.minimum(tgt, len(rw) - 1)], big)
+        vanished = 0
+        alive = np.ones((W, G), bool)
+        for P in range(31, W, 32):
+            q = alive & (wcol < P - horizon) & (pop > P)
+            vanished += int(q.sum())
+            alive &= ~q
+        return vanished
+
+    def run(self):
+        from repro.simnet.sim import SimReport
+
+        t_wall = time.perf_counter()
+        cfg, sim = self.cfg, self.sim
+        plant = self._precompute()
+        xs, Wp = self._stack_xs(plant)
+        ys = self._run_device(xs, Wp)
+        W, G, M = plant["W"], plant["G"], cfg.n_members
+
+        # latencies in the host's append order: window, then member
+        # ascending, then (event, daq) ascending within the member
+        lats = []
+        done = ys["done_b"][:W]
+        for w in range(W):
+            d = np.flatnonzero(done[w])
+            if len(d) == 0:
+                continue
+            order = np.lexsort((plant["daq"][w, d], plant["ev"][w, d],
+                                ys["mem_b"][w, d]))
+            sel = d[order]
+            lats.extend((ys["t_done_b"][w, sel]
+                         - plant["emit"][w, sel]).tolist())
+        lat = np.asarray(lats)
+        completed = len(lats)
+        pending = int(self.final_carry["buckets"].sum())
+        timed_out = int(ys["timed"][:W].sum())
+        dups = int(ys["dups"][:W].sum())
+        qdrop = int(ys["qdrop"][:W].sum())
+        discarded = int(ys["invalid"][:W].sum())
+        vanished = self._vanished(plant, ys)
+        bundles_sent = W * G
+
+        acc_tot = np.asarray(ys["acc_m"][:W]).sum(axis=0)
+        per_member = {int(m): int(acc_tot[m]) for m in range(M)
+                      if acc_tot[m] > 0}
+        trajectory = [
+            (w, {m: round(float(ys["weights"][w, m]), 4) for m in range(M)})
+            for w in range(W) if xs["reweight"][w]]
+        fill_trace = [
+            (float(xs["wend"][w]),
+             [round(float(f), 4) for f in ys["fill"][w]])
+            for w in range(W)]
+        weights = {str(m): round(float(self.final_carry["weights"][m]), 4)
+                   for m in range(M)}
+
+        violations = []
+        # split events / corrupt bundles are impossible by construction in
+        # fused scope: every segment of a bundle shares its event number
+        # (one member), is emitted in one window and payloads are never
+        # touched after segmentation — asserted against the host oracle in
+        # tests/test_fused.py
+        lost_wan = sim.wan.n_lost + sim.daq_uplinks.n_lost
+        lossless = (lost_wan == 0 and plant["lost_dl"] == 0
+                    and qdrop == 0 and discarded == 0)
+        if lossless and completed + pending + timed_out < bundles_sent:
+            violations.append("bundles unaccounted with zero loss")
+
+        wall = time.perf_counter() - t_wall
+        return SimReport(
+            scenario=sim.scenario.name if sim.scenario else "custom",
+            steps=cfg.steps,
+            sim_time_s=plant["sim_time"],
+            wall_s=wall,
+            packets_sent=plant["packets_sent"],
+            packets_delivered=plant["packets_delivered"],
+            packets_lost_wan=lost_wan,
+            packets_lost_downlink=plant["lost_dl"],
+            packets_dropped_queue=qdrop,
+            packets_discarded_invalid=discarded,
+            duplicates_absorbed=dups,
+            bundles_sent=bundles_sent,
+            bundles_completed=completed,
+            bundles_pending=pending,
+            bundles_timed_out=timed_out,
+            bundles_vanished=vanished,
+            latency_p50_s=float(np.percentile(lat, 50)) if completed else 0.0,
+            latency_p99_s=float(np.percentile(lat, 99)) if completed else 0.0,
+            latency_max_s=float(lat.max()) if completed else 0.0,
+            latency_mean_s=float(lat.mean()) if completed else 0.0,
+            epoch_switches=int(ys["switched"][:W].sum()),
+            final_weights=weights,
+            weight_trajectory=trajectory,
+            queue_fill_trace=fill_trace,
+            per_member_segments=per_member,
+            violations=violations,
+            engine="fused",
+        )

@@ -65,6 +65,12 @@ class SimConfig:
     backend: str = "auto"
     lb_latency_s: float = 4e-6
 
+    # run engine: "fused" = the device-resident closed loop (simnet.fused;
+    # one jitted superblock program per K windows), with a transparent
+    # fallback to "host" for configs/scenarios outside its scope; "host" =
+    # the per-window Python loop below (the parity oracle).
+    engine: str = "fused"
+
     # links
     daq_uplink: LinkConfig = dataclasses.field(
         default_factory=lambda: LinkConfig(rate_Bps=100e6, jitter_s=2e-5))
@@ -134,6 +140,7 @@ class SimReport:
     daemon_restarts: int = 0
     leases_expired: int = 0
     heartbeats_rejected: int = 0
+    engine: str = "host"           # which engine produced this report
 
     @property
     def packets_per_sec(self) -> float:
@@ -284,9 +291,9 @@ class Simulator:
             r = client.reserve(policy=policies[inst], instance_hint=inst,
                                policy_params=cfg.controld_policy_params)
             self.tokens.append(r["token"])
-            for m in ids:
-                client.register(r["token"], member_id=m, node_id=m,
-                                lane_bits=1)
+            # whole instance membership in one frame / one journal entry
+            reg = client.register_batch(r["token"], ids, lane_bits=1)
+            assert not reg["rejected"], reg["rejected"]
         client.tick(current_event=0)  # starts every session (epoch 0)
         self._bind_daemon(daemon, client)
 
@@ -591,6 +598,14 @@ class Simulator:
 
     # -- whole run --------------------------------------------------------------
     def run(self) -> SimReport:
+        if self.cfg.engine == "fused":
+            from repro.simnet import fused
+            if fused.fused_supported(self.cfg, self.scenario):
+                return fused.FusedEngine(self).run()
+            # outside the fused scope (hooks, controld, >16 members, ...):
+            # fall through to the host loop, which is always complete
+        elif self.cfg.engine != "host":
+            raise ValueError(f"unknown engine {self.cfg.engine!r}")
         t_wall = time.perf_counter()
         for i in range(self.cfg.steps):
             self.step(i)

@@ -809,6 +809,92 @@ class TestSendStateBatch:
             assert (a.ok, a.error, a.data) == (b.ok, b.error, b.data)
 
 
+class TestRegisterBatch:
+    """RegisterBatch mirrors SendStateBatch: one frame, one journal entry,
+    per-member validation rejections in the reply — semantics identical to
+    N scalar Registers at the same instant."""
+
+    def _daemon(self, **kw):
+        clk = _ManualClock()
+        kw.setdefault("n_instances", 1)
+        kw.setdefault("lease_s", 10.0)
+        d = ControlDaemon(clock=kw.pop("clock", clk), **kw)
+        d._test_clock = clk
+        return d
+
+    def test_batch_digest_equals_n_scalar_registers(self):
+        daemons = [self._daemon(), self._daemon()]
+        clients = [_client(d) for d in daemons]
+        toks = [c.reserve(policy="pid")["token"] for c in clients]
+        weights = [1.0, 2.0, 0.5, 1.5]
+        clients[0].register_batch(toks[0], range(4), lane_bits=1,
+                                  weights=weights)
+        for m in range(4):
+            clients[1].register(toks[1], member_id=m, node_id=m,
+                                lane_bits=1, weight=weights[m])
+        for c, tok in zip(clients, toks):
+            c.tick(current_event=0)
+            c.send_state_batch(tok, range(4), [0.8, 0.1, 0.4, 0.6])
+            c.tick(current_event=600)
+        assert daemons[0].state_digest() == daemons[1].state_digest()
+
+    def test_per_member_rejection(self):
+        d = self._daemon(max_members=8)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        r = c.register_batch(tok, [0, 1, 99, "x", 2, 3],
+                             weights=[1, 1, 1, 1, -5, 1])
+        assert r["n_accepted"] == 3
+        assert r["member_ids"] == [0, 1, 3]
+        assert set(r["rejected"]) == {"99", "x", "2"}
+        assert "out of range" in r["rejected"]["99"]
+        assert "out of range" in r["rejected"]["x"]
+        assert "weight" in r["rejected"]["2"]
+        s = next(iter(d.sessions.values()))
+        assert s.counters["registered"] == 3
+        assert sorted(s.lanes.lease_ids()) == [0, 1, 3]
+
+    def test_one_journal_entry_and_replay(self):
+        j = Journal()
+        d = self._daemon(journal=j)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        c.register_batch(tok, range(6), lane_bits=1)
+        c.tick(current_event=0)
+        kinds = [e.kind for e in j.entries]
+        assert kinds.count("register_batch") == 1
+        assert "register" not in kinds
+        rec = ControlDaemon.recover(j, n_instances=1, lease_s=10.0)
+        assert rec.state_digest() == d.state_digest()
+
+    def test_rejoin_wave_on_live_session(self):
+        d = self._daemon(lease_s=5.0)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        c.register_batch(tok, range(3), lane_bits=1)
+        c.tick(current_event=0)
+        d._test_clock.t = 6.0  # everyone's lease lapsed
+        c.tick(current_event=10)
+        r = c.register_batch(tok, range(3), lane_bits=1)
+        assert r["n_accepted"] == 3 and not r["rejected"]
+        c.tick(current_event=20)
+        s = next(iter(d.sessions.values()))
+        assert sorted(s.cp.members) == [0, 1, 2]
+        assert s.counters["leases_expired"] == 3
+
+    def test_length_mismatch_is_a_protocol_rejection(self):
+        j = Journal()
+        d = self._daemon(journal=j)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        with pytest.raises(ControldError):
+            c._call(M.RegisterBatch(token=tok, member_ids=(0, 1),
+                                    node_ids=(0,), base_lanes=(0, 0),
+                                    lane_bits=(1, 1), weights=(1.0, 1.0)))
+        rec = ControlDaemon.recover(j, n_instances=1, lease_s=10.0)
+        assert rec.state_digest() == d.state_digest()
+
+
 class TestJournalCompaction:
     def _workload(self, d, rounds=8):
         clk = d.clock

@@ -1,0 +1,173 @@
+"""repro.simnet.fused: the device-resident closed loop vs the host oracle.
+
+Three invariant families (DESIGN.md §Fused closed loop):
+
+* **Parity** — on every scenario the fused engine supports, it must produce
+  the *same simulation* as the per-window host loop: exact counters, the
+  same per-bundle latency distribution (fp tolerance), the same weight
+  trajectory and audit results. The host loop is the oracle; the fused
+  engine is just a faster evaluation order.
+* **Superblock split** — cross-window state is carried by ``lax.scan`` and
+  across superblocks by the donated carry, so how the run is chopped into
+  superblocks (K=1 vs K=8) must be unobservable: identical final state
+  digests and identical reports.
+* **Jit discipline** — one trace for a family of same-shape configs, one
+  jitted dispatch per superblock. Host dispatch cost is the thing this
+  engine exists to amortize; a silent retrace would give it back.
+"""
+import dataclasses
+
+import pytest
+
+from repro.testing.hypo import given, settings, st
+
+from repro.simnet import Simulator, get_scenario
+from repro.simnet import fused
+from repro.simnet.fused import FusedEngine, fused_supported, unsupported_reason
+from repro.simnet.links import LinkConfig
+from repro.simnet.sim import SimConfig
+
+EXACT_COUNTERS = [
+    "packets_sent", "packets_delivered", "packets_lost_wan",
+    "packets_lost_downlink", "packets_dropped_queue",
+    "packets_discarded_invalid", "duplicates_absorbed",
+    "bundles_sent", "bundles_completed", "bundles_pending",
+    "bundles_timed_out", "bundles_vanished", "epoch_switches",
+]
+CLOSE_FIELDS = [
+    "latency_p50_s", "latency_p99_s", "latency_max_s", "latency_mean_s",
+]
+
+
+def _run(name: str, engine: str, steps: int = 60):
+    scn = get_scenario(name)
+    cfg = scn.build_config(steps=steps, engine=engine)
+    return Simulator(cfg, dataclasses.replace(scn)).run()
+
+
+class TestHostParity:
+    @pytest.mark.parametrize("scenario",
+                             ["baseline", "straggler", "correlated_loss"])
+    def test_fused_matches_host(self, scenario):
+        rh = _run(scenario, "host")
+        rf = _run(scenario, "fused")
+        assert rh.engine == "host" and rf.engine == "fused"
+        for f in EXACT_COUNTERS:
+            assert getattr(rf, f) == getattr(rh, f), f
+        for f in CLOSE_FIELDS:
+            assert getattr(rf, f) == pytest.approx(
+                getattr(rh, f), rel=1e-9, abs=1e-12), f
+        assert rf.per_member_segments == rh.per_member_segments
+        assert set(rf.final_weights) == set(rh.final_weights)
+        for m, w in rh.final_weights.items():
+            assert rf.final_weights[m] == pytest.approx(w, abs=1e-6), m
+        assert not rh.violations and not rf.violations
+        # the whole closed-loop trajectory, not just the endpoint: every
+        # reweight window's weights (rounded in the report) must agree
+        assert len(rf.weight_trajectory) == len(rh.weight_trajectory)
+        for (sh, wh), (sf, wf) in zip(rh.weight_trajectory,
+                                      rf.weight_trajectory):
+            assert sh == sf
+            assert set(wh) == set(wf)
+            for m in wh:
+                assert wf[m] == pytest.approx(wh[m], abs=1e-3), (sh, m)
+
+    def test_frozen_weights_parity(self):
+        cfg = SimConfig(steps=40, frozen_weights=True)
+        rh = Simulator(dataclasses.replace(cfg, engine="host")).run()
+        rf = Simulator(dataclasses.replace(cfg, engine="fused")).run()
+        assert rf.epoch_switches == rh.epoch_switches == 0
+        for f in EXACT_COUNTERS:
+            assert getattr(rf, f) == getattr(rh, f), f
+
+    def test_fill_trace_parity(self):
+        rh = _run("baseline", "host", steps=30)
+        rf = _run("baseline", "fused", steps=30)
+        assert len(rf.queue_fill_trace) == len(rh.queue_fill_trace)
+        for (th, fh), (tf, ff) in zip(rh.queue_fill_trace,
+                                      rf.queue_fill_trace):
+            assert tf == pytest.approx(th, rel=1e-9)
+            assert ff == pytest.approx(fh, abs=1e-3)
+
+
+class TestEngineSelection:
+    def test_unsupported_configs_fall_back_to_host(self):
+        # controld mode runs the daemon protocol per window -> host
+        cfg = SimConfig(steps=6, controld=True)
+        assert unsupported_reason(cfg) is not None
+        r = Simulator(cfg).run()
+        assert r.engine == "host"
+
+    def test_hook_scenarios_fall_back_to_host(self):
+        for name in ("burst", "link_flap", "lease_churn"):
+            scn = get_scenario(name)
+            cfg = scn.build_config(steps=6)
+            assert not fused_supported(cfg, scn), name
+        scn = get_scenario("burst")
+        r = Simulator(scn.build_config(steps=6),
+                      dataclasses.replace(scn)).run()
+        assert r.engine == "host"
+
+    def test_supported_scenarios_use_fused_by_default(self):
+        for name in ("baseline", "straggler", "hetero_farm",
+                     "correlated_loss"):
+            scn = get_scenario(name)
+            cfg = scn.build_config(steps=6)
+            assert fused_supported(cfg, scn), (
+                name, unsupported_reason(cfg, scn))
+
+    def test_unknown_engine_raises(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            Simulator(SimConfig(steps=2, engine="gpu")).run()
+
+
+class TestSuperblockSplit:
+    """Chopping a run into superblocks must be unobservable: K=1 (one
+    dispatch per window) and K=8 (one per eight) share the same scan-carried
+    state, so final digests and reports are identical bit-for-bit."""
+
+    def _digest_and_report(self, cfg: SimConfig, k: int):
+        eng = FusedEngine(Simulator(cfg), superblock=k)
+        report = eng.run()
+        return eng.state_digest(), report
+
+    @settings(max_examples=6)
+    @given(seed=st.integers(0, 2**16), steps=st.sampled_from([8, 16, 19]))
+    def test_k1_equals_k8(self, seed, steps):
+        cfg = SimConfig(steps=steps, seed=seed, engine="fused")
+        d1, r1 = self._digest_and_report(cfg, 1)
+        d8, r8 = self._digest_and_report(cfg, 8)
+        assert d1 == d8
+        for f in EXACT_COUNTERS:
+            assert getattr(r1, f) == getattr(r8, f), f
+        assert r1.latency_p99_s == r8.latency_p99_s
+        assert r1.final_weights == r8.final_weights
+        assert r1.weight_trajectory == r8.weight_trajectory
+
+
+class TestJitDiscipline:
+    def test_one_trace_one_dispatch_per_superblock(self):
+        # a distinctive shape (n_members=5, triggers=3) so this test owns
+        # its compile-cache entry even mid-suite
+        base = SimConfig(steps=16, n_members=5, triggers_per_step=3,
+                         engine="fused")
+        cfgs = [
+            base,
+            dataclasses.replace(base, member_link=LinkConfig(
+                rate_Bps=25e6, prop_delay_s=1e-4, jitter_s=2e-5)),
+            dataclasses.replace(base, service_per_packet_s=8e-5),
+            dataclasses.replace(base, frozen_weights=True),
+        ]
+        calls0, traces0 = fused.FUSED_STEP_CALLS, fused.FUSED_TRACES
+        for cfg in cfgs:
+            r = Simulator(cfg).run()
+            assert r.engine == "fused"
+        assert fused.FUSED_TRACES - traces0 == 1, \
+            "heterogeneous same-shape configs must share one trace"
+        # 16 windows / 8-window superblock = 2 dispatches per run
+        assert fused.FUSED_STEP_CALLS - calls0 == 2 * len(cfgs)
+
+    def test_host_loop_never_touches_fused_counters(self):
+        calls0 = fused.FUSED_STEP_CALLS
+        Simulator(SimConfig(steps=4, engine="host")).run()
+        assert fused.FUSED_STEP_CALLS == calls0
