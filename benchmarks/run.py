@@ -22,7 +22,7 @@ def main() -> None:
                 bench_simnet, bench_controld, bench_roofline):
         try:
             mod.run()
-        except Exception as e:  # pragma: no cover
+        except Exception:  # pragma: no cover
             failed.append(mod.__name__)
             traceback.print_exc()
     if failed:

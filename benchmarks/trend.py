@@ -1,29 +1,47 @@
-"""Render the BENCH_*.json artifacts as a trend table, and gate regressions.
+"""Render BENCH_*.json artifacts as a trend table, gate regressions, and
+build the bench-trend dashboard.
 
 Each bench emits ``BENCH_<name>.json`` (benchmarks/common.emit_json). CI
-uploads them as workflow artifacts, so the run-over-run trajectory lives in
-the artifact history; this script prints one directory's snapshot — or, given
-several directories (e.g. a previous run's downloaded artifacts next to the
-current ones), a side-by-side table with the relative change.
+keeps a rolling *bench-history* directory (one stamped subdirectory per run,
+``<utc>_<sha12>/BENCH_*.json``) so the run-over-run trajectory survives
+between workflow runs; this script is the whole toolchain over those files:
 
+    # one directory's snapshot (optionally vs a previous run's directory)
     python -m benchmarks.trend bench-out [previous-bench-out]
+
+    # gate: fail (>20% past the committed floor) with full history + a
+    # machine-readable TREND-CHECK: line CI can grep
+    python -m benchmarks.trend bench-out \\
+        --check benchmarks/baselines/baselines.json --history bench-history
+
+    # append this run to the rolling history (CI does this every bench run)
+    python -m benchmarks.trend bench-out --append-history bench-history \\
+        --sha "$GITHUB_SHA"
+
+    # render the static HTML dashboard (inline SVG, no JS libraries)
+    python -m benchmarks.trend bench-out --history bench-history \\
+        --check benchmarks/baselines/baselines.json --html dashboard.html
 
 ``--check`` compares the snapshot against the *committed* baseline
 (``benchmarks/baselines/baselines.json``: curated metrics with explicit
-better-direction and conservative floor/ceiling values — see the README
-there) and exits non-zero if any checked metric regresses more than
-``--threshold`` (default 20%) past its baseline, or if a baselined bench
-didn't produce a JSON at all (a silently vanished bench is a regression):
-
-    python -m benchmarks.trend bench-out --check benchmarks/baselines/baselines.json
+better-direction and conservative floor/ceiling values) and exits non-zero
+if any checked metric regresses more than ``--threshold`` (default 20%)
+past its baseline, or if a baselined bench didn't produce a JSON at all
+(a silently vanished bench is a regression).
 """
 from __future__ import annotations
 
 import argparse
 import glob
+import html
 import json
 import os
+import re
+import shutil
 import sys
+import time
+
+_STAMP_RE = re.compile(r"^(?P<date>[0-9TZ]+)_(?P<sha>[0-9a-f]{4,40})$")
 
 
 def load_dir(d: str) -> dict[str, dict]:
@@ -46,18 +64,99 @@ def fmt(v) -> str:
     return str(v)
 
 
+# ---------------------------------------------------------------------------
+# bench history: one stamped subdirectory per run
+# ---------------------------------------------------------------------------
+
+def load_history(history_dir: str) -> list[dict]:
+    """Stamped runs, oldest first. Each entry: ``{"stamp", "sha", "date",
+    "benches": {bench: record}}``. Stamps are ``<utc>_<sha12>`` so the
+    lexicographic sort IS chronological order."""
+    entries = []
+    if not history_dir or not os.path.isdir(history_dir):
+        return entries
+    for name in sorted(os.listdir(history_dir)):
+        sub = os.path.join(history_dir, name)
+        if not os.path.isdir(sub):
+            continue
+        m = _STAMP_RE.match(name)
+        benches = load_dir(sub)
+        if not benches:
+            continue
+        entries.append({
+            "stamp": name,
+            "sha": m.group("sha") if m else name,
+            "date": m.group("date") if m else "",
+            "benches": benches,
+        })
+    return entries
+
+
+def append_history(cur_dir: str, history_dir: str, sha: str,
+                   date: str | None = None, keep: int = 60) -> str:
+    """Copy ``cur_dir``'s BENCH_*.json into a new stamped subdirectory and
+    prune the history to the newest ``keep`` runs. Returns the new stamp."""
+    date = date or time.strftime("%Y%m%dT%H%M%SZ", time.gmtime())
+    sha = (sha or "unknown")[:12]
+    stamp = f"{date}_{sha}"
+    dst = os.path.join(history_dir, stamp)
+    os.makedirs(dst, exist_ok=True)
+    n = 0
+    for path in sorted(glob.glob(os.path.join(cur_dir, "BENCH_*.json"))):
+        shutil.copy(path, dst)
+        n += 1
+    if n == 0:
+        print(f"warning: no BENCH_*.json in {cur_dir} to append",
+              file=sys.stderr)
+    stamps = sorted(d for d in os.listdir(history_dir)
+                    if os.path.isdir(os.path.join(history_dir, d)))
+    for old in stamps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(history_dir, old), ignore_errors=True)
+    return stamp
+
+
+def metric_series(history: list[dict], bench: str,
+                  metric: str) -> list[tuple[str, float]]:
+    """[(stamp, value)] for one metric across the history, skipping runs
+    where the bench/metric is absent."""
+    out = []
+    for e in history:
+        v = e["benches"].get(bench, {}).get("metrics", {}).get(metric)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out.append((e["stamp"], float(v)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the committed-baseline gate
+# ---------------------------------------------------------------------------
+
 def check_against_baseline(cur: dict[str, dict], baseline_path: str,
-                           threshold: float) -> list[str]:
+                           threshold: float,
+                           history: list[dict] | None = None) -> list[str]:
     """Returns a list of human-readable regression strings (empty = pass).
 
     Baseline entries: ``{bench: {metric: {"value": v, "better": "higher" |
     "lower"}}}``. A metric regresses when it moves more than ``threshold``
     (fractional) past the baseline in the *worse* direction; moves in the
     better direction never fail. A missing bench JSON or metric fails too.
+    When ``history`` is given, each failure carries the metric's recorded
+    trajectory so the regression is diagnosable from the CI log alone.
     """
     with open(baseline_path) as f:
         baseline = json.load(f)
     failures = []
+
+    def trail(bench: str, metric: str) -> str:
+        if not history:
+            return ""
+        series = metric_series(history, bench, metric)[-8:]
+        if not series:
+            return ""
+        steps = " -> ".join(f"{fmt(v)} @{s.split('_')[-1][:7]}"
+                            for s, v in series)
+        return f"\n      history({len(series)} runs): {steps}"
+
     for bench, metrics in sorted(baseline.items()):
         rec = cur.get(bench)
         if rec is None:
@@ -66,7 +165,8 @@ def check_against_baseline(cur: dict[str, dict], baseline_path: str,
         for metric, spec in sorted(metrics.items()):
             got = rec.get("metrics", {}).get(metric)
             if not isinstance(got, (int, float)) or isinstance(got, bool):
-                failures.append(f"{bench}.{metric}: missing from the run")
+                failures.append(f"{bench}.{metric}: missing from the run"
+                                + trail(bench, metric))
                 continue
             base = float(spec["value"])
             higher_better = spec.get("better", "higher") == "higher"
@@ -81,10 +181,229 @@ def check_against_baseline(cur: dict[str, dict], baseline_path: str,
             if regression > threshold:
                 failures.append(
                     f"{bench}.{metric}: {fmt(got)} vs baseline {fmt(base)} "
-                    f"({'-' if higher_better else '+'}{regression*100:.1f}%, "
-                    f"allowed {threshold*100:.0f}%)")
+                    f"({'-' if higher_better else '+'}{regression*100:.1f}% "
+                    f"past the floor, allowed {threshold*100:.0f}%)"
+                    + trail(bench, metric))
     return failures
 
+
+def failed_metric_names(failures: list[str]) -> list[str]:
+    """The ``bench.metric`` (or ``bench``) keys out of failure strings,
+    for the machine-readable summary line."""
+    names = []
+    for f_ in failures:
+        head = f_.split(":", 1)[0].strip()
+        names.append(head)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# the static HTML dashboard (inline SVG, no JS libraries)
+# ---------------------------------------------------------------------------
+
+_DASH_CSS = """
+:root { color-scheme: light dark; }
+.viz-root {
+  --surface-1: #fcfcfb; --page: #f9f9f7;
+  --text-primary: #0b0b0b; --text-secondary: #52514e; --muted: #898781;
+  --grid: #e1e0d9; --axis: #c3c2b7;
+  --series-1: #2a78d6; --critical: #d03b3b;
+  --border: rgba(11,11,11,0.10);
+  background: var(--page); color: var(--text-primary);
+  font-family: system-ui, -apple-system, "Segoe UI", sans-serif;
+  margin: 0; padding: 24px; min-height: 100vh;
+}
+@media (prefers-color-scheme: dark) {
+  :root:where(:not([data-theme="light"])) .viz-root {
+    --surface-1: #1a1a19; --page: #0d0d0d;
+    --text-primary: #ffffff; --text-secondary: #c3c2b7; --muted: #898781;
+    --grid: #2c2c2a; --axis: #383835;
+    --series-1: #3987e5; --critical: #d03b3b;
+    --border: rgba(255,255,255,0.10);
+  }
+}
+:root[data-theme="dark"] .viz-root {
+  --surface-1: #1a1a19; --page: #0d0d0d;
+  --text-primary: #ffffff; --text-secondary: #c3c2b7; --muted: #898781;
+  --grid: #2c2c2a; --axis: #383835;
+  --series-1: #3987e5; --critical: #d03b3b;
+  --border: rgba(255,255,255,0.10);
+}
+.viz-root h1 { font-size: 18px; margin: 0 0 4px; }
+.viz-root p.sub { color: var(--text-secondary); font-size: 13px; margin: 0 0 20px; }
+.viz-root h2 { font-size: 14px; margin: 24px 0 8px; }
+.grid { display: flex; flex-wrap: wrap; gap: 16px; }
+.card {
+  background: var(--surface-1); border: 1px solid var(--border);
+  border-radius: 8px; padding: 12px 14px 8px;
+}
+.card .name { font-size: 12px; color: var(--text-secondary); margin: 0 0 2px; }
+.card .val { font-size: 16px; font-weight: 600; margin: 0 0 6px; }
+.card .val.bad { color: var(--critical); }
+.card svg text {
+  font-family: inherit; font-size: 10px; fill: var(--muted);
+  font-variant-numeric: tabular-nums;
+}
+.card svg text.last { fill: var(--text-primary); font-weight: 600; }
+.card svg text.last.bad { fill: var(--critical); }
+.card svg text.floor { fill: var(--muted); }
+"""
+
+_W, _H = 340, 120
+_PAD_L, _PAD_R, _PAD_T, _PAD_B = 44, 54, 8, 18
+
+
+def _svg_chart(series: list[tuple[str, float]], baseline: float | None,
+               higher_better: bool, threshold: float) -> tuple[str, bool]:
+    """One small-multiple line chart (inline SVG). Returns (svg, last point
+    regressed?). Single series: no legend (the card title names it); the
+    committed floor is a dashed reference line; the last value is
+    direct-labeled; native ``<title>`` tooltips per point."""
+    vals = [v for _, v in series]
+    lo_candidates = vals + ([baseline] if baseline is not None else [])
+    lo, hi = min(lo_candidates), max(lo_candidates)
+    span = (hi - lo) or max(abs(hi), 1.0)
+    lo, hi = lo - 0.1 * span, hi + 0.1 * span
+    plot_w = _W - _PAD_L - _PAD_R
+    plot_h = _H - _PAD_T - _PAD_B
+
+    def x(i: int) -> float:
+        n = max(len(series) - 1, 1)
+        return _PAD_L + plot_w * (i / n if len(series) > 1 else 0.5)
+
+    def y(v: float) -> float:
+        return _PAD_T + plot_h * (1 - (v - lo) / (hi - lo))
+
+    last_bad = False
+    if baseline is not None and baseline != 0:
+        change = (vals[-1] - baseline) / abs(baseline)
+        regression = -change if higher_better else change
+        last_bad = regression > threshold
+
+    parts = [f'<svg viewBox="0 0 {_W} {_H}" width="{_W}" height="{_H}" '
+             'role="img">']
+    # recessive grid: 3 hairlines with y labels in muted ink
+    for frac in (0.0, 0.5, 1.0):
+        gy = _PAD_T + plot_h * frac
+        gv = hi - (hi - lo) * frac
+        parts.append(f'<line x1="{_PAD_L}" y1="{gy:.1f}" x2="{_W - _PAD_R}" '
+                     f'y2="{gy:.1f}" stroke="var(--grid)" stroke-width="1"/>')
+        parts.append(f'<text x="{_PAD_L - 4}" y="{gy + 3:.1f}" '
+                     f'text-anchor="end">{html.escape(fmt(gv))}</text>')
+    # the committed floor: dashed reference, labeled in muted ink
+    if baseline is not None:
+        by = y(baseline)
+        parts.append(f'<line x1="{_PAD_L}" y1="{by:.1f}" x2="{_W - _PAD_R}" '
+                     f'y2="{by:.1f}" stroke="var(--muted)" stroke-width="1" '
+                     'stroke-dasharray="4 3"/>')
+        parts.append(f'<text class="floor" x="{_W - _PAD_R + 4}" '
+                     f'y="{by + 3:.1f}">floor</text>')
+    # the series: 2px line + hoverable points
+    pts = " ".join(f"{x(i):.1f},{y(v):.1f}" for i, (_, v) in enumerate(series))
+    if len(series) > 1:
+        parts.append(f'<polyline points="{pts}" fill="none" '
+                     'stroke="var(--series-1)" stroke-width="2" '
+                     'stroke-linejoin="round" stroke-linecap="round"/>')
+    for i, (stamp, v) in enumerate(series):
+        is_last = i == len(series) - 1
+        color = ("var(--critical)" if (is_last and last_bad)
+                 else "var(--series-1)")
+        r = 4 if is_last else 3
+        parts.append(
+            f'<circle cx="{x(i):.1f}" cy="{y(v):.1f}" r="{r}" '
+            f'fill="{color}" stroke="var(--surface-1)" stroke-width="2">'
+            f'<title>{html.escape(stamp)}: {html.escape(fmt(v))}</title>'
+            '</circle>')
+    # direct label on the last point (text wears ink, not series color —
+    # unless it marks a regression, which is a status, not a series)
+    lx, ly = x(len(series) - 1), y(vals[-1])
+    cls = "last bad" if last_bad else "last"
+    parts.append(f'<text class="{cls}" x="{min(lx + 7, _W - 2):.1f}" '
+                 f'y="{ly + 3:.1f}">{html.escape(fmt(vals[-1]))}</text>')
+    # x extent labels: first/last run stamp (sha short)
+    def stamp_label(s: str) -> str:
+        return s.split("_")[-1][:7]
+    parts.append(f'<text x="{_PAD_L}" y="{_H - 4}">'
+                 f'{html.escape(stamp_label(series[0][0]))}</text>')
+    if len(series) > 1:
+        parts.append(f'<text x="{_W - _PAD_R}" y="{_H - 4}" '
+                     'text-anchor="end">'
+                     f'{html.escape(stamp_label(series[-1][0]))}</text>')
+    parts.append("</svg>")
+    return "".join(parts), last_bad
+
+
+def render_html(cur: dict[str, dict], history: list[dict],
+                baseline_path: str | None, threshold: float,
+                cur_stamp: str = "current") -> str:
+    """The dashboard: one small-multiple card per bench metric, history
+    series against the committed floor. ``cur`` is appended as the newest
+    point when it is not already the history's tail."""
+    baseline = {}
+    if baseline_path and os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+
+    entries = list(history)
+    if cur:
+        tail = entries[-1]["benches"] if entries else None
+        if tail != cur:
+            entries = entries + [{"stamp": cur_stamp, "sha": cur_stamp,
+                                  "date": "", "benches": cur}]
+
+    # every (bench, metric) seen anywhere, baselined metrics first
+    keys: list[tuple[str, str]] = []
+    for bench in sorted(baseline):
+        for metric in sorted(baseline[bench]):
+            keys.append((bench, metric))
+    for e in entries:
+        for bench, rec in sorted(e["benches"].items()):
+            for metric, v in sorted(rec.get("metrics", {}).items()):
+                if (isinstance(v, (int, float)) and not isinstance(v, bool)
+                        and (bench, metric) not in keys):
+                    keys.append((bench, metric))
+
+    n_runs = len(entries)
+    cards_by_bench: dict[str, list[str]] = {}
+    n_bad = 0
+    for bench, metric in keys:
+        series = metric_series(entries, bench, metric)
+        if not series:
+            continue
+        spec = baseline.get(bench, {}).get(metric)
+        base = float(spec["value"]) if spec else None
+        higher = (spec or {}).get("better", "higher") == "higher"
+        svg, bad = _svg_chart(series, base, higher, threshold)
+        n_bad += bad
+        val_cls = "val bad" if bad else "val"
+        card = (f'<div class="card"><p class="name">{html.escape(metric)}'
+                '</p>'
+                f'<p class="{val_cls}">{html.escape(fmt(series[-1][1]))}</p>'
+                f'{svg}</div>')
+        cards_by_bench.setdefault(bench, []).append(card)
+
+    sections = []
+    for bench, cards in cards_by_bench.items():
+        sections.append(f"<h2>{html.escape(bench)}</h2>"
+                        f'<div class="grid">{"".join(cards)}</div>')
+    status = (f"{n_bad} metric(s) past the committed floor" if n_bad
+              else "all tracked metrics within the committed floors")
+    return (
+        "<!DOCTYPE html>\n<html><head><meta charset=\"utf-8\">"
+        "<title>bench trend dashboard</title>"
+        f"<style>{_DASH_CSS}</style></head>"
+        '<body class="viz-root">'
+        "<h1>Bench trend dashboard</h1>"
+        f'<p class="sub">{n_runs} run(s) · threshold '
+        f"{threshold * 100:.0f}% · {html.escape(status)} · dashed line = "
+        "committed baseline floor</p>"
+        f'{"".join(sections)}'
+        "</body></html>\n")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
@@ -93,12 +412,36 @@ def main(argv=None) -> int:
     ap.add_argument("--check", default=None, metavar="BASELINES_JSON",
                     help="fail on >threshold regressions vs this baseline")
     ap.add_argument("--threshold", type=float, default=0.2)
+    ap.add_argument("--history", default=None, metavar="DIR",
+                    help="rolling bench-history directory (stamped "
+                         "subdirectories of BENCH_*.json)")
+    ap.add_argument("--append-history", default=None, metavar="DIR",
+                    help="append cur_dir's BENCH_*.json to this history "
+                         "directory as a stamped run, then prune")
+    ap.add_argument("--sha", default="",
+                    help="commit SHA stamped onto --append-history runs")
+    ap.add_argument("--date", default=None,
+                    help="UTC stamp override for --append-history "
+                         "(default: now, %%Y%%m%%dT%%H%%M%%SZ)")
+    ap.add_argument("--keep", type=int, default=60,
+                    help="history runs to keep when appending")
+    ap.add_argument("--html", default=None, metavar="OUT",
+                    help="render the static dashboard here")
     args = ap.parse_args(argv)
+
     cur = load_dir(args.cur_dir)
     prev = load_dir(args.prev_dir) if args.prev_dir else {}
     if not cur:
         print(f"no BENCH_*.json under {args.cur_dir}")
         return 1
+
+    if args.append_history:
+        stamp = append_history(args.cur_dir, args.append_history, args.sha,
+                               date=args.date, keep=args.keep)
+        print(f"appended history run {stamp} -> {args.append_history}")
+
+    history = load_history(args.history or args.append_history)
+
     rows = []
     for bench, rec in sorted(cur.items()):
         for metric, value in sorted(rec.get("metrics", {}).items()):
@@ -117,15 +460,26 @@ def main(argv=None) -> int:
     for b, m, v, d in rows:
         print(f"{b:<{w0}}  {m:<{w1}}  {v:>{w2}}  {d}")
 
+    if args.html:
+        doc = render_html(cur, history, args.check, args.threshold)
+        with open(args.html, "w") as f:
+            f.write(doc)
+        print(f"dashboard -> {args.html} "
+              f"({len(history)} history run(s) + current)")
+
     if args.check:
-        failures = check_against_baseline(cur, args.check, args.threshold)
+        failures = check_against_baseline(cur, args.check, args.threshold,
+                                          history=history)
         if failures:
             print("\nREGRESSIONS vs committed baseline:", file=sys.stderr)
             for f_ in failures:
                 print(f"  {f_}", file=sys.stderr)
+            names = ",".join(failed_metric_names(failures))
+            print(f"TREND-CHECK: FAIL n={len(failures)} metrics={names}")
             return 1
         print(f"\nbaseline check OK ({args.check}, "
               f"threshold {args.threshold*100:.0f}%)")
+        print(f"TREND-CHECK: OK benches={len(cur)}")
     return 0
 
 

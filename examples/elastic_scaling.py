@@ -14,7 +14,6 @@ import sys
 sys.path.insert(0, "src")
 
 import jax
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.calendar import calendar_counts

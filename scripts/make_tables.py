@@ -2,10 +2,7 @@
 
     PYTHONPATH=src python scripts/make_tables.py artifacts/dryrun > /tmp/tables.md
 """
-import json
-import os
 import sys
-from collections import defaultdict
 
 sys.path.insert(0, "src")
 from repro.analysis import roofline as RL  # noqa: E402
@@ -28,7 +25,8 @@ def main(art_dir):
 
     # ---- Dry-run table -------------------------------------------------------
     print("### Dry-run compilation matrix\n")
-    print("| arch | shape | mesh | chips | compile s | HLO args/dev | temps/dev | collective ops (static) |")
+    print("| arch | shape | mesh | chips | compile s | HLO args/dev "
+          "| temps/dev | collective ops (static) |")
     print("|---|---|---|---|---|---|---|---|")
     for a in sorted(base, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
         mem = a.get("memory", {})

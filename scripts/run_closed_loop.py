@@ -66,6 +66,12 @@ def parse_args(argv=None):
                          "fused/host = run the equivalent virtual-time "
                          "simulation through repro.simnet's fused "
                          "(device-resident superblock) or host engine")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="emit a metrics time-series row every N steps "
+                         "(enables the live registry; with --engine fused "
+                         "this forces the host engine). 0 = off")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="JSONL path for --metrics-interval rows")
     ap.add_argument("--json", default=None, help="write the summary here")
     return ap.parse_args(argv)
 
@@ -112,7 +118,10 @@ def run_simulator(args) -> int:
                        loss_prob=tcfg.loss_prob,
                        duplicate_prob=tcfg.duplicate_prob, seed=args.seed),
         service_scale=scale, reweight_every=args.reweight_every,
-        timeout_windows=max(args.timeout_windows, 1), engine=args.engine)
+        timeout_windows=max(args.timeout_windows, 1), engine=args.engine,
+        metrics_every=(max(args.metrics_interval, 1)
+                       if args.metrics_interval or args.metrics_jsonl else 0),
+        metrics_path=args.metrics_jsonl)
     report = Simulator(cfg).run()
     summary = report.to_dict()
     print(json.dumps(summary, indent=2))
@@ -163,6 +172,23 @@ def main(argv=None) -> int:
                 timeout_windows=args.timeout_windows)
         return reassemblers[member]
 
+    metrics = ts_writer = None
+    if args.metrics_interval or args.metrics_jsonl:
+        from repro.telemetry.export import TimeSeriesWriter
+        from repro.telemetry.registry import MetricsRegistry
+        metrics = MetricsRegistry()
+        mx_windows = metrics.counter("loop_windows_total",
+                                     "Ingest windows completed.")
+        mx_step = metrics.histogram("loop_step_seconds",
+                                    "Wall time per ingest window.")
+        metrics.gauge("loop_bundles_completed", "Bundles fully reassembled."
+                      ).set_function(lambda: completed)
+        metrics.gauge("loop_epoch_switches",
+                      "Hit-less epoch switches scheduled."
+                      ).set_function(lambda: epoch_switches)
+        if args.metrics_jsonl:
+            ts_writer = TimeSeriesWriter(args.metrics_jsonl, metrics)
+
     straggler = 0 if args.scenario == "straggler" else None
     event_members: dict[int, set[int]] = defaultdict(set)
     sent_bundles = 0
@@ -174,6 +200,7 @@ def main(argv=None) -> int:
     removed: list[int] = []
 
     for step in range(args.steps):
+        t_step0 = time.perf_counter()
         # -- elastic membership ------------------------------------------------
         if args.scenario == "elastic":
             if step == args.steps // 3 and not joined:
@@ -194,6 +221,9 @@ def main(argv=None) -> int:
         batch = segment_bundles(bundles, args.mtu_payload)
         arrived = wan.deliver_batch(batch)
         if len(arrived) == 0:
+            if metrics is not None:
+                mx_step.observe(time.perf_counter() - t_step0)
+                mx_windows.inc()
             continue
         member, _node, _lane, valid = dp_cache.get().route_window(arrived)
         discarded += int((~valid).sum())
@@ -231,6 +261,16 @@ def main(argv=None) -> int:
             if eid is not None:
                 epoch_switches += 1
             cp.garbage_collect(fleet.event_number)
+
+        if metrics is not None:
+            mx_step.observe(time.perf_counter() - t_step0)
+            mx_windows.inc()
+            if (ts_writer is not None
+                    and (step + 1) % max(args.metrics_interval, 1) == 0):
+                ts_writer.write(step=step)
+
+    if ts_writer is not None:
+        ts_writer.close()
 
     # -- audit ----------------------------------------------------------------
     split_events = sum(1 for ms in event_members.values() if len(ms) > 1)

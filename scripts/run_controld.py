@@ -53,12 +53,20 @@ def parse_args(argv=None):
     ap.add_argument("--compact-every", type=int, default=0,
                     help="roll the WAL into a snapshot every N entries "
                          "(0 = never; requires --snapshot-dir)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="with --serve: expose Prometheus text on "
+                         "http://HOST:PORT/metrics (0 = ephemeral, the "
+                         "bound port is printed)")
     ap.add_argument("--json", default=None, help="write the summary here")
     return ap.parse_args(argv)
 
 
 def serve(args) -> int:
     recovered = 0
+    metrics = None
+    if args.metrics_port is not None:
+        from repro.telemetry.registry import MetricsRegistry
+        metrics = MetricsRegistry()
     snap_dir = args.snapshot_dir
     compact = args.compact_every if snap_dir else 0
     has_snap = (snap_dir is not None and args.journal is not None
@@ -70,6 +78,7 @@ def serve(args) -> int:
         recovered = history.seq + 1
         daemon = ControlDaemon.recover(
             history, n_instances=args.n_instances, lease_s=args.lease_s,
+            metrics=metrics,
             live_journal=Journal.resume(args.journal, history.seq,
                                         snapshot_dir=snap_dir,
                                         compact_every=compact))
@@ -82,19 +91,27 @@ def serve(args) -> int:
         recovered = journal.seq + 1
         daemon = ControlDaemon.recover(journal,
                                        n_instances=args.n_instances,
-                                       lease_s=args.lease_s)
+                                       lease_s=args.lease_s,
+                                       metrics=metrics)
     else:
         # no --journal: run journal-less — an in-memory journal dies with
         # the process anyway and would grow by one entry per heartbeat
         journal = (Journal(args.journal, snapshot_dir=snap_dir,
                            compact_every=compact) if args.journal else None)
         daemon = ControlDaemon(n_instances=args.n_instances,
-                               lease_s=args.lease_s, journal=journal)
-    server = SocketServer(daemon, host=args.host, port=args.port)
+                               lease_s=args.lease_s, journal=journal,
+                               metrics=metrics)
+    server = SocketServer(daemon, host=args.host, port=args.port,
+                          metrics=metrics)
     host, port = server.start()
     print(f"controld serving on {host}:{port} "
           f"(journal={args.journal or 'in-memory'}, "
           f"replayed {recovered} entries)", flush=True)
+    if metrics is not None:
+        from repro.telemetry.export import start_http_server
+        _, mport = start_http_server(metrics, host=args.host,
+                                     port=args.metrics_port)
+        print(f"metrics on http://{args.host}:{mport}/metrics", flush=True)
     try:
         while True:
             time.sleep(1.0)
@@ -109,12 +126,20 @@ def demo(args) -> int:
     if args.journal is None:
         workdir = tempfile.mkdtemp(prefix="controld_demo_")
         args.journal = os.path.join(workdir, "journal.jsonl")
-    snap_dir = os.path.join(os.path.dirname(args.journal), "snapshots")
+    snap_dir = args.snapshot_dir or os.path.join(
+        os.path.dirname(args.journal), "snapshots")
 
+    # --compact-every turns the demo into compaction churn: the WAL rolls
+    # into snapshots mid-run and the recovery below must stitch snapshot
+    # prefix + live tail back together (the nightly soak exercises this)
     daemon = ControlDaemon(n_instances=args.n_instances,
                            lease_s=args.lease_s,
                            epoch_horizon=256,
-                           journal=Journal(args.journal))
+                           journal=Journal(
+                               args.journal,
+                               snapshot_dir=(snap_dir if args.compact_every
+                                             else None),
+                               compact_every=args.compact_every))
     server = SocketServer(daemon, host=args.host, port=args.port)
     host, port = server.start()
     client = ControldClient(SocketClient(host, port))
@@ -171,8 +196,14 @@ def demo(args) -> int:
     server.stop()
     client.close()
 
+    if args.compact_every and Journal.latest_snapshot(snap_dir) is not None:
+        # part of the history already rolled into snapshots: replay the
+        # snapshot prefix + the live WAL tail (what a compacted restart does)
+        history = Journal.restore(snap_dir, tail_path=args.journal)
+    else:
+        history = Journal.load(args.journal)
     recovered = ControlDaemon.recover(
-        Journal.load(args.journal),
+        history,
         n_instances=args.n_instances, lease_s=args.lease_s,
         epoch_horizon=256)
     checks["journal_replay_digest_identical"] = (
@@ -195,6 +226,9 @@ def demo(args) -> int:
         "checks": checks,
     }
     print(json.dumps(summary, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2)
     failed = [k for k, ok in checks.items() if not ok]
     if failed:
         print("FAILED: " + ", ".join(failed), file=sys.stderr)

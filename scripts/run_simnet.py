@@ -56,11 +56,19 @@ def parse_args(argv=None):
                          "controld policies; fail if PID p99 is worse")
     ap.add_argument("--traces", action="store_true",
                     help="include full queue/weight traces in the JSON")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="emit a metrics time-series row every N windows "
+                         "(enables the live registry; forces the host "
+                         "engine). 0 = off")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="JSONL path for --metrics-interval rows "
+                         "(default: no file, registry only)")
     ap.add_argument("--json", default=None, help="write the summary here")
     return ap.parse_args(argv)
 
 
-def build_and_run(args, frozen: bool, policy: str | None = None) -> SimReport:
+def build_and_run(args, frozen: bool, policy: str | None = None,
+                  with_metrics: bool = True) -> SimReport:
     scenario = get_scenario(args.scenario)
     extra = dict(steps=args.steps, seed=args.seed, backend=args.backend,
                  queue_engine=args.queue_engine, frozen_weights=frozen,
@@ -74,6 +82,11 @@ def build_and_run(args, frozen: bool, policy: str | None = None) -> SimReport:
         extra["controld"] = True
     if policy is not None:
         extra["controld_policy"] = policy
+    if with_metrics and (args.metrics_interval or args.metrics_jsonl):
+        # only the primary leg emits: comparison legs (frozen / policy)
+        # would interleave their rows into the same JSONL
+        extra["metrics_every"] = max(args.metrics_interval, 1)
+        extra["metrics_path"] = args.metrics_jsonl
     cfg = scenario.build_config(**extra)
     return Simulator(cfg, dataclasses.replace(scenario)).run()
 
@@ -94,7 +107,7 @@ def main(argv=None) -> int:
         violations.append("no bundles completed")
 
     if args.compare_frozen and not args.frozen_weights:
-        control = build_and_run(args, frozen=True)
+        control = build_and_run(args, frozen=True, with_metrics=False)
         summary["control"] = {
             "latency_p50_s": round(control.latency_p50_s, 9),
             "latency_p99_s": round(control.latency_p99_s, 9),
@@ -117,11 +130,13 @@ def main(argv=None) -> int:
         if args.policy == "pid" and not args.frozen_weights:
             pid = report
         else:
-            pid = build_and_run(args, frozen=False, policy="pid")
+            pid = build_and_run(args, frozen=False, policy="pid",
+                                with_metrics=False)
         if args.policy in (None, "proportional") and not args.frozen_weights:
             prop = report
         else:
-            prop = build_and_run(args, frozen=False, policy="proportional")
+            prop = build_and_run(args, frozen=False, policy="proportional",
+                                 with_metrics=False)
         summary["policy_compare"] = {
             "pid_p99_s": round(pid.latency_p99_s, 9),
             "proportional_p99_s": round(prop.latency_p99_s, 9),

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.controld import messages as M
 from repro.controld.daemon import ControlDaemon
+from repro.telemetry.registry import SIZE_BUCKETS, MetricsRegistry
 
 
 class TransportError(RuntimeError):
@@ -91,6 +92,29 @@ class _Conn:
         self.wbuf = bytearray()
 
 
+class _ServerMetrics:
+    """Socket-front instrumentation: frames, pipeline depth, connection
+    churn, bytes. Resolved once; the selector loop pays plain float adds."""
+
+    def __init__(self, registry: MetricsRegistry):
+        self.frames = registry.counter(
+            "controld_socket_frames_total", "Request frames handled.")
+        self.pipeline_depth = registry.histogram(
+            "controld_socket_pipeline_depth",
+            "Complete frames parsed per socket read (client pipelining).",
+            buckets=SIZE_BUCKETS)
+        self.conns_opened = registry.counter(
+            "controld_socket_connections_opened_total",
+            "Connections accepted.")
+        self.conns_closed = registry.counter(
+            "controld_socket_connections_closed_total",
+            "Connections torn down (EOF, error, corrupt framing, stop).")
+        self.bytes_read = registry.counter(
+            "controld_socket_read_bytes_total", "Bytes received.")
+        self.bytes_written = registry.counter(
+            "controld_socket_written_bytes_total", "Bytes sent.")
+
+
 class SocketServer:
     """Selector-loop length-prefixed-JSON server over a ``ControlDaemon``.
 
@@ -103,7 +127,8 @@ class SocketServer:
     single-writer (the journal is a total order) without a lock."""
 
     def __init__(self, daemon: ControlDaemon, host: str = "127.0.0.1",
-                 port: int = 0):
+                 port: int = 0,
+                 metrics: Optional[MetricsRegistry] = None):
         self.daemon = daemon
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -112,6 +137,7 @@ class SocketServer:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._sel: Optional[selectors.BaseSelector] = None
+        self._mx = None if metrics is None else _ServerMetrics(metrics)
 
     def start(self) -> tuple[str, int]:
         self._sock.listen(128)
@@ -152,16 +178,23 @@ class SocketServer:
             return
         conn.setblocking(False)
         self._sel.register(conn, selectors.EVENT_READ, _Conn(conn))
+        if self._mx is not None:
+            self._mx.conns_opened.inc()
 
     def _close(self, c: _Conn) -> None:
         try:
             self._sel.unregister(c.sock)
         except (KeyError, ValueError):
-            pass
+            was_registered = False
+        else:
+            was_registered = True
         try:
             c.sock.close()
         except OSError:
             pass
+        if self._mx is not None and was_registered:
+            # guard on the unregister so a double _close counts once
+            self._mx.conns_closed.inc()
 
     def _service(self, c: _Conn, mask: int) -> None:
         if mask & selectors.EVENT_READ:
@@ -176,6 +209,8 @@ class SocketServer:
                 self._close(c)  # clean EOF
                 return
             if data:
+                if self._mx is not None:
+                    self._mx.bytes_read.inc(len(data))
                 c.rbuf += data
                 if not self._handle_frames(c):
                     return
@@ -189,6 +224,9 @@ class SocketServer:
         except M.MessageError:
             self._close(c)  # framing corruption: the stream is unusable
             return False
+        if self._mx is not None and wires:
+            self._mx.frames.inc(len(wires))
+            self._mx.pipeline_depth.observe(len(wires))
         for wire in wires:
             try:
                 msg = M.from_wire(wire)
@@ -204,6 +242,8 @@ class SocketServer:
             try:
                 n = c.sock.send(c.wbuf)
                 del c.wbuf[:n]
+                if self._mx is not None:
+                    self._mx.bytes_written.inc(n)
             except BlockingIOError:
                 pass
             except OSError:

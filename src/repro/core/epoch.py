@@ -18,7 +18,6 @@ from typing import Optional
 
 import numpy as np
 
-from repro.core import lpm
 from repro.core.calendar import build_calendar
 from repro.core.tables import DeviceTables, MemberSpec, RouterState, TableError
 

@@ -11,7 +11,6 @@ that realize "delivery to the selected compute node" over the TPU ICI fabric.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ Usage:
     python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback

@@ -12,7 +12,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ModelConfig
 

@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.train import optimizer as OPT

@@ -64,10 +64,30 @@ class ServeConfig:
 
 
 class ServingEngine:
-    def __init__(self, model_cfg: ModelConfig, serve_cfg: ServeConfig, params):
+    def __init__(self, model_cfg: ModelConfig, serve_cfg: ServeConfig, params,
+                 metrics=None):
         self.mcfg = model_cfg
         self.scfg = serve_cfg
         self.params = params
+        # optional MetricsRegistry (repro.telemetry): metrics=None keeps the
+        # engine bit-identical to the uninstrumented path
+        self._mx_decode = self._mx_requests = self._mx_completed = None
+        if metrics is not None:
+            self._mx_decode = metrics.histogram(
+                "serve_decode_step_seconds",
+                "Per-replica decode step latency.")
+            self._mx_requests = metrics.counter(
+                "serve_requests_total", "Requests submitted.")
+            self._mx_completed = metrics.counter(
+                "serve_completed_total", "Requests finished.")
+            metrics.gauge(
+                "serve_queue_depth",
+                "Requests routed-or-submitted but not yet in a decode slot."
+            ).set_function(lambda: len(self.queue) + len(self.unrouted))
+            metrics.gauge(
+                "serve_active_slots", "Occupied decode slots across replicas."
+            ).set_function(lambda: sum(
+                r is not None for slots in self.slots for r in slots))
         if serve_cfg.use_controld:
             # the control plane as a service: the engine is one tenant of a
             # ControlDaemon; replicas are leased members of its reservation
@@ -134,6 +154,8 @@ class ServingEngine:
         self.next_event += int(np.random.default_rng(req.rid).integers(1, 5))
         req.entropy = int(np.random.default_rng(req.rid + 7).integers(0, 1 << 16))
         self.unrouted.append(req)
+        if self._mx_requests is not None:
+            self._mx_requests.inc()
         return req
 
     def _dataplane(self) -> DataPlane:
@@ -222,8 +244,11 @@ class ServingEngine:
             logits, self.states[m] = self._decode(
                 self.params, jnp.asarray(toks), self.states[m])
             logits = jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
+            if self._mx_decode is not None:
+                self._mx_decode.observe(dt)
             self.hub.report_step(
-                m, step_time=time.perf_counter() - t0,
+                m, step_time=dt,
                 backlog=int(queued[m]) + len(active), processed=len(active))
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             for l, r in active:
@@ -232,6 +257,8 @@ class ServingEngine:
                     r.done = True
                     self.slots[m][l] = None
                     self.stats["completed"] += 1
+                    if self._mx_completed is not None:
+                        self._mx_completed.inc()
         self._tick += 1
         if (self.scfg.rebalance_every
                 and self._tick % self.scfg.rebalance_every == 0):

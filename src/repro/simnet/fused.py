@@ -85,6 +85,8 @@ def unsupported_reason(cfg, scenario=None) -> Optional[str]:
     """
     if cfg.controld:
         return "controld sessions are host-side daemons"
+    if getattr(cfg, "metrics_every", 0):
+        return "per-window metrics emission is host-side observation"
     if cfg.n_instances != 1:
         return "multi-instance partitions the farm host-side"
     if scenario is not None:

@@ -102,6 +102,14 @@ class SimConfig:
     controld_policy_params: dict = dataclasses.field(default_factory=dict)
     lease_s: Optional[float] = None          # default: 10 nominal windows
 
+    # observability: metrics_every > 0 enables a MetricsRegistry over the
+    # run (E2E latency histogram, queue-fill gauges, window/packet totals)
+    # and — when metrics_path is set — appends one JSONL time-series row
+    # every that-many windows. Forces the host engine: per-window sampling
+    # is host-side observation by construction (fused.unsupported_reason).
+    metrics_every: int = 0
+    metrics_path: Optional[str] = None
+
     def window_period_s(self, n_triggers: int, period_scale: float = 1.0) -> float:
         return n_triggers * self.trigger_period_s * period_scale
 
@@ -262,6 +270,57 @@ class Simulator:
         self.queue_fill_trace: list[tuple[float, list[float]]] = []
         self.per_member_segments: dict[int, int] = defaultdict(int)
         self._expected: dict[tuple[int, int], np.ndarray] = {}
+
+        # -- live metrics (cfg.metrics_every > 0) -----------------------------
+        self.metrics = None
+        self._ts_writer = None
+        self._lat_emitted = 0
+        if cfg.metrics_every > 0:
+            self._init_metrics()
+
+    def _init_metrics(self) -> None:
+        from repro.telemetry.export import TimeSeriesWriter
+        from repro.telemetry.registry import MetricsRegistry
+        reg = self.metrics = MetricsRegistry()
+        self._lat_hist = reg.histogram(
+            "simnet_e2e_latency_seconds",
+            "Bundle end-to-end latency (emission -> last-segment service).")
+        self._fill_mean = reg.gauge(
+            "simnet_queue_fill_mean", "Mean farm queue fill this window.")
+        self._fill_max = reg.gauge(
+            "simnet_queue_fill_max", "Max farm queue fill this window.")
+        self._windows = reg.counter(
+            "simnet_windows_total", "Simulated windows completed.")
+        # cumulative totals read straight off the simulator at scrape time
+        reg.gauge("simnet_packets_sent",
+                  "Segments emitted by the DAQ fleet."
+                  ).set_function(lambda: self.packets_sent)
+        reg.gauge("simnet_packets_delivered",
+                  "Segments that survived uplink + WAN."
+                  ).set_function(lambda: self.packets_delivered)
+        reg.gauge("simnet_bundles_completed",
+                  "Bundles fully reassembled."
+                  ).set_function(lambda: len(self.latencies))
+        reg.gauge("simnet_epoch_switches",
+                  "Hit-less epoch switches scheduled by the control loop."
+                  ).set_function(lambda: self.epoch_switches)
+        if self.cfg.metrics_path:
+            self._ts_writer = TimeSeriesWriter(self.cfg.metrics_path, reg)
+
+    def _emit_metrics(self, step_idx: int, fill) -> None:
+        if self.metrics is None:
+            return
+        new = self.latencies[self._lat_emitted:]
+        if new:
+            self._lat_hist.observe_many(new)
+            self._lat_emitted = len(self.latencies)
+        self._windows.inc()
+        self._fill_mean.set(float(np.mean(fill)))
+        self._fill_max.set(float(np.max(fill)))
+        if (self._ts_writer is not None
+                and (step_idx + 1) % self.cfg.metrics_every == 0):
+            self._ts_writer.write(step=step_idx,
+                                  t_sim=round(self.clock.now(), 9))
 
     # -- controld mode: the CP is a *service* the CNs talk to ------------------
     def _lease_s(self) -> float:
@@ -520,6 +579,7 @@ class Simulator:
             self.queue_fill_trace.append(
                 (self.clock.now(), [round(float(f), 4) for f in fill]))
             self._purge_vanished(step_idx)
+            self._emit_metrics(step_idx, fill)
             return
 
         self._purge_vanished(step_idx)
@@ -538,6 +598,7 @@ class Simulator:
                             for m, w in cp.weights.items()}))
         self.queue_fill_trace.append(
             (self.clock.now(), [round(float(f), 4) for f in fill]))
+        self._emit_metrics(step_idx, fill)
 
     def _purge_vanished(self, step_idx: int) -> None:
         """Bundles that lost every segment before any reassembler saw them
@@ -610,6 +671,8 @@ class Simulator:
         for i in range(self.cfg.steps):
             self.step(i)
         wall = time.perf_counter() - t_wall
+        if self._ts_writer is not None:
+            self._ts_writer.close()
 
         pending = sum(ra.n_incomplete for ra in self.reassemblers.values())
         timed_out = sum(ra.stats.n_timed_out_groups

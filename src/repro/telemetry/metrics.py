@@ -15,6 +15,19 @@ from typing import Callable
 
 from repro.core.control_plane import MemberTelemetry
 
+# The production metrics surface (Prometheus registry) lives next door in
+# telemetry.registry; re-export it here so `telemetry.metrics` is the single
+# import point for both the per-member hub and the service-level registry.
+from repro.telemetry.registry import (  # noqa: F401  (re-exports)
+    LATENCY_BUCKETS_S,
+    SIZE_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    log_buckets,
+)
+
 
 @dataclasses.dataclass
 class _MemberStats:

@@ -11,12 +11,10 @@ the *states* even when params are TP-only.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.compression import dequantize_int8, quantize_int8
+from repro.distributed.compression import quantize_int8
 
 F32 = jnp.float32
 

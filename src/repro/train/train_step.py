@@ -17,13 +17,12 @@ of every compiled multi-pod graph.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core.dataplane import DataPlane
 from repro.core.tables import DeviceTables

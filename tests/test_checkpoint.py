@@ -1,5 +1,4 @@
 import os
-import threading
 
 import jax
 import jax.numpy as jnp

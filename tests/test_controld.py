@@ -695,7 +695,7 @@ class TestSendStateBatch:
         host, port = server.start()
         try:
             good = ControldClient(SocketClient(host, port))
-            token = good.reserve()["token"]
+            good.reserve()
             bad = SocketClient(host, port)
             original = d.handle
             d.handle = lambda msg, now=None: (_ for _ in ()).throw(

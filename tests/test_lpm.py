@@ -1,4 +1,3 @@
-import pytest
 from repro.testing.hypo import given, st
 
 from repro.core import lpm
@@ -55,7 +54,8 @@ class TestLPMTable:
         # [0,100)->e2, [100,300)->e1, [300,2^64)->e2
         assert segs == [(0, "e2"), (100, "e1"), (300, "e2")]
 
-    @given(st.integers(0, 5000), st.integers(1, 5000), st.lists(st.integers(0, 10_000), max_size=20))
+    @given(st.integers(0, 5000), st.integers(1, 5000),
+           st.lists(st.integers(0, 10_000), max_size=20))
     def test_boundaries_equiv_lookup(self, lo, span, probes):
         t = lpm.LPMTable()
         t.set_wildcard("new")

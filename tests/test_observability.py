@@ -1,0 +1,381 @@
+"""Observability stack: registry math, Prometheus text, /metrics over a
+real socket, time-series JSONL, and the bench-trend gate + dashboard."""
+import json
+import math
+import os
+import subprocess
+import sys
+import urllib.request
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import trend  # noqa: E402
+from repro.controld import ControlDaemon, ControldClient, InProcTransport  # noqa: E402
+from repro.telemetry.export import (CONTENT_TYPE, TimeSeriesWriter,  # noqa: E402
+                                    start_http_server)
+from repro.telemetry.registry import (LATENCY_BUCKETS_S,  # noqa: E402
+                                      MetricsRegistry, log_buckets)
+
+
+class TestRegistry:
+    def test_counter_and_labels(self):
+        reg = MetricsRegistry()
+        c = reg.counter("events_total", "events")
+        c.inc()
+        c.inc(3)
+        assert c.value() == 4
+        fam = reg.counter("by_kind_total", labelnames=("kind",))
+        fam.labels(kind="a").inc()
+        fam.labels(kind="a").inc()
+        fam.labels(kind="b").inc(5)
+        assert fam.labels(kind="a").value() == 2
+        assert fam.labels(kind="b").value() == 5
+
+    def test_get_or_create_idempotent_and_collisions(self):
+        reg = MetricsRegistry()
+        a = reg.counter("x_total")
+        assert reg.counter("x_total") is a
+        try:
+            reg.gauge("x_total")
+            assert False, "kind collision must raise"
+        except ValueError:
+            pass
+        try:
+            reg.counter("x_total", labelnames=("k",))
+            assert False, "labelnames collision must raise"
+        except ValueError:
+            pass
+
+    def test_labeled_family_rejects_bare_inc(self):
+        reg = MetricsRegistry()
+        fam = reg.counter("y_total", labelnames=("k",))
+        try:
+            fam.inc()
+            assert False, "bare inc on a labeled family must raise"
+        except ValueError:
+            pass
+
+    def test_callback_gauge_and_exception_nan(self):
+        reg = MetricsRegistry()
+        reg.gauge("live").set_function(lambda: 7.5)
+        boom = reg.gauge("boom")
+        boom.set_function(lambda: 1 / 0)
+        assert reg.gauge("live").value() == 7.5
+        assert math.isnan(reg.gauge("boom").value())  # scrape never crashes
+        assert "boom NaN" in reg.render()
+
+    def test_remove_labeled_child(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("occ", labelnames=("token",))
+        g.labels(token="t1").set(4)
+        assert 'occ{token="t1"} 4' in reg.render()
+        g.remove(token="t1")
+        assert 'occ{token="t1"}' not in reg.render()
+
+
+class TestHistogram:
+    def test_bucket_edges_inclusive(self):
+        # Prometheus le is inclusive: a sample AT an edge lands in that
+        # bucket (bisect_left), not the next one up
+        reg = MetricsRegistry()
+        h = reg.histogram("lat", buckets=(1.0, 2.0, 4.0))
+        h.observe(2.0)
+        counts, total, count = h._bound().value()
+        assert counts == (0, 1, 0, 0)
+        assert count == 1 and total == 2.0
+        h.observe(5.0)  # past the last edge -> the +Inf slot
+        counts, _, _ = h._bound().value()
+        assert counts == (0, 1, 0, 1)
+
+    def test_observe_many_equals_loop(self):
+        vals = np.abs(np.random.default_rng(7).normal(1e-3, 2e-3, 500))
+        reg = MetricsRegistry()
+        one = reg.histogram("one", buckets=LATENCY_BUCKETS_S)
+        many = reg.histogram("many", buckets=LATENCY_BUCKETS_S)
+        for v in vals:
+            one.observe(float(v))
+        many.observe_many(vals)
+        c1, s1, n1 = one._bound().value()
+        c2, s2, n2 = many._bound().value()
+        assert c1 == c2 and n1 == n2
+        assert abs(s1 - s2) < 1e-9
+
+    def test_latency_layout(self):
+        assert LATENCY_BUCKETS_S[0] == 1e-6
+        assert abs(LATENCY_BUCKETS_S[-1] - 10.0) < 1e-9
+        assert len(LATENCY_BUCKETS_S) == 29  # 7 decades * 4 + 1
+        assert log_buckets(1.0, 100.0, per_decade=1) == (1.0, 10.0, 100.0)
+
+
+class TestRender:
+    def test_prometheus_text_golden(self):
+        reg = MetricsRegistry()
+        c = reg.counter("req_total", "requests", labelnames=("kind",))
+        c.labels(kind="get").inc(3)
+        c.labels(kind="put").inc()
+        reg.gauge("temp", "temperature").set(1.5)
+        h = reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+        h.observe(0.05)
+        h.observe(0.5)
+        h.observe(2.0)
+        assert reg.render() == (
+            "# HELP lat_seconds latency\n"
+            "# TYPE lat_seconds histogram\n"
+            'lat_seconds_bucket{le="0.1"} 1\n'
+            'lat_seconds_bucket{le="1"} 2\n'
+            'lat_seconds_bucket{le="+Inf"} 3\n'
+            "lat_seconds_sum 2.55\n"
+            "lat_seconds_count 3\n"
+            "# HELP req_total requests\n"
+            "# TYPE req_total counter\n"
+            'req_total{kind="get"} 3\n'
+            'req_total{kind="put"} 1\n'
+            "# HELP temp temperature\n"
+            "# TYPE temp gauge\n"
+            "temp 1.5\n")
+
+    def test_label_escaping(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("g", labelnames=("p",))
+        g.labels(p='a"b\\c\nd').set(1)
+        assert r'g{p="a\"b\\c\nd"} 1' in reg.render()
+
+    def test_sample_flattens(self):
+        reg = MetricsRegistry()
+        reg.counter("c_total").inc(2)
+        h = reg.histogram("h_seconds", buckets=(1.0,))
+        h.observe(0.5)
+        s = reg.sample()
+        assert s == {"c_total": 2, "h_seconds_count": 1, "h_seconds_sum": 0.5}
+
+
+class TestDaemonMetrics:
+    def _driven_daemon(self):
+        reg = MetricsRegistry()
+        daemon = ControlDaemon(n_instances=1, lease_s=1e9, metrics=reg)
+        client = ControldClient(InProcTransport(daemon))
+        token = client.reserve(policy="pid")["token"]
+        for m in range(3):
+            client.register(token, member_id=m, node_id=m, lane_bits=1)
+        client.tick(current_event=0)
+        client.send_state_batch(token, [0, 1, 2], [0.9, 0.3, 0.3])
+        return reg, daemon, client, token
+
+    def test_counters_and_session_gauges(self):
+        reg, daemon, client, token = self._driven_daemon()
+        page = reg.render()
+        assert 'controld_messages_total{kind="reserve"} 1' in page
+        assert 'controld_messages_total{kind="register"} 3' in page
+        assert 'controld_messages_total{kind="send_state_batch"} 1' in page
+        assert "controld_heartbeats_total 3" in page
+        assert f'controld_session_members{{token="{token}"}} 3' in page
+        assert f'controld_session_mean_fill{{token="{token}"}} 0.5' in page
+        assert "controld_sessions_active 1" in page
+        assert 'controld_handle_seconds_count{kind="send_state_batch"} 1' \
+            in page
+
+    def test_reject_counted_and_free_drops_gauges(self):
+        reg, daemon, client, token = self._driven_daemon()
+        from repro.controld import messages as M
+        reply = client.transport.call(
+            M.SendState(token="bogus", member_id=0, fill=0.5))
+        assert not reply.ok
+        page = reg.render()
+        assert 'controld_rejects_total{kind="send_state"} 1' in page
+        client.free(token)
+        page = reg.render()
+        assert f'token="{token}"' not in page
+        assert "controld_sessions_active 0" in page
+
+    def test_replay_restores_gauges_without_counting(self):
+        from repro.controld import Journal
+        reg = MetricsRegistry()
+        daemon = ControlDaemon(n_instances=1, lease_s=1e9, journal=Journal())
+        client = ControldClient(InProcTransport(daemon))
+        token = client.reserve(policy="pid")["token"]
+        for m in range(2):
+            client.register(token, member_id=m, node_id=m, lane_bits=1)
+        client.send_state_batch(token, [0, 1], [0.4, 0.6])
+        recovered = ControlDaemon.recover(daemon.journal, n_instances=1,
+                                          lease_s=1e9, metrics=reg)
+        assert recovered.state_digest() == daemon.state_digest()
+        page = reg.render()
+        # replayed traffic must NOT inflate counters...
+        assert 'controld_messages_total{kind="reserve"} 0' in page
+        assert "controld_heartbeats_total 0" in page
+        # ...but recovered sessions keep their live occupancy gauges
+        assert f'controld_session_members{{token="{token}"}} 2' in page
+
+
+class TestMetricsEndpoint:
+    def test_http_server_serves_render(self):
+        reg = MetricsRegistry()
+        reg.counter("hits_total").inc(7)
+        server, port = start_http_server(reg, port=0)
+        try:
+            with urllib.request.urlopen(
+                    f"http://127.0.0.1:{port}/metrics", timeout=5) as r:
+                body = r.read().decode()
+                assert r.headers["Content-Type"] == CONTENT_TYPE
+            assert body == reg.render()
+            req = urllib.request.Request(f"http://127.0.0.1:{port}/nope")
+            try:
+                urllib.request.urlopen(req, timeout=5)
+                assert False, "want 404"
+            except urllib.error.HTTPError as e:
+                assert e.code == 404
+        finally:
+            server.shutdown()
+
+    def test_run_controld_serve_exposes_daemon_metrics(self, tmp_path):
+        """The acceptance path: spawn ``run_controld --serve --metrics-port
+        0``, drive real socket traffic, scrape /metrics over HTTP."""
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+        proc = subprocess.Popen(
+            [sys.executable, os.path.join(root, "scripts", "run_controld.py"),
+             "--serve", "--port", "0", "--metrics-port", "0",
+             "--journal", str(tmp_path / "journal.jsonl")],
+            stdout=subprocess.PIPE, text=True, env=env)
+        try:
+            line1 = proc.stdout.readline()   # "controld serving on h:p ..."
+            line2 = proc.stdout.readline()   # "metrics on http://h:mp/metrics"
+            port = int(line1.split(" on ", 1)[1].split()[0].split(":")[1])
+            url = line2.split(" on ", 1)[1].strip()
+
+            from repro.controld import ControldClient, SocketClient
+            client = ControldClient(SocketClient("127.0.0.1", port))
+            token = client.reserve(policy="pid")["token"]
+            for m in range(4):
+                client.register(token, member_id=m, node_id=m, lane_bits=1)
+            client.tick(current_event=0)
+            client.send_state_batch(token, [0, 1, 2, 3], [0.5, 0.2, 0.2, 0.2])
+            page = urllib.request.urlopen(url, timeout=10).read().decode()
+            client.close()
+
+            assert 'controld_messages_total{kind="send_state_batch"} 1' in page
+            assert "controld_heartbeats_total 4" in page
+            assert f'controld_session_members{{token="{token}"}} 4' in page
+            assert "controld_socket_frames_total" in page
+            assert "controld_handle_seconds_bucket" in page
+            assert "controld_heartbeat_batch_size_bucket" in page
+        finally:
+            proc.terminate()
+            proc.wait(timeout=10)
+
+
+class TestTimeSeries:
+    def test_writer_rows(self, tmp_path):
+        reg = MetricsRegistry()
+        c = reg.counter("n_total")
+        path = tmp_path / "ts.jsonl"
+        with TimeSeriesWriter(str(path), reg) as w:
+            c.inc()
+            w.write(step=0)
+            c.inc(2)
+            w.write(step=1, t_sim=1.5)
+        rows = [json.loads(x) for x in path.read_text().splitlines()]
+        assert rows[0] == {"step": 0, "metrics": {"n_total": 1}}
+        assert rows[1] == {"step": 1, "t_sim": 1.5, "metrics": {"n_total": 3}}
+
+    def test_simnet_emits_metrics(self, tmp_path):
+        from repro.simnet import Simulator, get_scenario
+        path = tmp_path / "sim.jsonl"
+        scenario = get_scenario("baseline")
+        cfg = scenario.build_config(steps=10, seed=0, metrics_every=2,
+                                    metrics_path=str(path))
+        report = Simulator(cfg, scenario).run()
+        assert report.engine == "host"  # metrics emission forces host
+        rows = [json.loads(x) for x in path.read_text().splitlines()]
+        assert len(rows) == 5
+        last = rows[-1]["metrics"]
+        assert last["simnet_windows_total"] == 10
+        assert last["simnet_packets_sent"] > 0
+        assert last["simnet_e2e_latency_seconds_count"] > 0
+        assert rows[0]["t_sim"] < rows[-1]["t_sim"]
+
+
+class TestTrendGate:
+    def _write_bench(self, d, value):
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, "BENCH_demo.json"), "w") as f:
+            json.dump({"bench": "demo", "unix_time": 0,
+                       "metrics": {"rate": value}, "params": {}}, f)
+
+    def _baseline(self, d, value=100.0):
+        path = os.path.join(d, "baselines.json")
+        with open(path, "w") as f:
+            json.dump({"demo": {"rate": {"value": value,
+                                         "better": "higher"}}}, f)
+        return path
+
+    def test_regression_fails_with_delta_and_machine_line(self, tmp_path,
+                                                          capsys):
+        cur = str(tmp_path / "cur")
+        self._write_bench(cur, 50.0)
+        base = self._baseline(str(tmp_path))
+        rc = trend.main([cur, "--check", base])
+        out = capsys.readouterr()
+        assert rc == 1
+        assert "-50.0% past the floor" in out.err
+        assert "TREND-CHECK: FAIL n=1 metrics=demo.rate" in out.out
+
+    def test_ok_path_machine_line(self, tmp_path, capsys):
+        cur = str(tmp_path / "cur")
+        self._write_bench(cur, 120.0)
+        base = self._baseline(str(tmp_path))
+        rc = trend.main([cur, "--check", base])
+        out = capsys.readouterr()
+        assert rc == 0
+        assert "TREND-CHECK: OK" in out.out
+
+    def test_missing_bench_and_zero_floor_fail(self, tmp_path):
+        cur = str(tmp_path / "cur")
+        self._write_bench(cur, 100.0)
+        base = os.path.join(str(tmp_path), "baselines.json")
+        with open(base, "w") as f:
+            json.dump({"demo": {"rate": {"value": 0.0, "better": "higher"}},
+                       "ghost": {"x": {"value": 1, "better": "higher"}}}, f)
+        failures = trend.check_against_baseline(trend.load_dir(cur), base, 0.2)
+        assert any("baseline value is 0" in x for x in failures)
+        assert any("no BENCH_ghost.json" in x for x in failures)
+
+    def test_history_append_prune_and_failure_trail(self, tmp_path, capsys):
+        cur = str(tmp_path / "cur")
+        hist = str(tmp_path / "hist")
+        for i, v in enumerate([100.0, 90.0, 40.0]):
+            self._write_bench(cur, v)
+            trend.append_history(cur, hist, sha=f"sha{i:04d}aaaa",
+                                 date=f"2026010{i + 1}T000000Z", keep=2)
+        entries = trend.load_history(hist)
+        assert len(entries) == 2  # pruned to keep=2
+        assert trend.metric_series(entries, "demo", "rate") == [
+            (entries[0]["stamp"], 90.0), (entries[1]["stamp"], 40.0)]
+        base = self._baseline(str(tmp_path))
+        rc = trend.main([cur, "--check", base, "--history", hist])
+        out = capsys.readouterr()
+        assert rc == 1
+        assert "history(2 runs):" in out.err
+        assert "90.00 @sha0001" in out.err
+
+    def test_html_dashboard(self, tmp_path, capsys):
+        cur = str(tmp_path / "cur")
+        hist = str(tmp_path / "hist")
+        for i, v in enumerate([110.0, 60.0]):
+            self._write_bench(cur, v)
+            trend.append_history(cur, hist, sha=f"deadbeef{i:04d}",
+                                 date=f"2026010{i + 1}T000000Z")
+        base = self._baseline(str(tmp_path))
+        out_html = str(tmp_path / "dash.html")
+        rc = trend.main([cur, "--history", hist, "--check", base,
+                         "--html", out_html])
+        assert rc == 1  # 60 < 100 floor: the gate still fails...
+        doc = open(out_html).read()          # ...but the dashboard rendered
+        assert doc.count("<svg") == 1        # one metric -> one chart
+        assert doc.count("<circle") == 2     # one point per history run
+        assert "var(--critical)" in doc      # regressed last point flagged
+        assert "stroke-dasharray" in doc     # the baseline floor line
+        assert "deadbeef0000: 110.00" in doc  # <title> hover tooltips
+        assert "prefers-color-scheme: dark" in doc

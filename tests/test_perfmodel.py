@@ -3,7 +3,6 @@ import pytest
 from repro.analysis import perfmodel as PM
 from repro.analysis.hlo import collective_stats
 from repro.configs import get_config
-from repro.launch import shapes as SH
 
 
 class TestPerfModel:

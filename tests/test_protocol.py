@@ -1,5 +1,4 @@
 import numpy as np
-import pytest
 from repro.testing.hypo import given, st
 
 from repro.core import protocol as P

@@ -2,7 +2,6 @@
 single-packet property, paper §I-B.3), RSS lanes, dispatch accounting,
 virtual-instance isolation."""
 import numpy as np
-import pytest
 from repro.testing.hypo import given, settings, st
 
 from repro.core import (EpochManager, MemberSpec, dispatch, member_positions,

@@ -1,6 +1,5 @@
 """Segmentation & reassembly under reorder/loss/duplication (paper §II-C)."""
 import numpy as np
-import pytest
 from repro.testing.hypo import given, settings, st
 
 from repro.data.daq import DAQConfig, DAQFleet, EventBundle

@@ -6,7 +6,6 @@ training)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import EpochManager, MemberSpec

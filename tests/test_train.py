@@ -1,11 +1,8 @@
 """Trainer: loss goes down, checkpoint/restart bit-exact resume, failure
 handling recalendars, 8-bit Adam + grad compression behave."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.calendar import calendar_counts
