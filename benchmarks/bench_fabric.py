@@ -1,0 +1,84 @@
+"""Table: two-tier LB fabric — spray throughput vs tier size + the
+isolation and balance gates as numbers.
+
+Three figures:
+
+* ``fabric_k{2,4,8}`` — aggregate simulated packets/sec through the full
+  two-hop plant (uplink -> intermediate LB -> fabric hop -> owner calendar
+  -> downlink -> farm) as the tier widens. The fabric is embarrassingly
+  array-parallel, so pkt/s should hold roughly flat with K.
+* ``isolation_ratio`` — mice p99 with isolation OFF over ON on the
+  ``elephant_mice`` scenario. **CI gate: > 1 (isolation must help), floor
+  committed in baselines.json.**
+* ``vlb_balance_gain`` — direct-hash max-LB load share over VLB's on the
+  skewed ``vlb_spray`` scenario. **CI gate: >= 1 (spray must not lose).**
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit_json, row
+from repro.fabric import FabricSim, get_fabric_scenario
+
+
+def _tier_throughput(k: int) -> float:
+    sc = get_fabric_scenario("vlb_spray")
+    cfg = sc.build_config(steps=20, k_lbs=k)
+    sim = FabricSim(cfg, scenario=sc)
+    t0 = time.perf_counter()
+    r = sim.run()
+    dt = time.perf_counter() - t0
+    assert not r.violations, r.violations
+    return r.segments_sent / dt
+
+
+def run():
+    _tier_throughput(2)   # warm the routing jit caches off the clock
+    pps = {}
+    for k in (2, 4, 8):
+        pps[k] = _tier_throughput(k)
+        row(f"fabric_k{k}", 1e6 / pps[k],
+            f"{pps[k]:,.0f} simulated pkt/s through a {k}-LB tier")
+
+    sc = get_fabric_scenario("elephant_mice")
+    on = FabricSim(sc.build_config(isolate=True), scenario=sc).run()
+    off = FabricSim(sc.build_config(isolate=False), scenario=sc).run()
+    assert not on.violations and not off.violations
+    iso_ratio = off.mice_p99_s / on.mice_p99_s
+    row("fabric_isolation", on.mice_p99_s * 1e6,
+        f"mice p99 {on.mice_p99_s * 1e3:.3f}ms isolated vs "
+        f"{off.mice_p99_s * 1e3:.3f}ms shared ({iso_ratio:.2f}x, want > 1)")
+
+    sc = get_fabric_scenario("vlb_spray")
+    vlb = FabricSim(sc.build_config(mode="vlb"), scenario=sc).run()
+    direct = FabricSim(sc.build_config(mode="direct"), scenario=sc).run()
+    assert not vlb.violations and not direct.violations
+    balance_gain = direct.max_lb_load_frac / vlb.max_lb_load_frac
+    row("fabric_vlb_balance", vlb.max_lb_load_frac * 1e6,
+        f"max-LB load share {vlb.max_lb_load_frac:.3f} VLB vs "
+        f"{direct.max_lb_load_frac:.3f} direct ({balance_gain:.2f}x)")
+
+    metrics = {
+        "k2_pkts_per_s": pps[2],
+        "k4_pkts_per_s": pps[4],
+        "k8_pkts_per_s": pps[8],
+        "isolation_ratio_off_over_on": iso_ratio,
+        "mice_p99_isolated_s": on.mice_p99_s,
+        "mice_p99_shared_s": off.mice_p99_s,
+        "vlb_balance_gain": balance_gain,
+        "vlb_max_lb_load_frac": vlb.max_lb_load_frac,
+        "direct_max_lb_load_frac": direct.max_lb_load_frac,
+    }
+    emit_json("fabric", metrics=metrics, params={
+        "tier_sizes": [2, 4, 8],
+        "throughput_scenario": "vlb_spray (20 steps)",
+        "isolation_scenario": "elephant_mice",
+        "balance_scenario": "vlb_spray",
+    })
+    return metrics
+
+
+if __name__ == "__main__":
+    m = run()
+    print(f"isolation ratio: {m['isolation_ratio_off_over_on']:.2f}x, "
+          f"VLB balance gain: {m['vlb_balance_gain']:.2f}x")

@@ -1,7 +1,13 @@
 """Render EXPERIMENTS.md tables from dry-run artifacts.
 
     PYTHONPATH=src python scripts/make_tables.py artifacts/dryrun > /tmp/tables.md
+
+``--tournament`` renders ranked policy-tournament tables instead, from the
+JSON summaries ``run_simnet.py --tournament ... --json`` writes:
+
+    PYTHONPATH=src python scripts/make_tables.py --tournament t1.json t2.json
 """
+import json
 import sys
 
 sys.path.insert(0, "src")
@@ -67,5 +73,38 @@ def main(art_dir):
                   f"{r.hw_utilization:.3f} | {speed} |")
 
 
+def tournament_tables(paths):
+    """Ranked-p99 tables from run_simnet.py --tournament JSON summaries."""
+    if not paths:
+        print("usage: make_tables.py --tournament summary.json [...]",
+              file=sys.stderr)
+        return 2
+    for path in paths:
+        with open(path) as f:
+            summary = json.load(f)
+        t = summary.get("tournament")
+        if not t:
+            print(f"{path}: no 'tournament' block "
+                  f"(run run_simnet.py --tournament ... --json)",
+                  file=sys.stderr)
+            return 1
+        print(f"### Policy tournament — scenario `{t['scenario']}` "
+              f"({t['steps']} steps, seed {t['seed']})\n")
+        print("| rank | policy | p50 (ms) | p99 (ms) | vs best (ms) "
+              "| timeouts | queue drops |")
+        print("|---|---|---|---|---|---|---|")
+        for leg in t["ranked"]:
+            print(f"| {leg['rank']} | {leg['policy']} "
+                  f"| {leg['latency_p50_s'] * 1e3:.3f} "
+                  f"| {leg['latency_p99_s'] * 1e3:.3f} "
+                  f"| +{leg['p99_vs_best_s'] * 1e3:.3f} "
+                  f"| {leg['bundles_timed_out']} "
+                  f"| {leg['packets_dropped_queue']} |")
+        print()
+    return 0
+
+
 if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "--tournament":
+        sys.exit(tournament_tables(sys.argv[2:]))
     main(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")

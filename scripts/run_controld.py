@@ -53,6 +53,11 @@ def parse_args(argv=None):
     ap.add_argument("--compact-every", type=int, default=0,
                     help="roll the WAL into a snapshot every N entries "
                          "(0 = never; requires --snapshot-dir)")
+    ap.add_argument("--quota-msgs-per-s", type=float, default=None,
+                    help="per-reservation message-rate quota (token bucket; "
+                         "over-quota member messages are rejected)")
+    ap.add_argument("--quota-burst", type=float, default=None,
+                    help="quota bucket depth (default: max(16, 2*rate))")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="with --serve: expose Prometheus text on "
                          "http://HOST:PORT/metrics (0 = ephemeral, the "
@@ -64,6 +69,8 @@ def parse_args(argv=None):
 def serve(args) -> int:
     recovered = 0
     metrics = None
+    quota = dict(quota_msgs_per_s=args.quota_msgs_per_s,
+                 quota_burst=args.quota_burst)
     if args.metrics_port is not None:
         from repro.telemetry.registry import MetricsRegistry
         metrics = MetricsRegistry()
@@ -78,7 +85,7 @@ def serve(args) -> int:
         recovered = history.seq + 1
         daemon = ControlDaemon.recover(
             history, n_instances=args.n_instances, lease_s=args.lease_s,
-            metrics=metrics,
+            metrics=metrics, **quota,
             live_journal=Journal.resume(args.journal, history.seq,
                                         snapshot_dir=snap_dir,
                                         compact_every=compact))
@@ -92,7 +99,7 @@ def serve(args) -> int:
         daemon = ControlDaemon.recover(journal,
                                        n_instances=args.n_instances,
                                        lease_s=args.lease_s,
-                                       metrics=metrics)
+                                       metrics=metrics, **quota)
     else:
         # no --journal: run journal-less — an in-memory journal dies with
         # the process anyway and would grow by one entry per heartbeat
@@ -100,7 +107,7 @@ def serve(args) -> int:
                            compact_every=compact) if args.journal else None)
         daemon = ControlDaemon(n_instances=args.n_instances,
                                lease_s=args.lease_s, journal=journal,
-                               metrics=metrics)
+                               metrics=metrics, **quota)
     server = SocketServer(daemon, host=args.host, port=args.port,
                           metrics=metrics)
     host, port = server.start()

@@ -54,6 +54,11 @@ def parse_args(argv=None):
     ap.add_argument("--compare-policy", action="store_true",
                     help="run the scenario under the PID and proportional "
                          "controld policies; fail if PID p99 is worse")
+    ap.add_argument("--tournament", default=None, metavar="P1,P2,...",
+                    help="run one controld leg per named policy (aliases: "
+                         "prop; the pseudo-policy 'frozen' disables "
+                         "feedback) and rank the legs by p99; render the "
+                         "table with make_tables.py --tournament")
     ap.add_argument("--traces", action="store_true",
                     help="include full queue/weight traces in the JSON")
     ap.add_argument("--metrics-interval", type=int, default=0,
@@ -78,7 +83,8 @@ def build_and_run(args, frozen: bool, policy: str | None = None,
     if args.triggers_per_step is not None:
         extra["triggers_per_step"] = args.triggers_per_step
     policy = policy if policy is not None else args.policy
-    if args.controld or args.compare_policy or policy is not None:
+    if (args.controld or args.compare_policy or args.tournament
+            or policy is not None):
         extra["controld"] = True
     if policy is not None:
         extra["controld_policy"] = policy
@@ -150,6 +156,56 @@ def main(argv=None) -> int:
                 f"PID policy lost to proportional on p99 "
                 f"(pid={pid.latency_p99_s:.6f}s "
                 f"prop={prop.latency_p99_s:.6f}s)")
+
+    if args.tournament:
+        aliases = {"prop": "proportional"}
+        names = [aliases.get(n.strip(), n.strip())
+                 for n in args.tournament.split(",") if n.strip()]
+        names = list(dict.fromkeys(names))   # dedupe, keep rank-input order
+        if len(names) < 2:
+            violations.append(
+                f"--tournament needs at least two policies, got {names}")
+        from repro.controld import POLICIES
+        legal = set(POLICIES) | {"frozen"}
+        unknown = [n for n in names if n not in legal]
+        if unknown:
+            violations.append(
+                f"unknown tournament policies {unknown}; have {sorted(legal)}")
+            names = [n for n in names if n in legal]
+        legs = []
+        primary_policy = ("frozen" if args.frozen_weights
+                          else (args.policy or "proportional"))
+        for name in names:
+            # the primary report already IS this leg when its config
+            # matches (deterministic seed): never run the same sim twice
+            if name == primary_policy:
+                legs.append((name, report))
+            elif name == "frozen":
+                legs.append((name, build_and_run(args, frozen=True,
+                                                 with_metrics=False)))
+            else:
+                legs.append((name, build_and_run(args, frozen=False,
+                                                 policy=name,
+                                                 with_metrics=False)))
+        ranked = sorted(legs, key=lambda kv: kv[1].latency_p99_s)
+        best = ranked[0][1].latency_p99_s if ranked else 0.0
+        summary["tournament"] = {
+            "scenario": args.scenario,
+            "steps": args.steps,
+            "seed": args.seed,
+            "ranked": [
+                {"rank": i + 1, "policy": name,
+                 "latency_p50_s": round(leg.latency_p50_s, 9),
+                 "latency_p99_s": round(leg.latency_p99_s, 9),
+                 "p99_vs_best_s": round(leg.latency_p99_s - best, 9),
+                 "bundles_timed_out": leg.bundles_timed_out,
+                 "packets_dropped_queue": leg.packets_dropped_queue}
+                for i, (name, leg) in enumerate(ranked)],
+        }
+        for name, leg in legs:
+            if leg is not report:
+                violations.extend(
+                    f"{name} tournament leg: {v}" for v in leg.violations)
 
     summary["violations"] = violations
     print(json.dumps(summary, indent=2))

@@ -13,8 +13,9 @@ from repro.controld.daemon import (ControlDaemon, MemberLanes, Session,
                                    SessionError)
 from repro.controld.journal import Entry, Journal
 from repro.controld.messages import (MESSAGE_TYPES, MUTATING_KINDS,
-                                     Deregister, Free, MessageError, Register,
-                                     Reply, Reserve, SendState,
+                                     Deregister, DeregisterBatch, Free,
+                                     MessageError, Register, RegisterBatch,
+                                     Reply, Reserve, ReserveFabric, SendState,
                                      SendStateBatch, Status, Tick)
 from repro.controld.policy import (POLICIES, PIDFillPolicy, PolicyConfig,
                                    ProportionalPolicy, WeightPolicy,
@@ -27,7 +28,8 @@ __all__ = [
     "ControlDaemon", "MemberLanes", "Session", "SessionError",
     "Entry", "Journal",
     "MESSAGE_TYPES", "MUTATING_KINDS", "MessageError",
-    "Reserve", "Free", "Register", "Deregister", "SendState",
+    "Reserve", "ReserveFabric", "Free", "Register", "RegisterBatch",
+    "Deregister", "DeregisterBatch", "SendState",
     "SendStateBatch", "Tick", "Status", "Reply",
     "POLICIES", "PolicyConfig", "WeightPolicy", "ProportionalPolicy",
     "PIDFillPolicy", "make_policy",

@@ -131,10 +131,14 @@ class Session:
     pending: dict[int, tuple[MemberSpec, float]] = dataclasses.field(
         default_factory=dict)  # registered before the session started
     started: bool = False
+    fabric: str = ""          # ReserveFabric grouping ("" = standalone)
+    # per-reservation message-rate quota (token bucket; tokens < 0 = off)
+    quota_tokens: float = -1.0
+    quota_t: float = 0.0
     counters: dict[str, int] = dataclasses.field(
         default_factory=lambda: {"heartbeats": 0, "epoch_switches": 0,
                                  "leases_expired": 0, "registered": 0,
-                                 "deregistered": 0})
+                                 "deregistered": 0, "quota_rejected": 0})
 
 
 class _DaemonMetrics:
@@ -170,6 +174,9 @@ class _DaemonMetrics:
             "Members per SendStateBatch window.", buckets=SIZE_BUCKETS)
         self.leases_reaped = registry.counter(
             "controld_leases_reaped_total", "Leases expired at a Tick.")
+        self.quota_rejects = registry.counter(
+            "controld_quota_rejects",
+            "Messages rejected by a reservation's rate quota.")
         self.epoch_switches = registry.counter(
             "controld_epoch_switches_total",
             "Hit-less epoch switches scheduled by policy feedback.")
@@ -212,28 +219,49 @@ class ControlDaemon:
                  max_members: int = 64,
                  journal: Optional[Journal] = None,
                  policy_engine: str = "np",
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 quota_msgs_per_s: Optional[float] = None,
+                 quota_burst: Optional[float] = None):
         self.n_instances = n_instances
         self.clock = clock
         self.lease_s = float(lease_s)
         self.epoch_horizon = int(epoch_horizon)
         self.max_members = int(max_members)
         self.journal = journal
+        # per-reservation message-rate quota (None = unlimited): a token
+        # bucket refilled at quota_msgs_per_s, capped at quota_burst. One
+        # noisy tenant exhausts its own bucket, not the daemon — over-quota
+        # member-lifecycle/heartbeat messages are protocol rejections.
+        # Batch messages cost ONE token: batching is the sanctioned way to
+        # say more under the same quota.
+        self.quota_msgs_per_s = (None if quota_msgs_per_s is None
+                                 else float(quota_msgs_per_s))
+        self.quota_burst = (max(16.0, 2.0 * self.quota_msgs_per_s)
+                            if quota_burst is None
+                            and self.quota_msgs_per_s is not None
+                            else None if quota_burst is None
+                            else float(quota_burst))
         # engine for the fused per-Tick policy update ("np" = bit-identical
         # to the scalar path; "jnp" = one device call per update). Recover a
         # journal with the SAME engine it was written under — replay runs
         # the same arithmetic, so digests only match engine-to-engine.
         self.policy_engine = policy_engine
         self.sessions: dict[str, Session] = {}
+        #: fabric groupings from ReserveFabric: id -> {"tokens", "k",
+        #: "reserved_fraction"} — the lane-partition contract of record
+        self.fabrics: dict[str, dict] = {}
         self._free_instances: list[int] = list(range(n_instances))
         self._token_counter = 0
+        self._fabric_counter = 0
         self._replaying = False
         self._handlers = {
             M.Reserve.KIND: self._reserve,
             M.Free.KIND: self._free,
+            M.ReserveFabric.KIND: self._reserve_fabric,
             M.Register.KIND: self._register,
             M.RegisterBatch.KIND: self._register_batch,
             M.Deregister.KIND: self._deregister,
+            M.DeregisterBatch.KIND: self._deregister_batch,
             M.SendState.KIND: self._send_state,
             M.SendStateBatch.KIND: self._send_state_batch,
             M.Tick.KIND: self._tick,
@@ -294,7 +322,50 @@ class ControlDaemon:
         mid = int(member_id)
         return mid if 0 <= mid < self.max_members else None
 
+    # -- per-reservation message-rate quota -----------------------------------
+    def _charge_quota(self, s: Session, now: float) -> None:
+        """Token-bucket admission for one token-scoped message. Refill is
+        computed from journaled ``now`` instants, so quota state (and every
+        over-quota rejection) replays deterministically from the WAL."""
+        if self.quota_msgs_per_s is None:
+            return
+        if s.quota_tokens < 0:  # session created before quotas were enabled
+            s.quota_tokens, s.quota_t = self.quota_burst, now
+        elapsed = max(now - s.quota_t, 0.0)
+        s.quota_tokens = min(self.quota_burst,
+                             s.quota_tokens + elapsed * self.quota_msgs_per_s)
+        s.quota_t = now
+        if s.quota_tokens < 1.0:
+            s.counters["quota_rejected"] += 1
+            if self._mx is not None and not self._replaying:
+                self._mx.quota_rejects.inc()
+            raise SessionError(
+                f"reservation {s.token} over its message-rate quota "
+                f"({self.quota_msgs_per_s:g} msg/s) — back off, or batch")
+        s.quota_tokens -= 1.0
+
     # -- reservation lifecycle ------------------------------------------------
+    def _new_session(self, inst: int, policy, now: float,
+                     fabric: str = "") -> Session:
+        """One reservation's state on an already-claimed instance."""
+        token = f"r{self._token_counter:06d}"
+        self._token_counter += 1
+        manager = EpochManager(max_members=self.max_members)
+        cp = LoadBalancerControlPlane(
+            manager, ControlPolicy(epoch_horizon=self.epoch_horizon),
+            reweighter=policy)
+        cp.array_engine = self.policy_engine
+        s = self.sessions[token] = Session(
+            token=token, instance=inst, policy_name=policy.name,
+            manager=manager, cp=cp, lanes=MemberLanes(self.max_members),
+            fabric=fabric)
+        if self.quota_msgs_per_s is not None:
+            s.quota_tokens, s.quota_t = self.quota_burst, now
+        if self._mx is not None:
+            # runs during replay too: recovered sessions keep their gauges
+            self._mx.watch_session(s)
+        return s
+
     def _reserve(self, msg: M.Reserve, now: float) -> dict:
         if not self._free_instances:
             raise SessionError(
@@ -312,26 +383,62 @@ class ControlDaemon:
         except ValueError as e:
             insort(self._free_instances, inst)
             raise SessionError(str(e)) from None
-        token = f"r{self._token_counter:06d}"
-        self._token_counter += 1
-        manager = EpochManager(max_members=self.max_members)
-        cp = LoadBalancerControlPlane(
-            manager, ControlPolicy(epoch_horizon=self.epoch_horizon),
-            reweighter=policy)
-        cp.array_engine = self.policy_engine
-        s = self.sessions[token] = Session(
-            token=token, instance=inst, policy_name=policy.name,
-            manager=manager, cp=cp, lanes=MemberLanes(self.max_members))
-        if self._mx is not None:
-            # runs during replay too: recovered sessions keep their gauges
-            self._mx.watch_session(s)
-        return {"token": token, "instance": inst, "policy": policy.name,
+        s = self._new_session(inst, policy, now)
+        return {"token": s.token, "instance": inst, "policy": policy.name,
                 "lease_s": self.lease_s}
+
+    def _reserve_fabric(self, msg: M.ReserveFabric, now: float) -> dict:
+        """Atomically reserve a tier of ``k`` LBs, each as a (spray,
+        reserved) session pair — the per-instance lane partition. All
+        validation happens before any instance is claimed, so a rejection
+        leaves the free pool untouched (and replays to the same rejection)."""
+        if isinstance(msg.k, bool) or not isinstance(msg.k, int) or msg.k < 1:
+            raise SessionError(f"fabric size k={msg.k!r} must be an int >= 1")
+        try:
+            frac = float(msg.reserved_fraction)
+        except (TypeError, ValueError):
+            raise SessionError(
+                f"reserved_fraction {msg.reserved_fraction!r} is not a "
+                "number") from None
+        if not (0.0 < frac < 1.0):
+            raise SessionError(
+                f"reserved_fraction must be in (0, 1), got {frac!r}")
+        if len(self._free_instances) < 2 * msg.k:
+            raise SessionError(
+                f"fabric needs {2 * msg.k} free instances "
+                f"(k={msg.k} x spray+reserved), have "
+                f"{len(self._free_instances)}")
+        try:
+            make_policy(msg.policy, msg.policy_params)  # validate only
+        except ValueError as e:
+            raise SessionError(str(e)) from None
+        fabric_id = f"f{self._fabric_counter:06d}"
+        self._fabric_counter += 1
+        sessions, tokens = [], []
+        for lb in range(msg.k):
+            pair = {}
+            for klass in ("spray", "reserved"):
+                inst = self._free_instances.pop(0)
+                # one fresh (stateful) policy per session
+                policy = make_policy(msg.policy, msg.policy_params)
+                s = self._new_session(inst, policy, now, fabric=fabric_id)
+                pair[klass] = s.token
+                tokens.append(s.token)
+            sessions.append({"lb": lb, **pair})
+        self.fabrics[fabric_id] = {"tokens": tokens, "k": msg.k,
+                                   "reserved_fraction": frac}
+        return {"fabric": fabric_id, "k": msg.k, "reserved_fraction": frac,
+                "lease_s": self.lease_s, "sessions": sessions}
 
     def _free(self, msg: M.Free, now: float) -> dict:
         s = self._session(msg.token)
         del self.sessions[msg.token]
         insort(self._free_instances, s.instance)
+        if s.fabric and s.fabric in self.fabrics:
+            fab = self.fabrics[s.fabric]
+            fab["tokens"] = [t for t in fab["tokens"] if t != msg.token]
+            if not fab["tokens"]:
+                del self.fabrics[s.fabric]
         if self._mx is not None:
             self._mx.drop_session(msg.token)
         return {"instance": s.instance, "counters": dict(s.counters)}
@@ -379,6 +486,7 @@ class ControlDaemon:
 
     def _register(self, msg: M.Register, now: float) -> dict:
         s = self._session(msg.token)
+        self._charge_quota(s, now)
         mid, spec, weight = self._validate_member(
             msg.member_id, msg.node_id, msg.base_lane, msg.lane_bits,
             msg.weight)
@@ -392,6 +500,7 @@ class ControlDaemon:
         failures are per-member (in the reply's ``rejected`` map) instead of
         per-message; duplicates of an id resolve last-spec-wins."""
         s = self._session(msg.token)
+        self._charge_quota(s, now)
         try:
             cols = [list(msg.member_ids), list(msg.node_ids),
                     list(msg.base_lanes), list(msg.lane_bits),
@@ -417,6 +526,7 @@ class ControlDaemon:
 
     def _deregister(self, msg: M.Deregister, now: float) -> dict:
         s = self._session(msg.token)
+        self._charge_quota(s, now)
         mid = self._member_index(msg.member_id)
         if mid is None or not s.lanes.leased[mid]:
             raise SessionError(f"member {msg.member_id} is not registered")
@@ -430,8 +540,43 @@ class ControlDaemon:
             s.pending.pop(msg.member_id, None)
         return {"member_id": msg.member_id}
 
+    def _deregister_batch(self, msg: M.DeregisterBatch, now: float) -> dict:
+        """One teardown wave in one journal entry — the mirror of
+        ``_register_batch``. Per-member semantics are exactly N
+        ``Deregister`` messages at this instant (same revoke, same counters,
+        same hit-less ``mark_failed`` drain), except unregistered members
+        are per-member rejections in the reply; a duplicated id deregisters
+        once and rejects the rest (it is no longer leased by then)."""
+        s = self._session(msg.token)
+        self._charge_quota(s, now)
+        try:
+            raw = list(msg.member_ids)
+        except TypeError:
+            raise SessionError("member_ids must be an array") from None
+        accepted, rejected = [], {}
+        for member_id in raw:
+            mid = self._member_index(member_id)
+            if mid is None or not s.lanes.leased[mid]:
+                rejected[str(member_id)] = (
+                    f"member {member_id!r} is not registered")
+                continue
+            s.lanes.revoke([mid])
+            s.counters["deregistered"] += 1
+            accepted.append(mid)
+        if accepted:
+            if s.started:
+                # one call, but mark_failed drains per member — digest-
+                # identical to N scalar Deregisters at this instant
+                s.cp.mark_failed(accepted)
+            else:
+                for mid in accepted:
+                    s.pending.pop(mid, None)
+        return {"n_accepted": len(accepted), "member_ids": accepted,
+                "rejected": rejected}
+
     def _send_state(self, msg: M.SendState, now: float) -> dict:
         s = self._session(msg.token)
+        self._charge_quota(s, now)
         mid = self._member_index(msg.member_id)
         if mid is None or not s.lanes.leased[mid]:
             raise SessionError(
@@ -465,6 +610,7 @@ class ControlDaemon:
         ``SendState`` messages at this instant, except rejections are
         per-member (in the reply) instead of per-message."""
         s = self._session(msg.token)
+        self._charge_quota(s, now)
         try:
             # every id through the same _member_index validation SendState
             # uses: a float/bool/string/huge-int id is a per-member
@@ -585,6 +731,7 @@ class ControlDaemon:
                 "instance": s.instance,
                 "policy": s.policy_name,
                 "started": s.started,
+                "fabric": s.fabric,
                 "current_epoch": s.manager.current_epoch,
                 "members": {
                     str(m): {"lease_remaining": round(exp - now, 9),
@@ -593,6 +740,8 @@ class ControlDaemon:
                 "counters": dict(s.counters),
             }
         return {"sessions": sessions,
+                "fabrics": {fid: dict(fab)
+                            for fid, fab in sorted(self.fabrics.items())},
                 "free_instances": list(self._free_instances),
                 "journal_seq": self.journal.seq if self.journal else -1}
 
@@ -655,6 +804,11 @@ class ControlDaemon:
             h.update(json.dumps(obj, sort_keys=True, default=repr).encode())
 
         put({"token_counter": self._token_counter,
+             "fabric_counter": self._fabric_counter,
+             "fabrics": {fid: {"tokens": list(fab["tokens"]),
+                               "k": fab["k"],
+                               "reserved_fraction": fab["reserved_fraction"]}
+                         for fid, fab in sorted(self.fabrics.items())},
              "free_instances": list(self._free_instances),
              "lease_s": self.lease_s})
         for token in sorted(self.sessions):
@@ -662,6 +816,8 @@ class ControlDaemon:
             leases = s.lanes.lease_view()
             put({"token": token, "instance": s.instance,
                  "policy": s.policy_name, "started": s.started,
+                 "fabric": s.fabric,
+                 "quota": [s.quota_tokens, s.quota_t],
                  "leases": {str(k): leases[k] for k in sorted(leases)},
                  "telemetry": {str(k): v for k, v in
                                sorted(s.lanes.telemetry_view().items())},

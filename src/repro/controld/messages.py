@@ -14,10 +14,17 @@ Messages:
 * ``Reserve`` / ``Free``       — multi-tenant reservation of one virtual LB
   instance (the paper's 4 instances per device, §I-C); ``Reserve`` returns a
   token that scopes every member call to that instance.
+* ``ReserveFabric``           — atomically reserve a *tier* of LB instances
+  as one fabric: ``k`` LBs, each with a spray session and a reserved-lane
+  session (the per-instance lane partition elephant flows are isolated
+  onto — DESIGN.md §Fabric). One frame, one journal entry; all-or-nothing.
 * ``Register`` / ``Deregister`` — member (CN) lifecycle inside a reservation.
 * ``RegisterBatch``            — one bring-up wave of registrations in a
   single frame (parallel arrays), one journal entry; per-member validation
   failures are rejected individually in the reply.
+* ``DeregisterBatch``          — the mirror teardown wave: one frame, one
+  journal entry, per-member rejections in the reply. Fabric teardown of K
+  instances' members is K*2 frames, not thousands of messages.
 * ``SendState``               — the heartbeat: carries the MemberTelemetry
   fields (fill / rate / healthy) and renews the member's lease.
 * ``SendStateBatch``          — one *window* of heartbeats for many members
@@ -67,6 +74,25 @@ class Free:
 
 
 @dataclasses.dataclass(frozen=True)
+class ReserveFabric:
+    """Reserve ``2*k`` virtual LB instances as one two-tier fabric: for each
+    of the ``k`` tier members, a *spray* session (the VLB lanes mice traffic
+    is obliviously sprayed across) and a *reserved* session (the calendar
+    lanes detected elephant flows are strict-source-routed onto).
+    All-or-nothing: if fewer than ``2*k`` instances are free the whole
+    reservation is rejected. ``reserved_fraction`` records the fabric's
+    lane-partition contract (what share of the farm the reserved calendars
+    are programmed over) — surfaced in ``Status`` so operators and the
+    simulator agree on the partition."""
+
+    KIND = "reserve_fabric"
+    k: int = 2
+    policy: str = "proportional"
+    policy_params: dict = dataclasses.field(default_factory=dict)
+    reserved_fraction: float = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
 class Register:
     """Add a member (CN) to a reservation. Grants a lease that heartbeats
     renew; re-registering after a lapsed lease is the recovery path."""
@@ -107,6 +133,20 @@ class Deregister:
     KIND = "deregister"
     token: str = ""
     member_id: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class DeregisterBatch:
+    """One teardown wave of many members in a single frame — the mirror of
+    ``RegisterBatch``: one journal entry, per-member semantics exactly
+    ``Deregister`` at a shared instant. Members that are not registered are
+    *individually* rejected in the reply's ``rejected`` map while the rest
+    drain hit-lessly; duplicates of a member id resolve to one deregister
+    plus a rejection for the rest."""
+
+    KIND = "deregister_batch"
+    token: str = ""
+    member_ids: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -172,8 +212,9 @@ class Reply:
 
 MESSAGE_TYPES = {
     cls.KIND: cls
-    for cls in (Reserve, Free, Register, RegisterBatch, Deregister,
-                SendState, SendStateBatch, Tick, Status)
+    for cls in (Reserve, Free, ReserveFabric, Register, RegisterBatch,
+                Deregister, DeregisterBatch, SendState, SendStateBatch,
+                Tick, Status)
 }
 #: kinds that mutate daemon state and therefore must be journaled
 MUTATING_KINDS = frozenset(

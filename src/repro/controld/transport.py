@@ -332,6 +332,17 @@ class ControldClient:
                                     policy_params=policy_params or {},
                                     instance_hint=instance_hint))
 
+    def reserve_fabric(self, k: int = 2, policy: str = "proportional",
+                       policy_params: dict | None = None,
+                       reserved_fraction: float = 0.25) -> dict:
+        """Atomically reserve a two-tier fabric: ``k`` LBs, each a (spray,
+        reserved) session pair. Returns the daemon's ``{"fabric", "k",
+        "reserved_fraction", "lease_s", "sessions": [{"lb", "spray",
+        "reserved"}, ...]}``."""
+        return self._call(M.ReserveFabric(
+            k=k, policy=policy, policy_params=policy_params or {},
+            reserved_fraction=reserved_fraction))
+
     def free(self, token: str) -> dict:
         return self._call(M.Free(token=token))
 
@@ -373,6 +384,17 @@ class ControldClient:
 
     def deregister(self, token: str, member_id: int) -> dict:
         return self._call(M.Deregister(token=token, member_id=member_id))
+
+    def deregister_batch(self, token: str, member_ids) -> dict:
+        """One teardown wave in one frame — the mirror of
+        ``register_batch``. Returns the daemon's ``{"n_accepted",
+        "member_ids", "rejected"}`` — unregistered members live in
+        ``rejected``, they do not raise: the rest of the wave drains."""
+        # np integers -> python ints for JSON; anything non-integral passes
+        # through untouched so the daemon rejects it per-member
+        ids = [int(m) if isinstance(m, (int, np.integer))
+               and not isinstance(m, bool) else m for m in member_ids]
+        return self._call(M.DeregisterBatch(token=token, member_ids=ids))
 
     def send_state(self, token: str, member_id: int, fill: float,
                    rate: float = 1.0, healthy: bool = True) -> dict:

@@ -1025,3 +1025,221 @@ class TestServeEngineDelegation:
         assert sess.counters["heartbeats"] > 0
         # the engine's manager/cp ARE the session's (one control plane)
         assert eng.manager is sess.manager
+
+
+class TestDeregisterBatch:
+    """DeregisterBatch drains a wave of members in one frame / one WAL
+    entry, with per-member rejections — digest-identical to N scalar
+    Deregisters at the same instant."""
+
+    def _daemon(self, **kw):
+        clk = _ManualClock()
+        kw.setdefault("n_instances", 1)
+        kw.setdefault("lease_s", 10.0)
+        d = ControlDaemon(clock=kw.pop("clock", clk), **kw)
+        d._test_clock = clk
+        return d
+
+    def test_batch_digest_equals_n_scalar_deregisters(self):
+        daemons = [self._daemon(), self._daemon()]
+        clients = [_client(d) for d in daemons]
+        toks = []
+        for c in clients:
+            tok = c.reserve(policy="pid")["token"]
+            c.register_batch(tok, range(6), lane_bits=1)
+            c.tick(current_event=0)
+            toks.append(tok)
+        clients[0].deregister_batch(toks[0], [1, 3, 4])
+        for m in (1, 3, 4):
+            clients[1].deregister(toks[1], member_id=m)
+        for c in clients:
+            c.tick(current_event=600)
+        assert daemons[0].state_digest() == daemons[1].state_digest()
+
+    def test_per_member_rejection(self):
+        d = self._daemon()
+        c = _client(d)
+        tok = c.reserve()["token"]
+        c.register_batch(tok, range(4), lane_bits=1)
+        c.tick(current_event=0)
+        r = c.deregister_batch(tok, [0, 1, 1, 99, "x", 3])
+        assert r["n_accepted"] == 3
+        assert r["member_ids"] == [0, 1, 3]     # the duplicate 1 rejects
+        assert set(r["rejected"]) == {"1", "99", "x"}
+        s = next(iter(d.sessions.values()))
+        assert s.counters["deregistered"] == 3
+        assert sorted(s.cp.members) == [2]
+        assert sorted(s.lanes.lease_ids()) == [2]
+
+    def test_one_journal_entry_and_replay(self):
+        j = Journal()
+        d = self._daemon(journal=j)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        c.register_batch(tok, range(6), lane_bits=1)
+        c.tick(current_event=0)
+        c.deregister_batch(tok, [0, 2, 4])
+        kinds = [e.kind for e in j.entries]
+        assert kinds.count("deregister_batch") == 1
+        assert "deregister" not in kinds
+        rec = ControlDaemon.recover(j, n_instances=1, lease_s=10.0)
+        assert rec.state_digest() == d.state_digest()
+
+    def test_pending_members_drain_before_start(self):
+        d = self._daemon()
+        c = _client(d)
+        tok = c.reserve()["token"]
+        c.register_batch(tok, range(4), lane_bits=1)
+        # no tick yet: members are pending, not started
+        r = c.deregister_batch(tok, [0, 1])
+        assert r["n_accepted"] == 2
+        c.tick(current_event=0)
+        s = next(iter(d.sessions.values()))
+        assert sorted(s.cp.members) == [2, 3]
+
+
+class TestQuotas:
+    """Per-reservation message-rate quotas: a token bucket refilled on the
+    daemon clock; over-quota member messages are protocol rejections that
+    replay identically from the WAL."""
+
+    def _daemon(self, **kw):
+        clk = _ManualClock()
+        kw.setdefault("n_instances", 1)
+        kw.setdefault("lease_s", 100.0)
+        d = ControlDaemon(clock=kw.pop("clock", clk), **kw)
+        d._test_clock = clk
+        return d
+
+    def test_over_quota_rejected_and_counted(self):
+        d = self._daemon(quota_msgs_per_s=5.0, quota_burst=4.0)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        ok = rejected = 0
+        for m in range(10):
+            try:
+                c.register(tok, member_id=m, node_id=m, lane_bits=1)
+                ok += 1
+            except ControldError as e:
+                assert "quota" in str(e)
+                rejected += 1
+        assert ok == 4 and rejected == 6          # burst-bounded
+        s = next(iter(d.sessions.values()))
+        assert s.counters["quota_rejected"] == 6
+        assert s.counters["registered"] == 4
+
+    def test_bucket_refills_on_daemon_clock(self):
+        d = self._daemon(quota_msgs_per_s=2.0, quota_burst=2.0)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        c.register(tok, member_id=0, node_id=0, lane_bits=1)
+        c.register(tok, member_id=1, node_id=1, lane_bits=1)
+        with pytest.raises(ControldError, match="quota"):
+            c.register(tok, member_id=2, node_id=2, lane_bits=1)
+        d._test_clock.t += 1.0                    # refills 2 tokens
+        c.register(tok, member_id=2, node_id=2, lane_bits=1)
+        c.register(tok, member_id=3, node_id=3, lane_bits=1)
+        with pytest.raises(ControldError, match="quota"):
+            c.register(tok, member_id=4, node_id=4, lane_bits=1)
+
+    def test_batch_costs_one_token(self):
+        d = self._daemon(quota_msgs_per_s=1.0, quota_burst=2.0)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        # one SendStateBatch of any width costs ONE token — batching is
+        # exactly how a tenant stays inside its quota
+        c.register_batch(tok, range(8), lane_bits=1)
+        c.tick(current_event=0)
+        c.send_state_batch(tok, range(8), [0.4] * 8)
+        with pytest.raises(ControldError, match="quota"):
+            c.send_state(tok, 0, fill=0.4)
+
+    def test_quota_rejections_replay_digest_identical(self):
+        j = Journal()
+        d = self._daemon(quota_msgs_per_s=3.0, quota_burst=3.0, journal=j)
+        c = _client(d)
+        tok = c.reserve()["token"]
+        for m in range(6):
+            try:
+                c.register(tok, member_id=m, node_id=m, lane_bits=1)
+            except ControldError:
+                pass
+        d._test_clock.t += 0.5
+        try:
+            c.register(tok, member_id=6, node_id=6, lane_bits=1)
+        except ControldError:
+            pass
+        c.tick(current_event=0)
+        rec = ControlDaemon.recover(j, n_instances=1, lease_s=100.0,
+                                    quota_msgs_per_s=3.0, quota_burst=3.0)
+        assert rec.state_digest() == d.state_digest()
+        s = next(iter(rec.sessions.values()))
+        assert s.counters["quota_rejected"] == 3
+
+    def test_no_quota_by_default(self):
+        d = self._daemon()
+        c = _client(d)
+        tok = c.reserve()["token"]
+        for m in range(64):
+            c.register(tok, member_id=m, node_id=m, lane_bits=1)
+        s = next(iter(d.sessions.values()))
+        assert s.counters["quota_rejected"] == 0
+
+
+class TestReserveFabric:
+    """ReserveFabric claims 2K instances as K (spray, reserved) session
+    pairs under one fabric id; Free unwinds membership."""
+
+    def _daemon(self, **kw):
+        clk = _ManualClock()
+        kw.setdefault("n_instances", 8)
+        kw.setdefault("lease_s", 10.0)
+        d = ControlDaemon(clock=kw.pop("clock", clk), **kw)
+        d._test_clock = clk
+        return d
+
+    def test_reserve_shape_and_instance_pairing(self):
+        d = self._daemon()
+        c = _client(d)
+        r = c.reserve_fabric(k=3, reserved_fraction=0.5)
+        assert r["k"] == 3 and len(r["sessions"]) == 3
+        for lb, sess in enumerate(r["sessions"]):
+            assert sess["lb"] == lb
+            # instances pop in (lb, class) order: instance_id = lb*2 + class
+            assert d.sessions[sess["spray"]].instance == 2 * lb
+            assert d.sessions[sess["reserved"]].instance == 2 * lb + 1
+        fid = r["fabric"]
+        assert set(d.fabrics[fid]["tokens"]) == {
+            s[t] for s in r["sessions"] for t in ("spray", "reserved")}
+
+    def test_insufficient_instances_rejected_atomically(self):
+        d = self._daemon(n_instances=4)
+        c = _client(d)
+        with pytest.raises(ControldError, match="instances"):
+            c.reserve_fabric(k=3)
+        assert not d.sessions and not d.fabrics   # nothing claimed
+
+    def test_free_unwinds_fabric(self):
+        d = self._daemon()
+        c = _client(d)
+        r = c.reserve_fabric(k=2)
+        fid = r["fabric"]
+        for sess in r["sessions"]:
+            c.free(sess["spray"])
+            c.free(sess["reserved"])
+        assert fid not in d.fabrics
+        assert len(d._free_instances) == 8
+
+    def test_replay_digest_identical(self):
+        j = Journal()
+        d = self._daemon(journal=j)
+        c = _client(d)
+        r = c.reserve_fabric(k=2, policy="pid", reserved_fraction=0.25)
+        for sess in r["sessions"]:
+            c.register_batch(sess["spray"], range(4), lane_bits=1)
+            c.register_batch(sess["reserved"], [4, 5], lane_bits=1)
+        c.tick(current_event=0)
+        c.free(r["sessions"][0]["spray"])
+        rec = ControlDaemon.recover(j, n_instances=8, lease_s=10.0)
+        assert rec.state_digest() == d.state_digest()
+        assert rec.fabrics.keys() == d.fabrics.keys()
