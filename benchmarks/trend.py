@@ -333,9 +333,68 @@ def _svg_chart(series: list[tuple[str, float]], baseline: float | None,
     return "".join(parts), last_bad
 
 
+#: critical-path stage order for the trace panel (mirrors traceview.PATH_STAGES
+#: without importing repro — trend.py must run from a bare artifacts checkout)
+_TRACE_STAGES = ("uplink", "wan", "lb", "fabric", "downlink",
+                 "farm_wait", "service", "reassembly")
+
+
+def render_trace_panel(summary: dict) -> str:
+    """Per-stage latency waterfall cards from a trace summary JSON
+    (``run_simnet.py --trace-summary-json`` / ``analyze_trace.py
+    --summary-json``): one card per exported percentile, horizontal bars
+    sized by the stage's share of the percentile bundle's E2E, the
+    dominant stage direct-labeled. Feeds ``--html`` via
+    ``--trace-summary``."""
+    breakdown = summary.get("breakdown", summary)
+    pcts = breakdown.get("percentiles", {})
+    if not pcts:
+        return ""
+    cards = []
+    bar_w, bar_h, lab_w = 210, 13, 78
+    for pname, d in sorted(pcts.items(),
+                           key=lambda kv: float(kv[0].lstrip("p"))):
+        stages = d.get("stages", {})
+        e2e = float(d.get("e2e_s", 0.0)) or 1.0
+        rows = [(s, float(stages[s])) for s in _TRACE_STAGES if s in stages]
+        rows += sorted((s, float(v)) for s, v in stages.items()
+                       if s not in _TRACE_STAGES)
+        h = bar_h * len(rows) + 16
+        parts = [f'<svg viewBox="0 0 {lab_w + bar_w + 52} {h}" '
+                 f'width="{lab_w + bar_w + 52}" height="{h}" role="img">']
+        for i, (s, dur) in enumerate(rows):
+            y0 = i * bar_h + 2
+            frac = max(min(dur / e2e, 1.0), 0.0)
+            color = ("var(--critical)" if s == d.get("dominant")
+                     else "var(--series-1)")
+            parts.append(f'<text x="{lab_w - 4}" y="{y0 + 9}" '
+                         f'text-anchor="end">{html.escape(s)}</text>')
+            parts.append(f'<rect x="{lab_w}" y="{y0}" '
+                         f'width="{max(frac * bar_w, 1):.1f}" height="10" '
+                         f'fill="{color}" rx="1">'
+                         f'<title>{html.escape(s)}: {dur * 1e3:.4f}ms '
+                         f'({frac * 100:.1f}% of e2e)</title></rect>')
+            parts.append(f'<text x="{lab_w + max(frac * bar_w, 1) + 4:.1f}" '
+                         f'y="{y0 + 9}">{dur * 1e3:.3f}ms</text>')
+        parts.append("</svg>")
+        tid = d.get("trace_id", "")
+        cards.append(
+            f'<div class="card"><p class="name">{html.escape(pname)} '
+            f'stage waterfall · bundle {html.escape(str(tid))}</p>'
+            f'<p class="val">{e2e * 1e3:,.3f}ms e2e · dominant '
+            f'{html.escape(str(d.get("dominant", "?")))}</p>'
+            f'{"".join(parts)}</div>')
+    meta = (f"{summary.get('windows', '?')} windows · "
+            f"{breakdown.get('n_spans', summary.get('n_spans', '?'))} spans · "
+            f"{breakdown.get('n_completions', '?')} completed bundles")
+    return (f"<h2>trace: per-stage critical path</h2>"
+            f'<p class="sub">{html.escape(meta)}</p>'
+            f'<div class="grid">{"".join(cards)}</div>')
+
+
 def render_html(cur: dict[str, dict], history: list[dict],
                 baseline_path: str | None, threshold: float,
-                cur_stamp: str = "current") -> str:
+                cur_stamp: str = "current", extra_html: str = "") -> str:
     """The dashboard: one small-multiple card per bench metric, history
     series against the committed floor. ``cur`` is appended as the newest
     point when it is not already the history's tail."""
@@ -398,6 +457,7 @@ def render_html(cur: dict[str, dict], history: list[dict],
         f"{threshold * 100:.0f}% · {html.escape(status)} · dashed line = "
         "committed baseline floor</p>"
         f'{"".join(sections)}'
+        f"{extra_html}"
         "</body></html>\n")
 
 
@@ -427,6 +487,10 @@ def main(argv=None) -> int:
                     help="history runs to keep when appending")
     ap.add_argument("--html", default=None, metavar="OUT",
                     help="render the static dashboard here")
+    ap.add_argument("--trace-summary", default=None, metavar="JSON",
+                    help="trace summary JSON (run_simnet.py "
+                         "--trace-summary-json) rendered as a per-stage "
+                         "p50/p99 waterfall panel in the --html dashboard")
     args = ap.parse_args(argv)
 
     cur = load_dir(args.cur_dir)
@@ -461,7 +525,16 @@ def main(argv=None) -> int:
         print(f"{b:<{w0}}  {m:<{w1}}  {v:>{w2}}  {d}")
 
     if args.html:
-        doc = render_html(cur, history, args.check, args.threshold)
+        trace_html = ""
+        if args.trace_summary:
+            try:
+                with open(args.trace_summary) as f:
+                    trace_html = render_trace_panel(json.load(f))
+            except (OSError, json.JSONDecodeError) as e:
+                print(f"warning: skipping --trace-summary "
+                      f"{args.trace_summary}: {e}", file=sys.stderr)
+        doc = render_html(cur, history, args.check, args.threshold,
+                          extra_html=trace_html)
         with open(args.html, "w") as f:
             f.write(doc)
         print(f"dashboard -> {args.html} "

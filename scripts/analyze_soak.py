@@ -1,0 +1,156 @@
+"""Soak-trend analyzer: slope-gate long-horizon state growth.
+
+Reads the metrics time-series JSONL a soak run emits
+(``run_simnet.py --metrics-interval N --metrics-jsonl PATH``) and fits a
+trend to each state-growth series:
+
+* ``process_rss_bytes``        — resident memory must not creep: the
+  second-half mean may exceed the first-half mean by at most
+  ``--rss-growth-frac`` (default 35%, generous for allocator warmup).
+* ``simnet_bundles_pending``   — reassembly/pending state must stay
+  bounded: the least-squares slope must be <= ``--pending-slope``
+  bundles/window (default 0.01 — flat).
+* ``simnet_epoch_switches``    — calendar churn must stay rate-bounded:
+  the control loop schedules at most one switch per window per instance,
+  so the end-to-end switch rate must be <= ``--churn-rate``/window.
+
+Any violated bound FAILS the run (exit 1) — this is the nightly soak's
+hard gate, not a dashboard. ``--json`` writes the full trend report.
+
+    PYTHONPATH=src python scripts/analyze_soak.py soak-out/baseline_metrics.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("jsonl", nargs="+", help="metrics JSONL file(s)")
+    ap.add_argument("--rss-growth-frac", type=float, default=0.35,
+                    help="max fractional RSS growth, 2nd-half mean vs 1st")
+    ap.add_argument("--pending-slope", type=float, default=0.01,
+                    help="max pending-bundles slope (bundles per window)")
+    ap.add_argument("--churn-rate", type=float, default=None,
+                    help="max epoch switches per window (default: "
+                         "n_instances read from the rows, else 1.0)")
+    ap.add_argument("--min-rows", type=int, default=8,
+                    help="fewer sampled rows than this is itself a failure")
+    ap.add_argument("--json", default=None, help="write the trend report")
+    return ap.parse_args(argv)
+
+
+def _series(rows, name):
+    """(step, value) arrays for one metric, skipping rows without it."""
+    pts = [(r["step"], r["metrics"][name]) for r in rows
+           if name in r.get("metrics", {})]
+    if not pts:
+        return None, None
+    s, v = zip(*pts)
+    return np.asarray(s, np.float64), np.asarray(v, np.float64)
+
+
+def _slope(steps, vals):
+    """Least-squares dv/dstep (value units per window)."""
+    if len(steps) < 2 or steps[-1] == steps[0]:
+        return 0.0
+    return float(np.polyfit(steps, vals, 1)[0])
+
+
+def analyze(rows, args) -> dict:
+    report: dict = {"rows": len(rows), "series": {}, "violations": []}
+    if len(rows) < args.min_rows:
+        report["violations"].append(
+            f"only {len(rows)} sampled rows (< {args.min_rows}) — the soak "
+            "did not run long enough to trend")
+        return report
+
+    def record(name, steps, vals, **extra):
+        report["series"][name] = dict(
+            n=len(vals), first=float(vals[0]), last=float(vals[-1]),
+            mean=float(vals.mean()), max=float(vals.max()),
+            slope_per_window=_slope(steps, vals), **extra)
+
+    # -- memory: halves comparison (robust to sawtooth GC noise) -----------
+    steps, rss = _series(rows, "process_rss_bytes")
+    if rss is None:
+        report["violations"].append("process_rss_bytes missing from rows")
+    else:
+        half = len(rss) // 2
+        first, second = rss[:half].mean(), rss[half:].mean()
+        growth = (second - first) / first if first > 0 else 0.0
+        record("process_rss_bytes", steps, rss, growth_frac=float(growth))
+        if growth > args.rss_growth_frac:
+            report["violations"].append(
+                f"RSS grew {growth * 100:.1f}% between run halves "
+                f"(bound {args.rss_growth_frac * 100:.1f}%) — "
+                f"{first / 1e6:.1f}MB -> {second / 1e6:.1f}MB")
+
+    # -- pending state: slope must be flat ---------------------------------
+    steps, pend = _series(rows, "simnet_bundles_pending")
+    if pend is None:
+        report["violations"].append(
+            "simnet_bundles_pending missing from rows")
+    else:
+        sl = _slope(steps, pend)
+        record("simnet_bundles_pending", steps, pend)
+        if sl > args.pending_slope:
+            report["violations"].append(
+                f"pending-bundle state grows {sl:.4f}/window "
+                f"(bound {args.pending_slope:.4f}) — reassembly or emit "
+                "bookkeeping is leaking")
+
+    # -- calendar churn: switches per window must stay rate-bounded --------
+    steps, sw = _series(rows, "simnet_epoch_switches")
+    if sw is None:
+        report["violations"].append("simnet_epoch_switches missing from rows")
+    else:
+        span = float(steps[-1] - steps[0]) if len(steps) > 1 else 1.0
+        rate = float(sw[-1] - sw[0]) / span if span > 0 else 0.0
+        bound = args.churn_rate if args.churn_rate is not None else 1.0
+        record("simnet_epoch_switches", steps, sw,
+               rate_per_window=rate, bound=bound)
+        if rate > bound:
+            report["violations"].append(
+                f"calendar churn {rate:.3f} switches/window exceeds "
+                f"{bound:.3f} — the control loop is thrashing epochs")
+    return report
+
+
+def main(argv=None) -> int:
+    args = parse_args(argv)
+    failures = []
+    out = {"files": {}}
+    for path in args.jsonl:
+        with open(path) as f:
+            rows = [json.loads(line) for line in f if line.strip()]
+        rep = analyze(rows, args)
+        out["files"][path] = rep
+        print(f"== {path}: {rep['rows']} rows")
+        for name, s in rep["series"].items():
+            extra = ""
+            if "growth_frac" in s:
+                extra = f"  growth={s['growth_frac'] * 100:+.1f}%"
+            if "rate_per_window" in s:
+                extra = f"  rate={s['rate_per_window']:.3f}/window"
+            print(f"  {name:<28} first={s['first']:.6g} last={s['last']:.6g} "
+                  f"slope={s['slope_per_window']:+.4g}/window{extra}")
+        for v in rep["violations"]:
+            print(f"  VIOLATION: {v}")
+        failures.extend(f"{path}: {v}" for v in rep["violations"])
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+    if failures:
+        print("FAILED: " + "; ".join(failures), file=sys.stderr)
+        return 1
+    print("soak trends OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

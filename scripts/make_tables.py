@@ -6,6 +6,12 @@
 JSON summaries ``run_simnet.py --tournament ... --json`` writes:
 
     PYTHONPATH=src python scripts/make_tables.py --tournament t1.json t2.json
+
+``--bench`` renders a benchmark-artifacts directory (the ``BENCH_*.json``
+files ``python -m benchmarks.run`` emits) as one markdown table per bench,
+flagged against the committed floors:
+
+    PYTHONPATH=src python scripts/make_tables.py --bench bench-out
 """
 import json
 import sys
@@ -104,7 +110,44 @@ def tournament_tables(paths):
     return 0
 
 
+def bench_tables(argv):
+    """Markdown tables from BENCH_*.json artifacts, floors alongside."""
+    if not argv:
+        print("usage: make_tables.py --bench bench-dir [baselines.json]",
+              file=sys.stderr)
+        return 2
+    bench_dir = argv[0]
+    baseline_path = (argv[1] if len(argv) > 1
+                     else "benchmarks/baselines/baselines.json")
+    sys.path.insert(0, ".")
+    from benchmarks.trend import fmt, load_dir
+    cur = load_dir(bench_dir)
+    if not cur:
+        print(f"no BENCH_*.json under {bench_dir}", file=sys.stderr)
+        return 1
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except OSError:
+        baseline = {}
+    for bench, rec in sorted(cur.items()):
+        print(f"### Bench `{bench}`\n")
+        print("| metric | value | committed floor | direction |")
+        print("|---|---|---|---|")
+        for metric, value in sorted(rec.get("metrics", {}).items()):
+            if not isinstance(value, (int, float)) or isinstance(value, bool):
+                continue
+            spec = baseline.get(bench, {}).get(metric)
+            floor = fmt(float(spec["value"])) if spec else "-"
+            direction = spec.get("better", "higher") if spec else "-"
+            print(f"| {metric} | {fmt(value)} | {floor} | {direction} |")
+        print()
+    return 0
+
+
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "--tournament":
         sys.exit(tournament_tables(sys.argv[2:]))
+    if len(sys.argv) > 1 and sys.argv[1] == "--bench":
+        sys.exit(bench_tables(sys.argv[2:]))
     main(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun")

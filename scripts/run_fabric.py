@@ -39,6 +39,11 @@ def parse_args(argv=None):
     ap.add_argument("--metrics-registry", action="store_true",
                     help="attach a live MetricsRegistry (fabric_lb_load / "
                          "fabric_elephants gauges) and dump it at the end")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="trace the primary leg of each scenario and write "
+                         "Chrome trace-event / Perfetto JSON (multiple "
+                         "scenarios get a .<scenario> suffix before the "
+                         "extension)")
     ap.add_argument("--json", default=None, help="write the summary here")
     return ap.parse_args(argv)
 
@@ -53,13 +58,29 @@ def _build(sc, args, **extra):
     return sc.build_config(**extra)
 
 
-def run_scenario(name: str, args, metrics=None) -> dict:
+def _export_trace(sim, name: str, path: str, many: bool) -> None:
+    """Perfetto export of the primary leg's span buffer."""
+    if sim.trace is None:
+        return
+    if many:
+        stem, dot, ext = path.rpartition(".")
+        path = f"{stem}.{name}{dot}{ext}" if dot else f"{path}.{name}"
+    with open(path, "wb") as f:
+        f.write(sim.trace.to_perfetto_json())
+    print(f"# perfetto export: {path}", file=sys.stderr)
+
+
+def run_scenario(name: str, args, metrics=None, many: bool = False) -> dict:
     sc = get_fabric_scenario(name)
     out: dict = {"scenario": name, "gates": {}, "violations": []}
+    # only the primary leg records spans: comparison legs (direct hashing,
+    # isolation-off) would double every bundle key in one buffer
+    tr = {"trace": True} if args.trace_out else {}
 
     if name == "vlb_spray":
-        vlb = FabricSim(_build(sc, args, mode="vlb"), scenario=sc,
-                        metrics=metrics).run()
+        prim = FabricSim(_build(sc, args, mode="vlb", **tr), scenario=sc,
+                         metrics=metrics)
+        vlb = prim.run()
         direct = FabricSim(_build(sc, args, mode="direct"),
                            scenario=sc).run()
         out["vlb"] = vlb.to_dict()
@@ -77,8 +98,9 @@ def run_scenario(name: str, args, metrics=None) -> dict:
                 f"{direct.max_lb_load_frac:.3f})")
 
     elif name == "elephant_mice":
-        on = FabricSim(_build(sc, args, isolate=True), scenario=sc,
-                       metrics=metrics).run()
+        prim = FabricSim(_build(sc, args, isolate=True, **tr), scenario=sc,
+                         metrics=metrics)
+        on = prim.run()
         off = FabricSim(_build(sc, args, isolate=False), scenario=sc).run()
         out["isolated"] = on.to_dict()
         out["shared"] = {"mice_p99_s": off.mice_p99_s,
@@ -96,8 +118,9 @@ def run_scenario(name: str, args, metrics=None) -> dict:
             out["violations"].append("no elephant was ever detected")
 
     else:  # lb_node_failure
-        r = FabricSim(_build(sc, args), scenario=sc,
-                      metrics=metrics).run()
+        prim = FabricSim(_build(sc, args, **tr), scenario=sc,
+                         metrics=metrics)
+        r = prim.run()
         out["report"] = r.to_dict()
         out["violations"] = list(r.violations)
         ok = bool(r.lbs_killed) and r.bundles_lost == 0
@@ -107,6 +130,8 @@ def run_scenario(name: str, args, metrics=None) -> dict:
         if r.bundles_lost:
             out["violations"].append(
                 f"{r.bundles_lost} bundles lost across the LB failure")
+    if args.trace_out:
+        _export_trace(prim, name, args.trace_out, many)
     return out
 
 
@@ -118,7 +143,9 @@ def main(argv=None) -> int:
         metrics = MetricsRegistry()
     names = (sorted(FABRIC_SCENARIOS) if args.scenario == "all"
              else [args.scenario])
-    summary = {"scenarios": [run_scenario(n, args, metrics) for n in names]}
+    summary = {"scenarios": [run_scenario(n, args, metrics,
+                                          many=len(names) > 1)
+                             for n in names]}
     failures = [v for s in summary["scenarios"] for v in s["violations"]]
     if metrics is not None:
         summary["metrics"] = {

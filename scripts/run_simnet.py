@@ -63,11 +63,25 @@ def parse_args(argv=None):
                     help="include full queue/weight traces in the JSON")
     ap.add_argument("--metrics-interval", type=int, default=0,
                     help="emit a metrics time-series row every N windows "
-                         "(enables the live registry; forces the host "
-                         "engine). 0 = off")
+                         "(enables the live registry; works on both "
+                         "engines — the fused superblock's returned arrays "
+                         "feed the same emission path). 0 = off")
     ap.add_argument("--metrics-jsonl", default=None,
                     help="JSONL path for --metrics-interval rows "
                          "(default: no file, registry only)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-bundle stage spans and write Chrome "
+                         "trace-event / Perfetto JSON here (open in "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--trace-summary-json", default=None, metavar="PATH",
+                    help="write the lossless trace summary JSON here "
+                         "(consumed by scripts/analyze_trace.py --summary "
+                         "and trend.py --trace-summary)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="head-sampling rate for span retention "
+                         "(the tail top-k reservoir is always kept)")
+    ap.add_argument("--trace-tail-k", type=int, default=64,
+                    help="slowest-bundle reservoir size")
     ap.add_argument("--json", default=None, help="write the summary here")
     return ap.parse_args(argv)
 
@@ -93,8 +107,27 @@ def build_and_run(args, frozen: bool, policy: str | None = None,
         # would interleave their rows into the same JSONL
         extra["metrics_every"] = max(args.metrics_interval, 1)
         extra["metrics_path"] = args.metrics_jsonl
+    trace_out = getattr(args, "trace_out", None)
+    trace_summary = getattr(args, "trace_summary_json", None)
+    if with_metrics and (trace_out or trace_summary):
+        # same primary-leg rule as metrics: one trace per invocation
+        extra["trace"] = True
+        extra["trace_sample"] = args.trace_sample
+        extra["trace_tail_k"] = args.trace_tail_k
     cfg = scenario.build_config(**extra)
-    return Simulator(cfg, dataclasses.replace(scenario)).run()
+    sim = Simulator(cfg, dataclasses.replace(scenario))
+    report = sim.run()
+    if sim.trace is not None and with_metrics:
+        if trace_out:
+            with open(trace_out, "wb") as f:
+                f.write(sim.trace.to_perfetto_json())
+        if trace_summary:
+            from repro.telemetry.traceview import summary_json
+            out = sim.trace.to_summary()
+            out["breakdown"] = summary_json(sim.trace)
+            with open(trace_summary, "w") as f:
+                json.dump(out, f)
+    return report
 
 
 def main(argv=None) -> int:

@@ -48,6 +48,7 @@ from repro.core.control_plane import (ControlPolicy, LoadBalancerControlPlane,
 from repro.core.epoch import EpochManager
 from repro.core.tables import MemberSpec, TableError
 from repro.telemetry.registry import SIZE_BUCKETS, MetricsRegistry
+from repro.telemetry.trace import parse_trace_id
 
 
 class SessionError(ValueError):
@@ -221,7 +222,8 @@ class ControlDaemon:
                  policy_engine: str = "np",
                  metrics: Optional[MetricsRegistry] = None,
                  quota_msgs_per_s: Optional[float] = None,
-                 quota_burst: Optional[float] = None):
+                 quota_burst: Optional[float] = None,
+                 trace=None):
         self.n_instances = n_instances
         self.clock = clock
         self.lease_s = float(lease_s)
@@ -271,6 +273,9 @@ class ControlDaemon:
         # uninstrumented daemon (no branches taken, nothing allocated)
         self._mx = (None if metrics is None
                     else _DaemonMetrics(metrics, self, self._handlers))
+        # trace: a telemetry.trace.TraceBuffer — per-message spans for
+        # requests that carry a trace id (journal replay records nothing)
+        self.trace = trace
 
     # -- the single entry point ----------------------------------------------
     def handle(self, msg, now: Optional[float] = None) -> M.Reply:
@@ -290,20 +295,46 @@ class ControlDaemon:
             payload["now"] = now
             self.journal.append(msg.KIND, payload)
         mx = None if self._replaying else self._mx
-        if mx is None:
+        tr = (self.trace if self.trace is not None and not self._replaying
+              and getattr(msg, "trace", "") else None)
+        if mx is None and tr is None:
             try:
                 return M.Reply(True, data=fn(msg, now))
             except SessionError as e:
                 return M.Reply(False, error=str(e))
         t0 = time.perf_counter()
+        ok = True
         try:
             return M.Reply(True, data=fn(msg, now))
         except SessionError as e:
-            mx.rejects[msg.KIND].inc()
+            ok = False
+            if mx is not None:
+                mx.rejects[msg.KIND].inc()
             return M.Reply(False, error=str(e))
         finally:
-            mx.messages[msg.KIND].inc()
-            mx.handle_seconds[msg.KIND].observe(time.perf_counter() - t0)
+            dt = time.perf_counter() - t0
+            if mx is not None:
+                mx.messages[msg.KIND].inc()
+                mx.handle_seconds[msg.KIND].observe(dt)
+            if tr is not None:
+                self._record_span(tr, msg, now, dt, ok)
+
+    def _record_span(self, tr, msg, now: float, wall_s: float,
+                     ok: bool) -> None:
+        """One ``controld.<kind>`` span for a traced request: anchored at
+        the virtual-clock instant it was handled, with the measured wall
+        handling time as its duration (aux = 1 accepted / 0 rejected). A
+        malformed trace id is ignored — tracing must never reject a
+        message the untraced daemon would accept."""
+        try:
+            key = parse_trace_id(msg.trace)
+        except (TypeError, ValueError):
+            return
+        tr.record_window("controld." + msg.KIND,
+                         np.asarray([key], np.uint64),
+                         np.asarray([now], np.float64),
+                         np.asarray([now + wall_s], np.float64),
+                         aux=np.asarray([1 if ok else 0], np.int64))
 
     def _session(self, token: str) -> Session:
         s = self.sessions.get(token)

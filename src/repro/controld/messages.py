@@ -37,6 +37,13 @@ Messages:
   policy feedback, garbage-collects drained epochs. Explicit (not a timer)
   so virtual-time drivers and journal replay are deterministic.
 * ``Status``                  — admin query, read-only (never journaled).
+
+Every request carries an optional ``trace`` field (a 16-hex trace id from
+``telemetry.trace``): both transports pass it through unchanged, and the
+daemon — when given a ``TraceBuffer`` — records one ``controld.<kind>`` span
+per traced message, linking control-plane work into the same per-window
+span trees the data plane emits. ``trace=""`` (the default) records nothing,
+and journal replay never records spans (digests are unchanged either way).
 """
 from __future__ import annotations
 
@@ -63,6 +70,7 @@ class Reserve:
     policy: str = "proportional"
     policy_params: dict = dataclasses.field(default_factory=dict)
     instance_hint: int = -1
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +79,7 @@ class Free:
 
     KIND = "free"
     token: str = ""
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +99,7 @@ class ReserveFabric:
     policy: str = "proportional"
     policy_params: dict = dataclasses.field(default_factory=dict)
     reserved_fraction: float = 0.25
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +114,7 @@ class Register:
     base_lane: int = 0
     lane_bits: int = 0
     weight: float = 1.0
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +135,7 @@ class RegisterBatch:
     base_lanes: tuple = ()
     lane_bits: tuple = ()
     weights: tuple = ()
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +145,7 @@ class Deregister:
     KIND = "deregister"
     token: str = ""
     member_id: int = 0
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +160,7 @@ class DeregisterBatch:
     KIND = "deregister_batch"
     token: str = ""
     member_ids: tuple = ()
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +175,7 @@ class SendState:
     fill: float = 0.0
     rate: float = 1.0
     healthy: bool = True
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +193,7 @@ class SendStateBatch:
     fills: tuple = ()
     rates: tuple = ()
     healthy: tuple = ()
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +205,7 @@ class Tick:
     KIND = "tick"
     current_event: int = 0
     gc_event: int = -1
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +214,7 @@ class Status:
 
     KIND = "status"
     token: str = ""
+    trace: str = ""
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,6 +19,7 @@ journal's total order requires; no lock needed.
 """
 from __future__ import annotations
 
+import dataclasses
 import selectors
 import socket
 import threading
@@ -314,13 +315,23 @@ class ControldError(RuntimeError):
 
 class ControldClient:
     """Convenience API over any transport: builds typed messages, raises
-    ``ControldError`` on ``ok=False`` replies, returns ``reply.data``."""
+    ``ControldError`` on ``ok=False`` replies, returns ``reply.data``.
+
+    Setting ``client.trace`` to a trace id (``telemetry.trace.trace_id``)
+    stamps every subsequent outgoing message with it — the daemon links its
+    handling spans to that id. Clear it (``""``) to stop propagating."""
 
     def __init__(self, transport):
         self.transport = transport
+        self.trace = ""
+
+    def _stamp(self, msg):
+        if self.trace and not getattr(msg, "trace", ""):
+            return dataclasses.replace(msg, trace=self.trace)
+        return msg
 
     def _call(self, msg) -> dict:
-        reply = self.transport.call(msg)
+        reply = self.transport.call(self._stamp(msg))
         if not reply.ok:
             raise ControldError(reply.error)
         return reply.data
@@ -447,7 +458,7 @@ class ControldClient:
 
     def call_many(self, msgs) -> list[M.Reply]:
         """Raw pipelined burst of typed messages (replies, not data)."""
-        return self.transport.call_many(msgs)
+        return self.transport.call_many([self._stamp(m) for m in msgs])
 
     def tick(self, current_event: int, gc_event: int = -1) -> dict:
         return self._call(M.Tick(current_event=current_event,

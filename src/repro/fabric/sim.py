@@ -48,6 +48,8 @@ from repro.fabric.spray import spray_paths
 from repro.simnet.clock import VirtualClock
 from repro.simnet.links import LinkConfig, LinkSet
 from repro.simnet.queues import FarmConfig, FarmQueues
+from repro.telemetry.trace import (TraceBuffer, TraceConfig, bundle_key,
+                                   trace_id)
 
 IP_UDP_BYTES = 28
 WIRE_OVERHEAD = HEADER_BYTES + SEG_HDR_BYTES + IP_UDP_BYTES
@@ -104,6 +106,14 @@ class FabricConfig:
     controld_policy: str = "proportional"
     tick_every: int = 5
     lease_s: Optional[float] = None
+
+    # tracing: per-bundle stage spans (telemetry.trace). Per-LB spans carry
+    # the stacked-calendar instance id (lb*2 + class) as ``aux``, so the
+    # two VLB hops and the elephant/mice lane split are visible per span;
+    # two-hop paths show a distinct "fabric" stage in the span tree.
+    trace: bool = False
+    trace_sample: float = 1.0
+    trace_tail_k: int = 64
 
     def window_period_s(self) -> float:
         return self.triggers_per_step * self.trigger_period_s
@@ -202,6 +212,12 @@ class FabricSim:
         self.scenario = scenario
         self.clock = VirtualClock()
         self.rng = np.random.default_rng(cfg.seed)
+        self.trace: Optional[TraceBuffer] = None
+        self._trace_pid0 = 0
+        if cfg.trace:
+            self.trace = TraceBuffer(TraceConfig(
+                head_rate=cfg.trace_sample, tail_k=cfg.trace_tail_k,
+                seed=cfg.seed))
 
         m = cfg.n_members
         r = min(max(1, int(round(cfg.reserved_fraction * m))), m - 1)
@@ -300,7 +316,8 @@ class FabricSim:
         self.daemon = ControlDaemon(
             n_instances=2 * cfg.k_lbs, clock=self.clock.now, lease_s=lease,
             epoch_horizon=max(16, 8 * cfg.triggers_per_step),
-            max_members=max(64, 4 * cfg.n_members), journal=Journal())
+            max_members=max(64, 4 * cfg.n_members), journal=Journal(),
+            trace=self.trace)
         self.client = ControldClient(InProcTransport(self.daemon))
         fab = self.client.reserve_fabric(
             k=cfg.k_lbs, policy=cfg.controld_policy,
@@ -365,6 +382,12 @@ class FabricSim:
         klass_b = elephant_daq[daq_b].astype(np.int64)
         inter_b, owner_b, entropy_b = spray_paths(
             ev_b, daq_b, self.live, mode=cfg.mode, seed=cfg.seed)
+        tb = self.trace
+        if tb is not None:
+            key_b = bundle_key(ev_b, daq_b)
+            tb.record_window("emit_wait", key_b,
+                             np.full(len(ev_b), t0), t_emit_b,
+                             aux=klass_b)
 
         # -- segmentation (struct-of-arrays, one repeat) ----------------------
         nseg_b = np.maximum(
@@ -381,6 +404,10 @@ class FabricSim:
         self.segments_sent += n
         self.bundles_sent += len(ev_b)
         self.total_wire_bytes += float(wire.sum())
+        if tb is not None:
+            key_s = key_b[bidx]
+            pid_s = np.uint64(self._trace_pid0) + np.arange(n, dtype=np.uint64)
+            self._trace_pid0 += n
 
         # -- DAQ uplink -------------------------------------------------------
         rows = np.arange(n)
@@ -388,6 +415,9 @@ class FabricSim:
             daq_b[bidx], t_emit_b[bidx], wire)
         self.lost_uplink += int((~keep).sum())
         rows, t_now = rows[keep], t_arr[keep]
+        if tb is not None:
+            tb.record_window("uplink", key_s[rows], t_emit_b[bidx[rows]],
+                             t_now, pid=pid_s[rows], aux=daq_b[bidx[rows]])
 
         # -- phase 1: ingress trunk of the intermediate LB --------------------
         inter_s = inter_b[bidx]
@@ -395,9 +425,15 @@ class FabricSim:
         t_arr, keep = self.lb_ingress.transit(
             inter_s[rows], t_now, wire[rows])
         self.lost_ingress += int((~keep).sum())
+        t_in = t_now
         rows, t_now = rows[keep], t_arr[keep] + cfg.lb_latency_s
         self.lb_load_bytes += np.bincount(
             inter_s[rows], weights=wire[rows], minlength=cfg.k_lbs)
+        if tb is not None:
+            # per-LB + per-class span: aux is the stacked instance id
+            tb.record_window("lb", key_s[rows], t_in[keep], t_now,
+                             pid=pid_s[rows],
+                             aux=inter_s[rows] * 2 + klass_b[bidx[rows]])
 
         # -- phase 2: inter-LB fabric hop for two-hop rows --------------------
         two_hop = inter_s[rows] != owner_s[rows]
@@ -414,6 +450,13 @@ class FabricSim:
             keep_all[two_hop] = keep_fab
             t_merged = t_now.copy()
             t_merged[two_hop] = t_fab + cfg.lb_latency_s
+            if tb is not None and len(landed):
+                # two-hop rows get a distinct "fabric" span, so VLB paths
+                # show up as a deeper span tree than direct one-hop rows
+                tb.record_window(
+                    "fabric", key_s[landed], t_now[two_hop][keep_fab],
+                    t_fab[keep_fab] + cfg.lb_latency_s, pid=pid_s[landed],
+                    aux=owner_s[landed] * 2 + klass_b[bidx[landed]])
             rows, t_now = rows[keep_all], t_merged[keep_all]
 
         # -- the owner's calendar: the production routing engine --------------
@@ -438,11 +481,24 @@ class FabricSim:
         if len(rows):
             t_arr, keep = self.member_links.transit(member, t_now, wire[rows])
             self.lost_downlink += int((~keep).sum())
+            t_in = t_now
             rows, t_now, member = rows[keep], t_arr[keep], member[keep]
+            if tb is not None:
+                tb.record_window("downlink", key_s[rows], t_in[keep], t_now,
+                                 pid=pid_s[rows], aux=member)
         if len(rows):
             served = self.farm.serve(member, t_now, wire[rows])
             acc = ~served.dropped
             self.dropped_queue += int(served.dropped.sum())
+            if tb is not None and acc.any():
+                svc = self.farm.service_time(member[acc], wire[rows][acc])
+                dep_a = served.depart[acc]
+                tb.record_window("farm_wait", key_s[rows[acc]], t_now[acc],
+                                 dep_a - svc, pid=pid_s[rows[acc]],
+                                 aux=member[acc])
+                tb.record_window("service", key_s[rows[acc]], dep_a - svc,
+                                 dep_a, pid=pid_s[rows[acc]],
+                                 aux=member[acc])
             rows, dep = rows[acc], served.depart[acc]
         else:
             dep = np.empty((0,), np.float64)
@@ -459,6 +515,12 @@ class FabricSim:
             kd = klass_b[done]
             self.lat_mice.extend(lat[kd == 0].tolist())
             self.lat_elephant.extend(lat[kd == 1].tolist())
+            if tb is not None:
+                rmin = np.full(nb, np.inf)
+                np.minimum.at(rmin, bidx[rows], dep)
+                tb.record_window("reassembly", key_b[done], rmin[done],
+                                 t_done[done], aux=klass_b[done])
+                tb.complete_window(key_b[done], t_emit_b[done], t_done[done])
         self.bundles_completed += int(done.sum())
         self.bundles_lost += int(nb - done.sum())
 
@@ -471,8 +533,12 @@ class FabricSim:
             self._g_elephants.set(float(mask.sum()))
 
         self.clock.advance_to(t0 + window_s)
+        if tb is not None:
+            tb.end_window()
         if (self.client is not None and cfg.tick_every
                 and (step_idx + 1) % cfg.tick_every == 0):
+            if tb is not None:
+                self.client.trace = trace_id((1 << 62) | step_idx)
             self.client.tick(current_event=int(self.event_base))
 
     def _route(self, ev, entropy, iid) -> tuple[np.ndarray, np.ndarray]:

@@ -61,6 +61,11 @@ class ServeConfig:
     use_controld: bool = False
     controld_policy: str = "proportional"
     lease_s: float = 30.0        # replica lease (wall clock)
+    # record controld.<kind> spans for the rebalance loop (requires
+    # use_controld): each rebalance window is stamped with a
+    # (1 << 62) | count trace id and the daemon records one span per
+    # message, exposed on ``engine.trace`` (a telemetry.trace.TraceBuffer)
+    trace: bool = False
 
 
 class ServingEngine:
@@ -93,12 +98,17 @@ class ServingEngine:
             # ControlDaemon; replicas are leased members of its reservation
             from repro.controld import (ControlDaemon, ControldClient,
                                         InProcTransport)
+            self.trace = None
+            if serve_cfg.trace:
+                from repro.telemetry.trace import TraceBuffer
+                self.trace = TraceBuffer()
             # journal=None: the engine never recovers this daemon (it lives
             # and dies with the process), and an unread in-memory journal
             # would grow by one entry per heartbeat forever
             self.daemon = ControlDaemon(
                 n_instances=1, lease_s=serve_cfg.lease_s,
-                max_members=max(64, serve_cfg.n_replicas), journal=None)
+                max_members=max(64, serve_cfg.n_replicas), journal=None,
+                trace=self.trace)
             self.client = ControldClient(InProcTransport(self.daemon))
             self.token = self.client.reserve(
                 policy=serve_cfg.controld_policy)["token"]
@@ -111,6 +121,7 @@ class ServingEngine:
             self.cp = session.cp
         else:
             self.daemon = None
+            self.trace = None
             self.manager = EpochManager(max_members=max(64, serve_cfg.n_replicas))
             self.cp = LoadBalancerControlPlane(self.manager)
             members = {
@@ -281,6 +292,13 @@ class ServingEngine:
         unrouted = [q.event_number for q in self.unrouted]
         watermark = min(unrouted) if unrouted else self.next_event
         if self.daemon is not None:
+            if self.trace is not None:
+                # one trace id per rebalance window, same namespace the
+                # simnet controld loop uses for its window spans
+                from repro.telemetry.trace import trace_id
+                self._trace_windows = getattr(self, "_trace_windows", 0) + 1
+                self.client.trace = trace_id(
+                    (1 << 62) | self._trace_windows)
             # one SendStateBatch per rebalance: every replica's sample in a
             # single frame (and a single journal entry / telemetry scatter);
             # replicas whose lease lapsed (a long gap between rebalances)

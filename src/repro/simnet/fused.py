@@ -85,8 +85,6 @@ def unsupported_reason(cfg, scenario=None) -> Optional[str]:
     """
     if cfg.controld:
         return "controld sessions are host-side daemons"
-    if getattr(cfg, "metrics_every", 0):
-        return "per-window metrics emission is host-side observation"
     if cfg.n_instances != 1:
         return "multi-instance partitions the farm host-side"
     if scenario is not None:
@@ -391,7 +389,12 @@ def _window_step(carry, x, params):
     ys = dict(done_b=done_b, t_done_b=t_done_b, any_b=any_b, mem_b=mem_b,
               acc_m=acc_m, fill=fill_farm, weights=weights,
               dups=dups, timed=timed, qdrop=qdrop.astype(jnp.int64),
-              invalid=invalid.astype(jnp.int64), switched=do_sw)
+              invalid=invalid.astype(jnp.int64), switched=do_sw,
+              # per-row stage times, returned unconditionally so tracing
+              # never changes the program (FUSED_TRACES stays 1): spans are
+              # materialized on host post-hoc from these masked arrays
+              t_cn=t_cn, farm_dep=jnp.where(acc, farm_dep, 0.0),
+              memb=mc, acc=acc)
     return new_carry, ys
 
 
@@ -477,7 +480,11 @@ class FusedEngine:
                 lidx=bundle_of_row[src].astype(np.int32),
                 bytes=wire[src],
                 t_out=dlv.t_arrive + cfg.lb_latency_s,
-                keep=keep, jadd=jadd))
+                keep=keep, jadd=jadd,
+                # host-side stage boundaries for the trace materializer
+                # (never shipped to device)
+                t_emit=emit_b[bundle_of_row][src], t_up=t_up[src],
+                t_lb=dlv.t_arrive, sent=len(batch)))
             nseg_b = np.zeros((G,), np.int32)
             nseg_b[bundle_of_row] = batch.n_segs
             ev_all[i][bundle_of_row] = batch.event_number
@@ -487,7 +494,7 @@ class FusedEngine:
             reweight = (not cfg.frozen_weights and cfg.reweight_every
                         and (i + 1) % cfg.reweight_every == 0)
             meta.append(dict(nseg_b=nseg_b, reweight=bool(reweight),
-                             win_valid=True, wend=window_end,
+                             win_valid=True, t0=t0, wend=window_end,
                              cur_event=sim.fleet.event_number))
         npad = next_pow2(max((len(r["ev_hi"]) for r in rows), default=1))
         return dict(rows=rows, meta=meta, npad=npad, G=G, W=W,
@@ -623,6 +630,86 @@ class FusedEngine:
             alive &= ~q
         return vanished
 
+    # -- host-side observation replay (tracing + live metrics) --------------
+    def _trace_window(self, tb, w, plant, ys, sel, pid0: int) -> int:
+        """Materialize one window's spans from the plant's host-side stage
+        boundaries plus the device scan's returned per-row arrays — the
+        identical span set the host engine records inline (parity-tested)."""
+        from repro.telemetry.trace import bundle_key
+        r, mt = plant["rows"][w], plant["meta"][w]
+        key_b = bundle_key(plant["ev"][w], plant["daq"][w])
+        tb.record_window("emit_wait", key_b, mt["t0"], plant["emit"][w])
+        n3 = len(r["ev_hi"])
+        if n3:
+            ev_row = ((r["ev_hi"].astype(np.uint64) << np.uint64(32))
+                      | r["ev_lo"].astype(np.uint64))
+            key_r = bundle_key(ev_row, r["daq"])
+            pid_r = np.uint64(pid0) + np.arange(n3, dtype=np.uint64)
+            tb.record_window("uplink", key_r, r["t_emit"], r["t_up"],
+                             pid=pid_r)
+            tb.record_window("wan", key_r, r["t_up"], r["t_lb"], pid=pid_r)
+            tb.record_window("lb", key_r, r["t_lb"], r["t_out"], pid=pid_r)
+            memb = ys["memb"][w, :n3].astype(np.int64)
+            keep = r["keep"]
+            t_cn = ys["t_cn"][w, :n3]
+            tb.record_window("downlink", key_r[keep], r["t_out"][keep],
+                             t_cn[keep], pid=pid_r[keep], aux=memb[keep])
+            acc = np.asarray(ys["acc"][w, :n3])
+            dep = ys["farm_dep"][w, :n3]
+            m_acc = memb[acc]
+            fc = self.sim.farm.cfg
+            svc = fc.per_packet_s[m_acc] + r["bytes"][acc] * fc.per_byte_s[m_acc]
+            tb.record_window("farm_wait", key_r[acc], t_cn[acc],
+                             dep[acc] - svc, pid=pid_r[acc], aux=m_acc)
+            tb.record_window("service", key_r[acc], dep[acc] - svc, dep[acc],
+                             pid=pid_r[acc], aux=m_acc)
+            if len(sel):
+                keys_done = bundle_key(plant["ev"][w, sel],
+                                       plant["daq"][w, sel])
+                rmin = np.full((plant["G"],), np.inf)
+                np.minimum.at(rmin, r["lidx"][acc], dep[acc])
+                t_done = ys["t_done_b"][w, sel]
+                tb.record_window("reassembly", keys_done, rmin[sel], t_done)
+                tb.complete_window(keys_done, plant["emit"][w, sel], t_done)
+        return pid0 + n3
+
+    def _observe(self, plant, xs, ys, sels) -> None:
+        """Replay the host engine's per-window observation — trace spans
+        and ``_emit_metrics`` (same registry updates, same JSONL rows, same
+        virtual timestamps) — from the superblock's returned arrays."""
+        sim = self.sim
+        tb = sim.trace
+        W = plant["W"]
+        pid0 = 0
+        cum_sent = cum_dlv = cum_sw = 0
+        for w in range(W):
+            sel = sels[w]
+            if tb is not None:
+                pid0 = self._trace_window(tb, w, plant, ys, sel, pid0)
+                tb.end_window()
+            r = plant["rows"][w]
+            cum_sent += r["sent"]
+            cum_dlv += len(r["ev_hi"])
+            cum_sw += int(ys["switched"][w])
+            if len(sel):
+                new = (ys["t_done_b"][w, sel]
+                       - plant["emit"][w, sel]).tolist()
+                sim.latencies.extend(new)
+                if tb is not None:
+                    from repro.telemetry.trace import bundle_key
+                    keys = bundle_key(plant["ev"][w, sel],
+                                      plant["daq"][w, sel])
+                    sim._lat_keys.extend(int(k) for k in keys)
+            if sim.metrics is not None:
+                sim.packets_sent = cum_sent
+                sim.packets_delivered = cum_dlv
+                sim.epoch_switches = cum_sw
+                sim.bundles_sent = plant["G"] * (w + 1)
+                sim.clock.advance_to(float(plant["meta"][w]["wend"]))
+                sim._emit_metrics(w, np.asarray(ys["fill"][w]))
+        if sim._ts_writer is not None:
+            sim._ts_writer.close()
+
     def run(self):
         from repro.simnet.sim import SimReport
 
@@ -636,17 +723,22 @@ class FusedEngine:
         # latencies in the host's append order: window, then member
         # ascending, then (event, daq) ascending within the member
         lats = []
+        sels = []
         done = ys["done_b"][:W]
         for w in range(W):
             d = np.flatnonzero(done[w])
             if len(d) == 0:
+                sels.append(d)
                 continue
             order = np.lexsort((plant["daq"][w, d], plant["ev"][w, d],
                                 ys["mem_b"][w, d]))
             sel = d[order]
+            sels.append(sel)
             lats.extend((ys["t_done_b"][w, sel]
                          - plant["emit"][w, sel]).tolist())
         lat = np.asarray(lats)
+        if sim.trace is not None or sim.metrics is not None:
+            self._observe(plant, xs, ys, sels)
         completed = len(lats)
         pending = int(self.final_carry["buckets"].sum())
         timed_out = int(ys["timed"][:W].sum())

@@ -105,10 +105,18 @@ class SimConfig:
     # observability: metrics_every > 0 enables a MetricsRegistry over the
     # run (E2E latency histogram, queue-fill gauges, window/packet totals)
     # and — when metrics_path is set — appends one JSONL time-series row
-    # every that-many windows. Forces the host engine: per-window sampling
-    # is host-side observation by construction (fused.unsupported_reason).
+    # every that-many windows. Works on both engines: the fused engine
+    # replays the identical emission from the superblock's returned arrays.
     metrics_every: int = 0
     metrics_path: Optional[str] = None
+
+    # tracing: trace=True attaches a telemetry.trace.TraceBuffer — per-
+    # bundle stage spans (head-sampled at trace_sample via mix64 on the
+    # event number, plus a top-k tail reservoir of the slowest bundles).
+    # Works on both engines; spans are engine-parity-tested.
+    trace: bool = False
+    trace_sample: float = 1.0
+    trace_tail_k: int = 64
 
     def window_period_s(self, n_triggers: int, period_scale: float = 1.0) -> float:
         return n_triggers * self.trigger_period_s * period_scale
@@ -187,6 +195,18 @@ class Scenario:
         return cfg
 
 
+def _rss_bytes() -> float:
+    """Current resident set size (Linux /proc; peak-RSS fallback)."""
+    try:
+        with open("/proc/self/statm") as f:
+            import os
+            return float(int(f.read().split()[1]) * os.sysconf("SC_PAGE_SIZE"))
+    except (OSError, ValueError, IndexError):
+        import resource
+        return float(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+                     * 1024)
+
+
 class Simulator:
     """Drives one scenario end to end on virtual time."""
 
@@ -199,6 +219,17 @@ class Simulator:
         self.scenario = scenario
         self.clock = VirtualClock()
         self.rng = np.random.default_rng(cfg.seed)
+
+        # -- per-bundle tracing (cfg.trace) — created before the control
+        # plane so the daemon can record per-message spans into it
+        self.trace = None
+        self._trace_pid0 = 0           # delivered-row counter = packet pid
+        self._lat_keys: list[int] = []  # bundle key per self.latencies entry
+        if cfg.trace:
+            from repro.telemetry.trace import TraceBuffer, TraceConfig
+            self.trace = TraceBuffer(TraceConfig(
+                head_rate=cfg.trace_sample, tail_k=cfg.trace_tail_k,
+                seed=cfg.seed))
 
         # -- control planes (one per LB instance, paper §I-C) -----------------
         per_inst = cfg.n_members // cfg.n_instances
@@ -304,6 +335,19 @@ class Simulator:
         reg.gauge("simnet_epoch_switches",
                   "Hit-less epoch switches scheduled by the control loop."
                   ).set_function(lambda: self.epoch_switches)
+        # soak-trend gauges (scripts/analyze_soak.py slope-gates these):
+        # pending state must stay bounded over a long run, RSS must not creep
+        reg.gauge("simnet_bundles_pending",
+                  "Bundles emitted but not yet reassembled or timed out "
+                  "(in flight + awaiting segments)."
+                  ).set_function(
+                      lambda: self.bundles_sent - len(self.latencies)
+                      - sum(ra.stats.n_timed_out_groups
+                            for ra in self.reassemblers.values()))
+        reg.gauge("process_rss_bytes",
+                  "Resident set size at scrape time (soak growth gate; "
+                  "machine state, excluded from engine-parity checks)."
+                  ).set_function(_rss_bytes)
         if self.cfg.metrics_path:
             self._ts_writer = TimeSeriesWriter(self.cfg.metrics_path, reg)
 
@@ -313,6 +357,11 @@ class Simulator:
         new = self.latencies[self._lat_emitted:]
         if new:
             self._lat_hist.observe_many(new)
+            if self.trace is not None and self._lat_keys:
+                from repro.telemetry.trace import trace_id
+                keys = self._lat_keys[self._lat_emitted:]
+                self._lat_hist.put_exemplars(
+                    new, [trace_id(k) for k in keys])
             self._lat_emitted = len(self.latencies)
         self._windows.inc()
         self._fill_mean.set(float(np.mean(fill)))
@@ -340,7 +389,7 @@ class Simulator:
             lease_s=self._lease_s(),
             epoch_horizon=max(16, 8 * cfg.triggers_per_step),
             max_members=max(64, 4 * cfg.n_members),
-            journal=Journal())
+            journal=Journal(), trace=self.trace)
         client = ControldClient(InProcTransport(daemon))
         policies = cfg.controld_policy
         if isinstance(policies, str):
@@ -385,7 +434,7 @@ class Simulator:
             n_instances=cfg.n_instances, clock=self.clock.now,
             lease_s=self._lease_s(),
             epoch_horizon=max(16, 8 * cfg.triggers_per_step),
-            max_members=max(64, 4 * cfg.n_members))
+            max_members=max(64, 4 * cfg.n_members), trace=self.trace)
         self.daemon_restarts += 1
         if recovered.state_digest() != digest:
             self.restart_digest_mismatches += 1
@@ -433,6 +482,12 @@ class Simulator:
             self.emit_time[(b.event_number, b.daq_id)] = float(t)
             self.emit_step[(b.event_number, b.daq_id)] = step_idx
             self._expected[(b.event_number, b.daq_id)] = b.payload
+        tb = self.trace
+        if tb is not None:
+            from repro.telemetry.trace import bundle_key
+            key_b = bundle_key([b.event_number for b in bundles],
+                               [b.daq_id for b in bundles])
+            tb.record_window("emit_wait", key_b, t0, emit_b)
 
         # -- segmentation (timestamps ride as a side column) ------------------
         batch = segment_bundles(bundles, cfg.mtu_payload)
@@ -452,6 +507,16 @@ class Simulator:
         arrived = batch.take(src)
         t_lb = delivery.t_arrive
         self.packets_delivered += len(arrived)
+        key_r = pid_r = None
+        if tb is not None:
+            from repro.telemetry.trace import bundle_key
+            key_r = bundle_key(arrived.event_number, arrived.daq_id)
+            pid_r = (np.uint64(self._trace_pid0)
+                     + np.arange(len(src), dtype=np.uint64))
+            self._trace_pid0 += len(src)
+            tb.record_window("uplink", key_r, t_emit[src], t_up[src],
+                             pid=pid_r)
+            tb.record_window("wan", key_r, t_up[src], t_lb, pid=pid_r)
         if len(arrived) == 0:
             self._post_window(step_idx, window_end, {})
             return
@@ -483,9 +548,26 @@ class Simulator:
                                  arrived_bytes[rows_ok][dl_keep])
         rows_acc = rows_cn[~served.dropped]
         dep_acc = served.depart[~served.dropped]
+        if tb is not None:
+            tb.record_window("lb", key_r, t_lb, t_out, pid=pid_r)
+            tb.record_window("downlink", key_r[rows_cn], t_out[rows_cn],
+                             t_cn[dl_keep], pid=pid_r[rows_cn],
+                             aux=m_ok[dl_keep])
+            m_acc = m_ok[dl_keep][~served.dropped]
+            svc = self.farm.service_time(
+                m_acc, arrived_bytes[rows_ok][dl_keep][~served.dropped])
+            tb.record_window("farm_wait", key_r[rows_acc],
+                             t_cn[dl_keep][~served.dropped], dep_acc - svc,
+                             pid=pid_r[rows_acc], aux=m_acc)
+            tb.record_window("service", key_r[rows_acc], dep_acc - svc,
+                             dep_acc, pid=pid_r[rows_acc], aux=m_acc)
 
         # -- per-member reassembly at service-completion order ----------------
         done_by_member: dict[int, int] = {}
+        tr_keys: list[int] = []
+        tr_t0: list[float] = []
+        tr_t1: list[float] = []
+        tr_emit: list[float] = []
         if len(rows_acc):
             mem_acc = member[rows_acc]
             mem_ids, groups = group_rows(mem_acc)
@@ -531,6 +613,7 @@ class Simulator:
                     starts = np.flatnonzero(np.concatenate(
                         [[True], enc_s[1:] != enc_s[:-1]]))
                     gmax = np.maximum.reduceat(dep_s, starts)
+                    gmin = np.minimum.reduceat(dep_s, starts)
                     uk_enc = enc_s[starts]
                     for key, payload in completed:
                         emit = self.emit_time.pop(key, None)
@@ -541,8 +624,20 @@ class Simulator:
                         if want is not None and not np.array_equal(payload, want):
                             self.corrupt += 1
                         kenc = (int(key[0]) << 16) | int(key[1])
-                        t_done = float(gmax[np.searchsorted(uk_enc, kenc)])
+                        pos = np.searchsorted(uk_enc, kenc)
+                        t_done = float(gmax[pos])
                         self.latencies.append(t_done - emit)
+                        if tb is not None:
+                            self._lat_keys.append(kenc)
+                            tr_keys.append(kenc)
+                            tr_t0.append(float(gmin[pos]))
+                            tr_t1.append(t_done)
+                            tr_emit.append(emit)
+        if tb is not None and tr_keys:
+            rk = np.asarray(tr_keys, np.uint64)
+            tb.record_window("reassembly", rk, np.asarray(tr_t0),
+                             np.asarray(tr_t1))
+            tb.complete_window(rk, np.asarray(tr_emit), np.asarray(tr_t1))
         self._post_window(step_idx, window_end, done_by_member,
                           busy_s=served.busy_s, accepted=served.accepted)
 
@@ -556,6 +651,8 @@ class Simulator:
         ingest backlog from the reassemblers — on the virtual clock."""
         cfg = self.cfg
         self.clock.advance_to(window_end)
+        if self.trace is not None:
+            self.trace.end_window()
         fill = self.farm.fill(now=self.clock.now())
         for m in range(cfg.n_members):
             backlog = int(round(fill[m] * cfg.queue_capacity_pkts))
@@ -625,6 +722,11 @@ class Simulator:
         epoch GC all happen inside the service."""
         cfg = self.cfg
         cap = max(cfg.queue_capacity_pkts, 1)
+        if self.trace is not None:
+            from repro.telemetry.trace import trace_id
+            # window-scoped trace context: daemon-side spans of this
+            # window's control messages correlate under one id
+            self.client.trace = trace_id((1 << 62) | step_idx)
         for inst, ids in enumerate(self.instance_members):
             live, fills, rates = [], [], []
             for m in ids:

@@ -122,13 +122,18 @@ class _GaugeChild:
 
 
 class _HistogramChild:
-    __slots__ = ("buckets", "_counts", "_sum", "_count")
+    __slots__ = ("buckets", "_counts", "_sum", "_count", "_exemplars")
 
     def __init__(self, buckets: tuple):
         self.buckets = buckets
         self._counts = [0] * (len(buckets) + 1)  # last slot = +Inf
         self._sum = 0.0
         self._count = 0
+        # bucket index -> (trace_id, value): cross-reference into the
+        # tracing layer (telemetry.trace); rendered as an OpenMetrics-style
+        # exemplar suffix only when present, so the plain text format (and
+        # its golden test) is unchanged without tracing
+        self._exemplars: dict = {}
 
     def observe(self, v: float) -> None:
         self._counts[bisect_left(self.buckets, v)] += 1
@@ -146,6 +151,17 @@ class _HistogramChild:
             self._counts[i] += int(add[i])
         self._sum += float(arr.sum())
         self._count += int(arr.size)
+
+    def put_exemplars(self, values, trace_ids) -> None:
+        """Link sampled trace ids to the buckets their values land in (the
+        last value per bucket wins — freshest exemplar, one vectorized
+        bucketing pass per window)."""
+        arr = np.asarray(values, np.float64)
+        if arr.size == 0:
+            return
+        idx = np.searchsorted(self.buckets, arr, side="left")
+        for i, b in enumerate(idx):
+            self._exemplars[int(b)] = (trace_ids[i], float(arr[i]))
 
     def value(self) -> tuple:
         return (tuple(self._counts), self._sum, self._count)
@@ -255,6 +271,9 @@ class Histogram(_Family):
     def observe_many(self, values) -> None:
         self._bound().observe_many(values)
 
+    def put_exemplars(self, values, trace_ids) -> None:
+        self._bound().put_exemplars(values, trace_ids)
+
 
 class MetricsRegistry:
     """Get-or-create registry over named metric families.
@@ -310,13 +329,19 @@ class MetricsRegistry:
                 ls = _labelstr(fam.labelnames, key)
                 if fam.kind == "histogram":
                     counts, total, count = child.value()
+                    ex = getattr(child, "_exemplars", {})
                     cum = 0
-                    for edge, c in zip(fam.buckets, counts):
+                    for bi, (edge, c) in enumerate(zip(fam.buckets, counts)):
                         cum += c
-                        out.append(
+                        line = (
                             f"{name}_bucket"
                             f"{_labelstr(fam.labelnames, key, ('le', _fmt_le(edge)))}"
                             f" {cum}")
+                        if bi in ex:
+                            tid, val = ex[bi]
+                            line += (f' # {{trace_id="{_escape_label(str(tid))}"}}'
+                                     f" {_fmt(val)}")
+                        out.append(line)
                     out.append(
                         f"{name}_bucket"
                         f"{_labelstr(fam.labelnames, key, ('le', '+Inf'))}"

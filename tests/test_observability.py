@@ -287,7 +287,9 @@ class TestTimeSeries:
         cfg = scenario.build_config(steps=10, seed=0, metrics_every=2,
                                     metrics_path=str(path))
         report = Simulator(cfg, scenario).run()
-        assert report.engine == "host"  # metrics emission forces host
+        # metrics no longer force the host engine: the fused superblock's
+        # returned arrays feed the same emission path
+        assert report.engine == "fused"
         rows = [json.loads(x) for x in path.read_text().splitlines()]
         assert len(rows) == 5
         last = rows[-1]["metrics"]

@@ -1,0 +1,411 @@
+"""Per-bundle tracing: sampling determinism, golden Perfetto bytes,
+host/fused span parity, controld trace propagation, critical-path
+reconciliation, and exemplar cross-referencing."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.controld import (ControlDaemon, ControldClient, InProcTransport,
+                            SocketClient, SocketServer)
+from repro.simnet import SimConfig, Simulator, get_scenario
+from repro.telemetry.registry import LATENCY_BUCKETS_S
+from repro.telemetry.trace import (STAGES, TraceBuffer, TraceConfig,
+                                   bundle_key, mix64, parse_trace_id,
+                                   trace_id)
+from repro.telemetry.traceview import (critical_path, reconcile,
+                                       stage_decomposition, summary_json)
+
+LOOP_KW = dict(triggers_per_step=16, n_daqs=2, n_members=4,
+               mean_bundle_bytes=6_000)
+
+
+def _tb(**cfg) -> TraceBuffer:
+    return TraceBuffer(TraceConfig(**cfg))
+
+
+class TestIds:
+    def test_trace_id_roundtrip(self):
+        for k in (0, 1, 0xDEADBEEF, (1 << 62) | 17, 2**64 - 1):
+            assert parse_trace_id(trace_id(k)) == k
+            assert len(trace_id(k)) == 16
+
+    def test_bundle_key_packs_event_and_daq(self):
+        ks = bundle_key([5, 5, 9], [0, 3, 1])
+        assert ks.dtype == np.uint64
+        assert [int(k) >> 16 for k in ks] == [5, 5, 9]
+        assert [int(k) & 0xFFFF for k in ks] == [0, 3, 1]
+
+    def test_stage_registry_is_stable_and_extensible(self):
+        tb = _tb()
+        assert [tb.stage_id(s) for s in STAGES] == list(range(len(STAGES)))
+        sid = tb.stage_id("controld.tick")
+        assert sid == len(STAGES)
+        assert tb.stage_id("controld.tick") == sid   # idempotent
+
+
+class TestSampling:
+    def test_head_sampling_is_a_pure_function_of_event_and_seed(self):
+        keys = bundle_key(np.arange(4096), np.zeros(4096, np.int64))
+        m1 = _tb(head_rate=0.25, seed=7).head_sampled(keys)
+        m2 = _tb(head_rate=0.25, seed=7).head_sampled(keys)
+        m3 = _tb(head_rate=0.25, seed=8).head_sampled(keys)
+        assert (m1 == m2).all()
+        assert not (m1 == m3).all()
+        assert 0.15 < m1.mean() < 0.35          # ~rate, mix64 is uniform
+
+    def test_same_event_different_daq_share_fate(self):
+        # sampling hashes the *event*, so a bundle's packet copies across
+        # DAQs are kept or dropped together
+        tb = _tb(head_rate=0.5, seed=3)
+        ev = np.repeat(np.arange(512), 4)
+        ks = bundle_key(ev, np.tile(np.arange(4), 512))
+        m = tb.head_sampled(ks)
+        assert (m.reshape(512, 4) == m.reshape(512, 4)[:, :1]).all()
+
+    def test_tail_reservoir_keeps_k_slowest_deterministically(self):
+        rng = np.random.default_rng(0)
+        ks = bundle_key(np.arange(1000), np.zeros(1000, np.int64))
+        e2e = rng.uniform(1e-4, 1e-1, 1000)
+        want = ks[np.lexsort((ks, e2e))[::-1][:16]]
+        for perm_seed in (1, 2):
+            tb = _tb(head_rate=0.0, tail_k=16)
+            order = np.random.default_rng(perm_seed).permutation(1000)
+            for i in order:           # append order must not matter
+                tb.complete_window(ks[i:i + 1], [0.0], e2e[i:i + 1])
+            assert sorted(int(k) for k in tb.tail_keys()) == \
+                sorted(int(k) for k in want)
+
+    def test_head_zero_retains_only_the_tail(self):
+        tb = _tb(head_rate=0.0, tail_k=4)
+        ks = bundle_key(np.arange(32), np.zeros(32, np.int64))
+        e2e = np.linspace(1e-3, 2e-3, 32)
+        tb.record_window("uplink", ks, np.zeros(32), e2e)
+        tb.complete_window(ks, np.zeros(32), e2e)
+        tb.end_window()
+        kept = tb.spans()["key"]
+        assert sorted(set(int(k) for k in kept)) == \
+            sorted(int(k) for k in ks[-4:])
+
+    def test_compaction_preserves_retained_and_incomplete(self):
+        tb = _tb(head_rate=0.0, tail_k=2, compact_every=1)
+        ks = bundle_key(np.arange(8), np.zeros(8, np.int64))
+        e2e = np.linspace(1e-3, 8e-3, 8)
+        tb.record_window("uplink", ks, np.zeros(8), e2e)
+        # one bundle never completes -> its spans must survive compaction
+        tb.complete_window(ks[:7], np.zeros(7), e2e[:7])
+        tb.end_window()                          # triggers _compact
+        buffered = set(int(k) for c in tb._chunks for k in c[1])
+        assert int(ks[7]) in buffered   # incomplete: kept until it completes
+        assert int(ks[0]) not in buffered        # completed, unretained
+        exported = set(int(k) for k in tb.spans()["key"])
+        assert exported == {int(ks[5]), int(ks[6])}  # tail top-2 only
+
+
+class TestGoldenPerfetto:
+    def _small(self) -> TraceBuffer:
+        tb = _tb(head_rate=1.0, tail_k=4)
+        ks = bundle_key([1, 2], [0, 1])
+        tb.record_window("emit_wait", ks, [0.0, 0.001], [0.002, 0.003])
+        tb.record_window("uplink", ks, [0.002, 0.003], [0.004, 0.0055],
+                         pid=np.asarray([0, 1], np.uint64), aux=[0, 1])
+        tb.complete_window(ks, [0.0, 0.001], [0.01, 0.02])
+        tb.end_window()
+        return tb
+
+    def test_golden_bytes(self):
+        got = self._small().to_perfetto_json()
+        # canonical order: bundle key, then pid (packet copies before the
+        # BUNDLE_PID-namespace bundle-level spans), keys sorted, compact
+        want = (
+            '{"displayTimeUnit":"ns","traceEvents":['
+            '{"args":{"aux":0,"daq":0,"event":1,'
+            '"trace_id":"0000000000010000"},'
+            '"cat":"bundle","dur":2000.0,"name":"uplink","ph":"X",'
+            '"pid":65536,"tid":1,"ts":2000.0},'
+            '{"args":{"daq":0,"event":1,"trace_id":"0000000000010000"},'
+            '"cat":"bundle","dur":2000.0,"name":"emit_wait","ph":"X",'
+            '"pid":65536,"tid":0,"ts":0.0},'
+            '{"args":{"aux":1,"daq":1,"event":2,'
+            '"trace_id":"0000000000020001"},'
+            '"cat":"bundle","dur":2500.0,"name":"uplink","ph":"X",'
+            '"pid":131073,"tid":2,"ts":3000.0},'
+            '{"args":{"daq":1,"event":2,"trace_id":"0000000000020001"},'
+            '"cat":"bundle","dur":2000.0,"name":"emit_wait","ph":"X",'
+            '"pid":131073,"tid":0,"ts":1000.0}]}').encode()
+        assert got == want
+
+    def test_export_is_valid_trace_event_json(self):
+        doc = json.loads(self._small().to_perfetto_json())
+        assert set(doc) == {"displayTimeUnit", "traceEvents"}
+        for ev in doc["traceEvents"]:
+            assert ev["ph"] == "X"
+            assert ev["dur"] >= 0 and isinstance(ev["pid"], int)
+            assert parse_trace_id(ev["args"]["trace_id"]) == ev["pid"]
+
+    def test_summary_roundtrip(self):
+        tb = self._small()
+        tb2 = TraceBuffer.from_summary(
+            json.loads(json.dumps(tb.to_summary())))
+        assert tb2.to_perfetto_json() == tb.to_perfetto_json()
+        a, b = tb.completions(), tb2.completions()
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
+
+
+def _run(scenario: str, engine: str, steps: int = 24, **kw) -> Simulator:
+    sc = get_scenario(scenario)
+    cfg = sc.build_config(steps=steps, seed=0, engine=engine, trace=True,
+                          **kw)
+    sim = Simulator(cfg, scenario=sc)
+    r = sim.run()
+    assert not r.violations, r.violations
+    assert r.engine == engine, (r.engine, engine)
+    return sim
+
+
+class TestEngineParity:
+    """The fused engine materializes spans post-hoc from the superblock's
+    returned arrays; the host engine records inline. Identical span sets
+    (ids exact, times to float-association tolerance) on gated scenarios."""
+
+    @pytest.mark.parametrize("scenario", ["baseline", "straggler"])
+    def test_identical_span_sets(self, scenario):
+        sh = _run(scenario, "host").trace
+        sf = _run(scenario, "fused").trace
+        a, b = sh.spans(), sf.spans()
+        assert len(a["key"]) == len(b["key"]) > 0
+        for f in ("stage", "key", "pid", "aux"):
+            assert np.array_equal(a[f], b[f]), f
+        for f in ("t0", "t1"):
+            assert np.allclose(a[f], b[f], rtol=1e-9, atol=1e-12), f
+        ka, _, da = sh.completions()
+        kb, _, db = sf.completions()
+        assert np.array_equal(np.sort(ka), np.sort(kb))
+        assert np.allclose(np.sort(da), np.sort(db), rtol=1e-9, atol=1e-12)
+
+    def test_sampled_parity(self):
+        sh = _run("baseline", "host", trace_sample=0.25, trace_tail_k=8)
+        sf = _run("baseline", "fused", trace_sample=0.25, trace_tail_k=8)
+        a, b = sh.trace.spans(), sf.trace.spans()
+        assert np.array_equal(a["key"], b["key"])
+        assert np.array_equal(sh.trace.tail_keys(), sf.trace.tail_keys())
+
+    def test_fused_tracing_is_retrace_free(self):
+        from repro.simnet import fused
+        t0 = fused.FUSED_TRACES
+        Simulator(SimConfig(steps=16, engine="fused", **LOOP_KW)).run()
+        base_traces = fused.FUSED_TRACES - t0
+        Simulator(SimConfig(steps=16, engine="fused", trace=True,
+                            **LOOP_KW)).run()
+        assert fused.FUSED_TRACES - t0 == base_traces, \
+            "enabling tracing retraced the fused superblock"
+
+
+class TestCriticalPath:
+    def test_reconciles_under_one_percent(self):
+        tb = _run("baseline", "fused").trace
+        for pct in (50.0, 99.0):
+            d = stage_decomposition(tb, pct)
+            assert d is not None
+            assert d["reconcile_rel_err"] < 0.01
+            assert d["dominant"] in d["stages"]
+        ks, te, td = tb.completions()
+        ssum, e2e, rel = reconcile(tb, int(ks[0]))
+        assert rel < 0.01
+
+    def test_path_partitions_the_bundle_interval(self):
+        tb = _run("baseline", "host").trace
+        ks, te, td = tb.completions()
+        path = critical_path(tb, int(ks[0]))
+        assert [s for s, _ in path if s != "emit_wait"][0] == "uplink"
+        assert path[-1][0] == "reassembly"
+        assert all(dur >= -1e-12 for _, dur in path)
+
+    def test_summary_json_shape(self):
+        tb = _run("baseline", "host").trace
+        s = summary_json(tb, (99.0,))
+        assert s["n_completions"] > 0
+        p99 = s["percentiles"]["p99"]
+        assert parse_trace_id(p99["trace_id"]) >= 0
+        assert p99["dominant"] in p99["stages"]
+
+
+class TestControldPropagation:
+    """Trace ids ride the message envelope; the daemon records one span
+    per traced message. InProc and socket must agree on everything but
+    wall-clock durations."""
+
+    def _play(self, transport, tb):
+        client = ControldClient(transport)
+        client.trace = trace_id(101)
+        token = client.reserve(policy="proportional")["token"]
+        client.register(token, member_id=0, node_id=0, lane_bits=1)
+        client.trace = trace_id(202)
+        client.send_state(token, member_id=0, fill=0.4)
+        with pytest.raises(Exception):
+            client.send_state("bogus", member_id=0, fill=0.4)  # rejected
+        client.trace = ""                       # untraced -> no span
+        client.tick(current_event=500)
+        sp = tb.spans()
+        return [(tb.stage_names[int(s)], int(k), int(a))
+                for s, k, a in zip(sp["stage"], sp["key"], sp["aux"])]
+
+    def test_inproc_and_socket_record_the_same_spans(self):
+        tb1, tb2 = _tb(), _tb()
+        d1 = ControlDaemon(n_instances=1, lease_s=10.0, trace=tb1)
+        d2 = ControlDaemon(n_instances=1, lease_s=10.0, trace=tb2)
+        server = SocketServer(d2)
+        host, port = server.start()
+        try:
+            sc = SocketClient(host, port)
+            s1 = self._play(InProcTransport(d1), tb1)
+            s2 = self._play(sc, tb2)
+            sc.close()
+        finally:
+            server.stop()
+        assert s1 == s2
+        kinds = [s for s, _, _ in s1]
+        assert kinds.count("controld.reserve") == 1
+        assert kinds.count("controld.send_state") == 2
+        assert "controld.tick" not in kinds     # untraced message
+        auxes = {(s, a) for s, _, a in s1 if s == "controld.send_state"}
+        assert auxes == {("controld.send_state", 1),
+                         ("controld.send_state", 0)}  # ok + rejected
+        assert all(k == 101 for s, k, _ in s1 if s != "controld.send_state")
+
+    def test_replay_records_nothing_and_digest_is_unchanged(self):
+        from repro.controld import Journal
+        tb = _tb()
+        d = ControlDaemon(n_instances=1, lease_s=10.0, journal=Journal(),
+                          trace=tb)
+        client = ControldClient(InProcTransport(d))
+        client.trace = trace_id(7)
+        token = client.reserve(policy="proportional")["token"]
+        client.register(token, member_id=0, node_id=0, lane_bits=1)
+        n_live = len(tb.spans()["key"])
+        assert n_live == 2
+        tb2 = _tb()
+        d2 = ControlDaemon.recover(d.journal, n_instances=1, lease_s=10.0,
+                                   trace=tb2)
+        assert len(tb2.spans()["key"]) == 0
+        assert d2.state_digest() == d.state_digest()
+
+    def test_simnet_controld_windows_are_traced(self):
+        sim = _run("baseline", "host", controld=True)
+        sp = sim.trace.spans()
+        names = {sim.trace.stage_names[int(s)] for s in sp["stage"]}
+        assert any(n.startswith("controld.") for n in names)
+        # window trace ids live in the (1 << 62) namespace
+        ctl = [int(k) for s, k in zip(sp["stage"], sp["key"])
+               if sim.trace.stage_names[int(s)].startswith("controld.")]
+        assert ctl and all(k >> 62 == 1 for k in ctl)
+
+
+class TestMetricsOnFused:
+    """Satellite: metrics no longer force the host engine — the fused
+    superblock's returned arrays feed the same emission path."""
+
+    MACHINE_STATE = {"process_rss_bytes"}   # real RSS, engine-independent
+
+    def _rows(self, engine: str) -> dict:
+        cfg = SimConfig(steps=16, engine=engine, metrics_every=1, **LOOP_KW)
+        sim = Simulator(cfg)
+        r = sim.run()
+        assert r.engine == engine
+        return sim.metrics.sample()
+
+    def test_registry_rows_match_host(self):
+        h = self._rows("host")
+        f = self._rows("fused")
+        assert set(h) == set(f)
+        for name in sorted(set(h) - self.MACHINE_STATE):
+            assert f[name] == pytest.approx(h[name], rel=1e-9, abs=1e-12), \
+                name
+
+    def test_exemplars_link_buckets_to_trace_ids(self):
+        cfg = SimConfig(steps=16, engine="fused", metrics_every=1,
+                        trace=True, **LOOP_KW)
+        sim = Simulator(cfg)
+        sim.run()
+        page = sim.metrics.render()
+        assert 'trace_id="' in page
+        ex = sim.trace.exemplars(LATENCY_BUCKETS_S)
+        assert ex
+        for bi, (tid, e2e) in ex.items():
+            assert parse_trace_id(tid) >= 0 and e2e > 0
+
+    def test_mix64_matches_fabric_spray(self):
+        # the local copy (import-cycle break) must stay the same hash
+        from repro.fabric.spray import mix64 as spray_mix64
+        xs = np.arange(0, 2**20, 9973, dtype=np.uint64)
+        assert np.array_equal(mix64(xs), spray_mix64(xs))
+
+
+class TestServeTrace:
+    def test_rebalance_loop_records_controld_spans(self):
+        import jax
+
+        from repro.configs import get_smoke_config
+        from repro.models import model as Mo
+        from repro.serve.engine import ServeConfig, ServingEngine
+
+        cfg = get_smoke_config("yi_6b")
+        params = Mo.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServingEngine(cfg, ServeConfig(n_replicas=2, lane_bits=1,
+                                             max_len=64, rebalance_every=2,
+                                             use_controld=True, trace=True),
+                            params)
+        for _ in range(4):
+            eng.submit(np.arange(5), max_new_tokens=3)
+        eng.run_until_done(max_ticks=60)
+        assert eng.stats["completed"] == 4
+        sp = eng.trace.spans()
+        names = {eng.trace.stage_names[int(s)] for s in sp["stage"]}
+        assert any(n.startswith("controld.") for n in names)
+        # setup messages (reserve/register) predate the first stamped
+        # window, so every span lives in the window-id namespace
+        assert len(sp["key"]) > 0
+        assert all(int(k) >> 62 == 1 for k in sp["key"])
+
+
+class TestFabricSpans:
+    """Two-tier fabric: per-LB/per-class aux on lb spans, two-hop VLB
+    paths visible as an extra 'fabric' span in the same packet chain."""
+
+    def _sim(self, **kw):
+        from repro.fabric import FabricSim, get_fabric_scenario
+        sc = get_fabric_scenario("vlb_spray")
+        sim = FabricSim(sc.build_config(trace=True, mode="vlb", **kw),
+                        scenario=sc)
+        r = sim.run()
+        assert not r.violations, r.violations
+        return sim
+
+    def test_vlb_two_hop_paths_are_distinct_span_trees(self):
+        sim = self._sim()
+        tb = sim.trace
+        sp = tb.spans()
+        names = [tb.stage_names[int(s)] for s in sp["stage"]]
+        assert "fabric" in names                 # inter-LB hops were taken
+        fab = np.asarray([n == "fabric" for n in names])
+        lb = np.asarray([n == "lb" for n in names])
+        # a fabric hop shares its packet chain with an lb span, and lands
+        # on a *different* stacked-calendar instance than the first hop
+        two_hop = 0
+        for pid in np.unique(sp["pid"][fab]):
+            mine = sp["pid"] == pid
+            assert (mine & lb).any()
+            insts = set(int(a) for a in sp["aux"][mine & (fab | lb)])
+            two_hop += len(insts) > 1
+        assert two_hop > 0
+        # lb aux is the stacked instance id: lb*2 + class < k_lbs*2
+        k = sim.cfg.k_lbs
+        assert all(0 <= int(a) < 2 * k for a in sp["aux"][lb])
+
+    def test_fabric_reconciles_and_exports(self):
+        tb = self._sim().trace
+        d = stage_decomposition(tb, 99.0)
+        assert d is not None and d["reconcile_rel_err"] < 0.01
+        doc = json.loads(tb.to_perfetto_json())
+        assert len(doc["traceEvents"]) > 0
