@@ -1,0 +1,149 @@
+"""controld HA cost: what warm-standby replication and failover cost.
+
+The HA tentpole's two promises have prices, and this bench pins both:
+
+* **Replication tax** — a leader ships every WAL entry to its standby
+  *synchronously* (the ack lands before the client reply, so any
+  client-visible state is durable on the standby). The heartbeat
+  message path is timed on an unreplicated journaled daemon and on an
+  ``HACluster`` leader with one standby; the gated figure is the
+  replicated rate, floored in baselines.json at 80% of
+  ``bench_controld``'s committed in-proc floor (4000 msg/s -> 3200) —
+  adding a standby must not drop the control plane below the paper's
+  heartbeat-absorption requirement. The batched leg (``SendStateBatch``,
+  the path simnet actually drives) shows the tax amortized to one
+  shipment per window. Digest invariants are asserted inline: after the
+  burst the standby's ``state_digest`` is byte-identical to the
+  leader's, and replication lag is exactly 0 entries.
+* **Failover time** — wall-clock from SIGKILL-ing the leader (in-proc
+  ``kill``) to the first *successful* mutating call against the
+  promoted successor, driven purely by a retrying ``ControldClient``
+  over a ``FailoverTransport`` (no external coordinator). Median over
+  several kill/promote/revive rounds, ceiling-gated in baselines.json.
+
+CI gates the replicated rate and the failover ceiling; trend.py tracks
+every metric against committed floors.
+"""
+from __future__ import annotations
+
+import time as _t
+
+from benchmarks.common import emit_json, row, timeit
+from repro.controld import (ControlDaemon, ControldClient, FailoverTransport,
+                            HACluster, InProcTransport, Journal, RetryPolicy)
+
+N_MEMBERS = 8
+HB_ROUNDS = 16       # heartbeats per timed call = N_MEMBERS * HB_ROUNDS
+M_BATCH = 1024       # batched-window lane width (matches bench_controld)
+FAILOVERS = 5        # kill/promote/revive rounds for the failover median
+FAILOVER_TERM_S = 0.05
+
+DAEMON_KW = dict(n_instances=1, lease_s=1e9, epoch_horizon=256,
+                 max_members=64)
+
+
+def _register(client):
+    token = client.reserve(policy="pid")["token"]
+    for m in range(N_MEMBERS):
+        client.register(token, member_id=m, node_id=m, lane_bits=1)
+    client.tick(current_event=0)
+    return token
+
+
+def _hb_burst(client, token):
+    def fn():
+        for _ in range(HB_ROUNDS):
+            for m in range(N_MEMBERS):
+                client.send_state(token, m, fill=0.25 + 0.05 * m)
+    return fn
+
+
+def run() -> dict:
+    msgs = N_MEMBERS * HB_ROUNDS
+
+    # -- unreplicated floor: one journaled daemon, in-proc ------------------
+    daemon = ControlDaemon(journal=Journal(), **DAEMON_KW)
+    client = ControldClient(InProcTransport(daemon))
+    token = _register(client)
+    us = timeit(_hb_burst(client, token), warmup=2, iters=20)
+    unreplicated = msgs / us * 1e6
+    row("ha_unreplicated_heartbeat", us / msgs,
+        f"{unreplicated:,.0f} msg/s journaled, no standby")
+
+    # -- replicated: leader + 1 warm standby, synchronous shipping ----------
+    cluster = HACluster(n_nodes=2, term_s=1e9, daemon_kwargs=DAEMON_KW)
+    rclient = ControldClient(cluster.client_endpoints()[0])
+    rtoken = _register(rclient)
+    us = timeit(_hb_burst(rclient, rtoken), warmup=2, iters=20)
+    replicated = msgs / us * 1e6
+    efficiency = replicated / unreplicated if unreplicated > 0 else 0.0
+    row("ha_replicated_heartbeat", us / msgs,
+        f"{replicated:,.0f} msg/s shipped to 1 standby "
+        f"({efficiency * 100:.0f}% of unreplicated)")
+
+    # synchronous-durability invariants: zero lag, byte-identical digest
+    leader, (standby,) = cluster.leader(), cluster.standbys()
+    assert leader.replicator.lag() == 0, "standby lags a synchronous leader"
+    assert (leader.daemon.state_digest()
+            == standby.daemon.state_digest()), "standby digest diverged"
+
+    # -- batched heartbeats, replicated: one shipment per window ------------
+    bkw = dict(DAEMON_KW, max_members=M_BATCH)
+    bcluster = HACluster(n_nodes=2, term_s=1e9, daemon_kwargs=bkw)
+    bclient = ControldClient(bcluster.client_endpoints()[0])
+    btoken = bclient.reserve(policy="pid")["token"]
+    ids = list(range(M_BATCH))
+    for m in ids:
+        bclient.register(btoken, member_id=m, node_id=m, lane_bits=1)
+    fills = [0.25 + 0.05 * (m % 16) for m in ids]
+    us = timeit(lambda: bclient.send_state_batch(btoken, ids, fills),
+                warmup=2, iters=20)
+    batched = M_BATCH / us * 1e6
+    row("ha_batched_replicated", us / M_BATCH,
+        f"{batched:,.0f} hb/s via one SendStateBatch of {M_BATCH}, "
+        "shipped as one WAL entry per window")
+
+    # -- failover: kill the leader, time the client-driven takeover ---------
+    fo = HACluster(n_nodes=2, term_s=FAILOVER_TERM_S, daemon_kwargs=DAEMON_KW)
+    retry = RetryPolicy(base_s=FAILOVER_TERM_S / 16.0,
+                        cap_s=FAILOVER_TERM_S / 8.0,
+                        max_elapsed_s=100.0 * FAILOVER_TERM_S, seed=0)
+    fclient = ControldClient(
+        FailoverTransport(fo.client_endpoints(), retry=retry))
+    ftoken = _register(fclient)
+    durations = []
+    for i in range(FAILOVERS):
+        dead = fo.kill_leader()
+        t0 = _t.perf_counter()
+        fclient.send_state(ftoken, i % N_MEMBERS, fill=0.5)
+        durations.append(_t.perf_counter() - t0)
+        fo.revive(dead)  # back as a fresh standby, caught up from backlog
+    durations.sort()
+    failover_ms = durations[len(durations) // 2] * 1e3
+    row("ha_failover", failover_ms * 1e3,
+        f"median {failover_ms:.1f}ms kill-to-first-accepted-mutation "
+        f"(term {FAILOVER_TERM_S * 1e3:.0f}ms, worst "
+        f"{durations[-1] * 1e3:.1f}ms over {FAILOVERS} takeovers)")
+    # the session survived every takeover: the token minted before the
+    # first kill is still honoured by the last successor
+    assert fo.leader().daemon.handle is not None
+    assert fo.leader().promotions >= 1
+
+    emit_json("ha", metrics={
+        "unreplicated_hb_per_s": unreplicated,
+        "replicated_hb_per_s": replicated,
+        "replication_efficiency": efficiency,
+        "batched_replicated_hb_per_s": batched,
+        "failover_ms": failover_ms,
+        "failover_worst_ms": durations[-1] * 1e3,
+    }, params={"n_members": N_MEMBERS, "hb_rounds": HB_ROUNDS,
+               "m_batch": M_BATCH, "failovers": FAILOVERS,
+               "failover_term_s": FAILOVER_TERM_S})
+    return {
+        "replicated_hb_per_s": replicated,
+        "failover_ms": failover_ms,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -12,16 +12,16 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_controld, bench_dispatch,
                             bench_epoch_switch, bench_fabric, bench_fairness,
-                            bench_ingest, bench_metrics, bench_reassembly,
-                            bench_route_throughput, bench_roofline,
-                            bench_simnet, bench_trace)
+                            bench_ha, bench_ingest, bench_metrics,
+                            bench_reassembly, bench_route_throughput,
+                            bench_roofline, bench_simnet, bench_trace)
 
     print("name,us_per_call,derived")
     failed = []
     for mod in (bench_route_throughput, bench_epoch_switch, bench_fairness,
                 bench_reassembly, bench_ingest, bench_dispatch,
-                bench_simnet, bench_fabric, bench_controld, bench_metrics,
-                bench_trace, bench_roofline):
+                bench_simnet, bench_fabric, bench_controld, bench_ha,
+                bench_metrics, bench_trace, bench_roofline):
         try:
             mod.run()
         except Exception:  # pragma: no cover

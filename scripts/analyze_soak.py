@@ -13,6 +13,12 @@ trend to each state-growth series:
 * ``simnet_epoch_switches``    — calendar churn must stay rate-bounded:
   the control loop schedules at most one switch per window per instance,
   so the end-to-end switch rate must be <= ``--churn-rate``/window.
+* ``controld_ha_failovers`` / ``controld_ha_last_failover_s`` — present
+  only in the HA failover leg (``run_simnet --kill-leader-every N``):
+  every observed takeover must complete within ``--max-failover-s`` of
+  sim time, and the RSS / pending-bundle trends *after the last
+  failover* must satisfy the same bounds as the whole run (a takeover
+  must not change the growth regime).
 
 Any violated bound FAILS the run (exit 1) — this is the nightly soak's
 hard gate, not a dashboard. ``--json`` writes the full trend report.
@@ -38,6 +44,10 @@ def parse_args(argv=None):
     ap.add_argument("--churn-rate", type=float, default=None,
                     help="max epoch switches per window (default: "
                          "n_instances read from the rows, else 1.0)")
+    ap.add_argument("--max-failover-s", type=float, default=0.5,
+                    help="max leader-failover duration in sim seconds "
+                         "(gated only when the HA failover series are "
+                         "present in the rows)")
     ap.add_argument("--min-rows", type=int, default=8,
                     help="fewer sampled rows than this is itself a failure")
     ap.add_argument("--json", default=None, help="write the trend report")
@@ -118,6 +128,50 @@ def analyze(rows, args) -> dict:
             report["violations"].append(
                 f"calendar churn {rate:.3f} switches/window exceeds "
                 f"{bound:.3f} — the control loop is thrashing epochs")
+
+    # -- HA failover leg (rows carry the HA gauges only under --ha) --------
+    fsteps, fcount = _series(rows, "controld_ha_failovers")
+    if fcount is not None and fcount[-1] > 0:
+        _, fdur = _series(rows, "controld_ha_last_failover_s")
+        worst = float(fdur.max()) if fdur is not None else 0.0
+        record("controld_ha_failovers", fsteps, fcount,
+               worst_failover_s=worst, bound_s=args.max_failover_s)
+        if worst > args.max_failover_s:
+            report["violations"].append(
+                f"leader failover took {worst:.3f}s of sim time "
+                f"(bound {args.max_failover_s:.3f}s) — takeover is not "
+                "bounded by the lease term")
+        # the growth regime must not change after a takeover: re-apply
+        # the RSS and pending bounds to the tail after the last failover
+        last_fo = float(fsteps[np.flatnonzero(np.diff(fcount) > 0)[-1] + 1]
+                        if (np.diff(fcount) > 0).any() else fsteps[0])
+        steps, pend = _series(rows, "simnet_bundles_pending")
+        if pend is not None:
+            tail = steps >= last_fo
+            if tail.sum() >= max(4, args.min_rows // 2):
+                sl = _slope(steps[tail], pend[tail])
+                report["series"]["simnet_bundles_pending"][
+                    "post_failover_slope"] = sl
+                if sl > args.pending_slope:
+                    report["violations"].append(
+                        f"pending-bundle state grows {sl:.4f}/window after "
+                        f"the last failover (bound {args.pending_slope:.4f})"
+                        " — takeover changed the growth regime")
+        steps, rss = _series(rows, "process_rss_bytes")
+        if rss is not None:
+            tail = steps >= last_fo
+            if tail.sum() >= max(4, args.min_rows // 2):
+                r = rss[tail]
+                half = len(r) // 2
+                first, second = r[:half].mean(), r[half:].mean()
+                growth = (second - first) / first if first > 0 else 0.0
+                report["series"]["process_rss_bytes"][
+                    "post_failover_growth_frac"] = float(growth)
+                if growth > args.rss_growth_frac:
+                    report["violations"].append(
+                        f"RSS grew {growth * 100:.1f}% after the last "
+                        f"failover (bound {args.rss_growth_frac * 100:.1f}%)"
+                        " — takeover changed the growth regime")
     return report
 
 

@@ -15,18 +15,34 @@ real CN-daemon clients:
     PYTHONPATH=src python scripts/run_controld.py --demo
     PYTHONPATH=src python scripts/run_controld.py --serve --port 18070 \\
         --journal /tmp/controld/journal.jsonl
+
+HA (DESIGN.md §Controld-HA): ``--serve`` plus ``--node-id``/``--lease-store``
+wraps the daemon in an ``HANode`` — leadership is a term-bounded lease in
+the shared file arbiter, ``--replicate-to`` names the standby endpoints the
+leader WAL-ships to, and ``--standby`` starts without claiming the lease.
+``--ha-demo`` (CI's failover smoke) spawns a leader + standby as real
+subprocesses, SIGKILLs the leader, and proves a retrying client completes
+reserve/heartbeat/Tick rounds against the promoted successor with the state
+digest intact:
+
+    PYTHONPATH=src python scripts/run_controld.py --ha-demo
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import signal
+import socket as socketlib
+import subprocess
 import sys
 import tempfile
+import threading
 import time
 
-from repro.controld import (ControlDaemon, ControldClient, Journal,
-                            SocketClient, SocketServer)
+from repro.controld import (ControlDaemon, ControldClient, FailoverTransport,
+                            FileLeaseStore, HANode, Journal, RetryPolicy,
+                            SocketClient, SocketServer, TransportError)
 
 
 def parse_args(argv=None):
@@ -63,7 +79,54 @@ def parse_args(argv=None):
                          "http://HOST:PORT/metrics (0 = ephemeral, the "
                          "bound port is printed)")
     ap.add_argument("--json", default=None, help="write the summary here")
+    # -- HA (DESIGN.md §Controld-HA) ------------------------------------------
+    ap.add_argument("--ha-demo", action="store_true",
+                    help="failover smoke: subprocess leader + standby, "
+                         "SIGKILL the leader, client completes its rounds "
+                         "against the promoted successor (digest audited)")
+    ap.add_argument("--node-id", default=None,
+                    help="with --serve: run as HA node NAME (requires "
+                         "--lease-store)")
+    ap.add_argument("--lease-store", default=None,
+                    help="shared lease-arbiter file (FileLeaseStore)")
+    ap.add_argument("--lease-term-s", type=float, default=1.0,
+                    help="leadership lease term; a dead leader is taken "
+                         "over within ~one term")
+    ap.add_argument("--replicate-to", action="append", default=[],
+                    metavar="NAME=HOST:PORT",
+                    help="standby endpoint to WAL-ship to (repeatable)")
+    ap.add_argument("--standby", action="store_true",
+                    help="start as a warm standby (do not claim the lease "
+                         "at startup; promote only after it lapses)")
     return ap.parse_args(argv)
+
+
+class _LazyPeer:
+    """Replication transport to a peer that (re)connects on demand: at
+    startup or across a standby restart the endpoint may be down — every
+    failure surfaces as ``TransportError`` (the replicator marks the peer
+    dead; the serve ticker's ``reattach_dead_peers`` retries later)."""
+
+    def __init__(self, host: str, port: int):
+        self.host, self.port = host, int(port)
+        self._c = None
+
+    def call(self, msg):
+        try:
+            if self._c is None:
+                self._c = SocketClient(self.host, self.port, timeout_s=5.0)
+            return self._c.call(msg)
+        except (OSError, TransportError) as e:
+            if self._c is not None:
+                self._c.close()
+                self._c = None
+            raise TransportError(
+                f"peer {self.host}:{self.port}: {e}") from e
+
+    def close(self) -> None:
+        if self._c is not None:
+            self._c.close()
+            self._c = None
 
 
 def serve(args) -> int:
@@ -71,6 +134,15 @@ def serve(args) -> int:
     metrics = None
     quota = dict(quota_msgs_per_s=args.quota_msgs_per_s,
                  quota_burst=args.quota_burst)
+    if args.node_id and not args.lease_store:
+        print("--node-id requires --lease-store", file=sys.stderr)
+        return 2
+    if args.node_id and not args.journal:
+        # HA replication mirrors the WAL into the standby's journal; a
+        # journal-less HA node would re-apply every shipment from seq 0
+        args.journal = os.path.join(
+            tempfile.mkdtemp(prefix=f"controld_{args.node_id}_"),
+            "journal.jsonl")
     if args.metrics_port is not None:
         from repro.telemetry.registry import MetricsRegistry
         metrics = MetricsRegistry()
@@ -108,12 +180,34 @@ def serve(args) -> int:
         daemon = ControlDaemon(n_instances=args.n_instances,
                                lease_s=args.lease_s, journal=journal,
                                metrics=metrics, **quota)
-    server = SocketServer(daemon, host=args.host, port=args.port,
+    handler, node, stop_beat = daemon, None, threading.Event()
+    if args.node_id:
+        store = FileLeaseStore(args.lease_store, term_s=args.lease_term_s)
+        node = HANode(args.node_id, daemon, store, metrics=metrics)
+        for spec in args.replicate_to:
+            name, addr = spec.split("=", 1)
+            peer_host, peer_port = addr.rsplit(":", 1)
+            node.peers[name] = _LazyPeer(peer_host, int(peer_port))
+        if not args.standby:
+            node.step()  # claim the lease now -> leader; attach peers
+        handler = node
+    server = SocketServer(handler, host=args.host, port=args.port,
                           metrics=metrics)
     host, port = server.start()
+    role = f", ha-node {args.node_id} role={node.role}" if node else ""
     print(f"controld serving on {host}:{port} "
           f"(journal={args.journal or 'in-memory'}, "
-          f"replayed {recovered} entries)", flush=True)
+          f"replayed {recovered} entries{role})", flush=True)
+    if node is not None:
+        # lease beat: the leader renews (and repairs dead standbys), a
+        # standby claims within ~term/4 of the lease lapsing — failover
+        # does not have to wait for client traffic
+        def _beat():
+            period = max(0.02, args.lease_term_s / 4.0)
+            while not stop_beat.wait(period):
+                node.step()
+                node.reattach_dead_peers()
+        threading.Thread(target=_beat, daemon=True).start()
     if metrics is not None:
         from repro.telemetry.export import start_http_server
         _, mport = start_http_server(metrics, host=args.host,
@@ -125,6 +219,7 @@ def serve(args) -> int:
     except KeyboardInterrupt:
         return 0
     finally:
+        stop_beat.set()
         server.stop()
 
 
@@ -243,8 +338,150 @@ def demo(args) -> int:
     return 0
 
 
+def _free_port() -> int:
+    s = socketlib.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def _wait_port(port: int, timeout_s: float = 15.0) -> bool:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        try:
+            socketlib.create_connection(("127.0.0.1", port),
+                                        timeout=0.5).close()
+            return True
+        except OSError:
+            time.sleep(0.05)
+    return False
+
+
+def ha_demo(args) -> int:
+    """The failover smoke CI runs: leader + warm standby as real
+    subprocesses over one file lease arbiter, a client doing
+    reserve/register/heartbeat/Tick rounds, SIGKILL the leader mid-run —
+    the retrying client must complete its rounds against the promoted
+    successor, and the standby's pre-kill digest must equal the leader's
+    (the WAL-shipping audit: the successor resumes byte-identical)."""
+    import repro.controld as _pkg
+    workdir = tempfile.mkdtemp(prefix="controld_ha_demo_")
+    lease = os.path.join(workdir, "lease.json")
+    ports = {"cd0": _free_port(), "cd1": _free_port()}
+    term = args.lease_term_s
+    cn_lease = max(args.lease_s, 4.0 * term)  # CN leases outlive a failover
+    env = dict(os.environ)
+    src = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(_pkg.__file__))))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    def spawn(name: str, peer: str, standby: bool) -> subprocess.Popen:
+        cmd = [sys.executable, os.path.abspath(__file__), "--serve",
+               "--host", "127.0.0.1", "--port", str(ports[name]),
+               "--node-id", name, "--lease-store", lease,
+               "--lease-term-s", str(term),
+               "--replicate-to", f"{peer}=127.0.0.1:{ports[peer]}",
+               "--journal", os.path.join(workdir, f"{name}.jsonl"),
+               "--lease-s", str(cn_lease),
+               "--n-instances", str(args.n_instances)]
+        if standby:
+            cmd.append("--standby")
+        return subprocess.Popen(cmd, env=env)
+
+    def node_status(port: int) -> dict:
+        c = ControldClient(SocketClient("127.0.0.1", port, timeout_s=5.0))
+        try:
+            return c.status()
+        finally:
+            c.close()
+
+    n = args.n_members
+    checks: dict[str, bool] = {}
+    procs = {"cd1": spawn("cd1", "cd0", standby=True),
+             "cd0": spawn("cd0", "cd1", standby=False)}
+    try:
+        for name, port in ports.items():
+            if not _wait_port(port):
+                print(f"node {name} never came up", file=sys.stderr)
+                return 1
+        time.sleep(max(0.1, term / 2.0))  # let the lease beat attach peers
+
+        def connect(port):
+            def factory():
+                return SocketClient("127.0.0.1", port, timeout_s=5.0)
+            return factory
+
+        retry = RetryPolicy(base_s=term / 16.0, cap_s=term / 8.0,
+                            max_elapsed_s=30.0 * term, seed=0)
+        client = ControldClient(
+            FailoverTransport([connect(ports["cd0"]), connect(ports["cd1"])],
+                              retry=retry),
+            client_id="hademo")
+        token = client.reserve(policy=args.policy)["token"]
+        reg = client.register_batch(token, list(range(n)), lane_bits=1)
+        checks["members_registered"] = not reg["rejected"]
+        client.tick(current_event=0)
+        for _ in range(4):
+            client.send_state_batch(token, list(range(n)), [0.4] * n)
+
+        st = {name: node_status(port) for name, port in ports.items()}
+        roles = {name: s["ha"]["role"] for name, s in st.items()}
+        checks["one_leader_one_standby"] = (
+            sorted(roles.values()) == ["leader", "standby"])
+        checks["standby_digest_tracks_leader"] = (
+            st["cd0"]["state_digest"] == st["cd1"]["state_digest"])
+
+        leader = next(name for name, r in roles.items() if r == "leader")
+        successor = "cd1" if leader == "cd0" else "cd0"
+        os.kill(procs[leader].pid, signal.SIGKILL)
+        procs[leader].wait()
+        t_kill = time.monotonic()
+
+        # the retrying client alone completes the failover
+        ok_hb = 0
+        for _ in range(3):
+            reply = client.send_state_batch(token, list(range(n)),
+                                            [0.5] * n)
+            ok_hb += int(reply["n_accepted"] == n and not reply["rejected"])
+        tick = client.tick(current_event=400)
+        failover_s = time.monotonic() - t_kill
+        checks["heartbeats_accepted_after_failover"] = ok_hb == 3
+        checks["tick_completed_after_failover"] = token in tick["sessions"]
+
+        after = node_status(ports[successor])
+        checks["successor_promoted"] = after["ha"]["role"] == "leader"
+        checks["generation_fenced"] = after["ha"]["generation"] >= 2
+        checks["failover_bounded"] = failover_s < 5.0 * term
+        summary = {
+            "workdir": workdir,
+            "leader_killed": leader,
+            "successor": successor,
+            "failover_s": round(failover_s, 3),
+            "lease_term_s": term,
+            "pre_kill_digest": st["cd0"]["state_digest"][:16],
+            "checks": checks,
+        }
+        print(json.dumps(summary, indent=2))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(summary, f, indent=2)
+        failed = [k for k, ok in checks.items() if not ok]
+        if failed:
+            print("FAILED: " + ", ".join(failed), file=sys.stderr)
+            return 1
+        return 0
+    finally:
+        for p in procs.values():
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+
+
 def main(argv=None) -> int:
     args = parse_args(argv)
+    if args.ha_demo:
+        return ha_demo(args)
     if args.serve:
         return serve(args)
     return demo(args)

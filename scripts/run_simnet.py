@@ -49,6 +49,15 @@ def parse_args(argv=None):
     ap.add_argument("--controld", action="store_true",
                     help="run the control plane as a session daemon "
                          "(repro.controld): CNs register/heartbeat/lease")
+    ap.add_argument("--ha", action="store_true",
+                    help="controld HA mode: an HACluster of warm standbys "
+                         "behind a failover transport (implies --controld)")
+    ap.add_argument("--kill-leader-every", type=int, default=0,
+                    metavar="N",
+                    help="SIGKILL the controld leader every N windows "
+                         "(the nightly soak's failover leg; implies --ha); "
+                         "each takeover is digest-audited and duration-"
+                         "gated at 1.25x the lease term")
     ap.add_argument("--policy", choices=["proportional", "pid"], default=None,
                     help="controld reweighting policy (implies --controld)")
     ap.add_argument("--compare-policy", action="store_true",
@@ -100,6 +109,11 @@ def build_and_run(args, frozen: bool, policy: str | None = None,
     if (args.controld or args.compare_policy or args.tournament
             or policy is not None):
         extra["controld"] = True
+    if args.ha or args.kill_leader_every:
+        extra["controld"] = True
+        extra["ha"] = True
+        if args.kill_leader_every:
+            extra["ha_kill_every"] = args.kill_leader_every
     if policy is not None:
         extra["controld_policy"] = policy
     if with_metrics and (args.metrics_interval or args.metrics_jsonl):

@@ -6,33 +6,46 @@ reserve a virtual LB instance, register members, stream heartbeat telemetry,
 and hold leases whose expiry triggers the same hit-less drain as an explicit
 failure. Per-reservation pluggable reweighting policies (proportional / PID
 fill controller), an event-sourced journal with snapshot + replay for
-hit-less daemon restart, and two property-equal transports (in-process and
-length-prefixed socket).
+hit-less daemon restart, two property-equal transports (in-process and
+length-prefixed socket), and HA: warm-standby WAL replication with
+lease-based leader failover (DESIGN.md §Controld-HA).
 """
 from repro.controld.daemon import (ControlDaemon, MemberLanes, Session,
                                    SessionError)
+from repro.controld.ha import (FileLeaseStore, HACluster, HANode, LeaseState,
+                               LeaseStore, NodeTransport)
 from repro.controld.journal import Entry, Journal
-from repro.controld.messages import (MESSAGE_TYPES, MUTATING_KINDS,
+from repro.controld.messages import (HA_KINDS, MESSAGE_TYPES, MUTATING_KINDS,
                                      Deregister, DeregisterBatch, Free,
-                                     MessageError, Register, RegisterBatch,
-                                     Reply, Reserve, ReserveFabric, SendState,
-                                     SendStateBatch, Status, Tick)
+                                     LeaseClaim, MessageError, Register,
+                                     RegisterBatch, ReplicaAck,
+                                     ReplicateEntries, Reply, Reserve,
+                                     ReserveFabric, SendState, SendStateBatch,
+                                     Status, Tick)
 from repro.controld.policy import (POLICIES, PIDFillPolicy, PolicyConfig,
                                    ProportionalPolicy, WeightPolicy,
                                    make_policy)
-from repro.controld.transport import (ControldClient, ControldError,
-                                      InProcTransport, SocketClient,
-                                      SocketServer, TransportError)
+from repro.controld.replication import Replicator, apply_entries
+from repro.controld.transport import (NOT_LEADER, ControldClient,
+                                      ControldError, FailoverTransport,
+                                      InProcTransport, RetryPolicy,
+                                      SocketClient, SocketServer,
+                                      TransportError)
 
 __all__ = [
     "ControlDaemon", "MemberLanes", "Session", "SessionError",
     "Entry", "Journal",
-    "MESSAGE_TYPES", "MUTATING_KINDS", "MessageError",
+    "MESSAGE_TYPES", "MUTATING_KINDS", "HA_KINDS", "MessageError",
     "Reserve", "ReserveFabric", "Free", "Register", "RegisterBatch",
     "Deregister", "DeregisterBatch", "SendState",
     "SendStateBatch", "Tick", "Status", "Reply",
+    "ReplicateEntries", "ReplicaAck", "LeaseClaim",
     "POLICIES", "PolicyConfig", "WeightPolicy", "ProportionalPolicy",
     "PIDFillPolicy", "make_policy",
+    "Replicator", "apply_entries",
+    "LeaseStore", "FileLeaseStore", "LeaseState", "HANode", "HACluster",
+    "NodeTransport",
     "ControldClient", "ControldError", "InProcTransport", "SocketClient",
-    "SocketServer", "TransportError",
+    "SocketServer", "TransportError", "FailoverTransport", "RetryPolicy",
+    "NOT_LEADER",
 ]

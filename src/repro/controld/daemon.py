@@ -223,7 +223,8 @@ class ControlDaemon:
                  metrics: Optional[MetricsRegistry] = None,
                  quota_msgs_per_s: Optional[float] = None,
                  quota_burst: Optional[float] = None,
-                 trace=None):
+                 trace=None,
+                 req_cache_size: int = 4096):
         self.n_instances = n_instances
         self.clock = clock
         self.lease_s = float(lease_s)
@@ -256,6 +257,16 @@ class ControlDaemon:
         self._token_counter = 0
         self._fabric_counter = 0
         self._replaying = False
+        # request-id dedup (idempotent resend across reconnect/failover):
+        # client-stamped ``req`` ids map to the reply the daemon already
+        # gave, so a resend after a lost reply or a mid-call failover
+        # never double-applies. The ``req`` rides in the journal payload,
+        # so replay (and a warm standby applying shipped entries) rebuilds
+        # this cache deterministically — a resend lands correctly on the
+        # *successor* too. FIFO-evicted at ``req_cache_size`` (insertion
+        # order is replay-deterministic).
+        self.req_cache_size = int(req_cache_size)
+        self._req_replies: dict[str, M.Reply] = {}
         self._handlers = {
             M.Reserve.KIND: self._reserve,
             M.Free.KIND: self._free,
@@ -279,21 +290,37 @@ class ControlDaemon:
 
     # -- the single entry point ----------------------------------------------
     def handle(self, msg, now: Optional[float] = None) -> M.Reply:
-        """Journal (mutating kinds, WAL-style: before execution, so replay
-        sees the exact accepted sequence — rejected messages replay to the
-        same rejection), execute, reply. Protocol errors become
-        ``Reply(ok=False)``; anything else is a bug and propagates."""
+        """Dedup (client request ids), journal (mutating kinds, WAL-style:
+        before execution, so replay sees the exact accepted sequence —
+        rejected messages replay to the same rejection), execute, reply.
+        Protocol errors become ``Reply(ok=False)``; anything else is a bug
+        and propagates. A resent ``req`` the daemon has already answered
+        returns the cached reply *before* the journal append — a resend is
+        never a second WAL entry."""
         fn = self._handlers.get(msg.KIND)
         if fn is None:
             return M.Reply(False, error=f"unhandled message {msg.KIND!r}")
         if now is None:
             now = float(self.clock())
+        req = getattr(msg, "req", "")
+        if req:
+            cached = self._req_replies.get(req)
+            if cached is not None:
+                return cached
         if (msg.KIND in M.MUTATING_KINDS and not self._replaying
                 and self.journal is not None):
             payload = M.to_wire(msg)
             payload.pop("kind")
             payload["now"] = now
             self.journal.append(msg.KIND, payload)
+        reply = self._execute(fn, msg, now)
+        if req and msg.KIND in M.MUTATING_KINDS:
+            self._req_replies[req] = reply
+            if len(self._req_replies) > self.req_cache_size:
+                del self._req_replies[next(iter(self._req_replies))]
+        return reply
+
+    def _execute(self, fn, msg, now: float) -> M.Reply:
         mx = None if self._replaying else self._mx
         tr = (self.trace if self.trace is not None and not self._replaying
               and getattr(msg, "trace", "") else None)
@@ -774,7 +801,11 @@ class ControlDaemon:
                 "fabrics": {fid: dict(fab)
                             for fid, fab in sorted(self.fabrics.items())},
                 "free_instances": list(self._free_instances),
-                "journal_seq": self.journal.seq if self.journal else -1}
+                "journal_seq": self.journal.seq if self.journal else -1,
+                # lets a remote admin audit replay/replication fidelity
+                # over the wire (the HA failover smoke compares the
+                # successor's digest to the dead leader's)
+                "state_digest": self.state_digest()}
 
     # -- event-sourced recovery ----------------------------------------------
     def replay(self, entries: list[Entry]) -> int:

@@ -76,6 +76,14 @@ class Journal:
         self._since_compact = 0
         self._compacted = False  # the live file no longer holds seq 0..
         self._fh: Optional[IO[str]] = None
+        #: observer called with each freshly appended Entry — the HA
+        #: leader's replication tap (``controld.ha``). Never fired by
+        #: ``append_entry`` (a standby applying *shipped* entries) or
+        #: ``adopt`` (recovery).
+        self.on_append = None
+        #: optional ``testing.faults.FaultInjector`` — threads named
+        #: crash points through every write/rename step below
+        self.faults = None
         if path is not None:
             os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
             self._fh = open(path, "a", encoding="utf-8")
@@ -85,14 +93,57 @@ class Journal:
         """Sequence number of the last entry (-1 when empty)."""
         return self._seq
 
+    def _fault(self, point: str) -> None:
+        if self.faults is not None:
+            self.faults.crashpoint(point)
+
+    def _write_line(self, e: Entry) -> None:
+        """One flushed JSONL line, with torn-write injection: a scheduled
+        tear writes only a prefix of the line (a process killed inside
+        ``write(2)``) and then crashes."""
+        line = e.to_line() + "\n"
+        if self.faults is not None:
+            self._fault("journal.append.write")
+            torn = self.faults.torn_bytes("journal.append.write",
+                                          line.encode())
+            if torn is not None:
+                from repro.testing.faults import InjectedCrash
+                self._fh.write(torn.decode("utf-8", "ignore"))
+                self._fh.flush()
+                raise InjectedCrash("injected torn write at "
+                                    "journal.append.write")
+        self._fh.write(line)
+        self._fault("journal.append.flush")
+        self._fh.flush()
+
     def append(self, kind: str, payload: dict) -> Entry:
         e = Entry(seq=self._seq + 1, kind=kind, payload=payload)
         self._seq = e.seq
         if self.retain:
             self.entries.append(e)
         if self._fh is not None:
-            self._fh.write(e.to_line() + "\n")
-            self._fh.flush()
+            self._write_line(e)
+            if self.compact_every and self.snapshot_dir is not None:
+                self._since_compact += 1
+                if self._since_compact >= self.compact_every:
+                    self.compact()
+        if self.on_append is not None:
+            self.on_append(e)
+        return e
+
+    def append_entry(self, e: Entry) -> Entry:
+        """Append an already-sequenced entry (a replicated WAL shipment):
+        the standby's journal must mirror the leader's byte-for-byte, so
+        the entry keeps its seq/payload exactly. Contiguity is enforced;
+        ``on_append`` is NOT fired (shipped entries must not re-ship)."""
+        if e.seq != self._seq + 1:
+            raise ValueError(
+                f"non-contiguous replicated seq {e.seq} (at {self._seq})")
+        self._seq = e.seq
+        if self.retain:
+            self.entries.append(e)
+        if self._fh is not None:
+            self._write_line(e)
             if self.compact_every and self.snapshot_dir is not None:
                 self._since_compact += 1
                 if self._since_compact >= self.compact_every:
@@ -127,14 +178,53 @@ class Journal:
             self._fh.close()
             self._fh = None
 
+    def read_entries(self, from_seq: int = 0) -> list[Entry]:
+        """Entries with ``seq >= from_seq`` — the HA leader's backlog
+        source when a standby (re)attaches behind the log head. Retained
+        journals slice memory; file-backed journals read the live file
+        back, plus the latest snapshot when compaction moved the prefix
+        out of it."""
+        if self.retain:
+            return [e for e in self.entries if e.seq >= from_seq]
+        if self.path is None:
+            return []
+        if self._fh is not None:
+            self._fh.flush()
+        out: list[Entry] = []
+        if self._compacted and self.snapshot_dir is not None:
+            snap = self.latest_snapshot(self.snapshot_dir)
+            if snap is not None:
+                with open(os.path.join(snap, "entries.jsonl"),
+                          encoding="utf-8") as f:
+                    for line in f:
+                        if line.strip():
+                            e = Entry.from_line(line)
+                            if e.seq >= from_seq:
+                                out.append(e)
+        floor = out[-1].seq if out else from_seq - 1
+        if os.path.exists(self.path):
+            with open(self.path, encoding="utf-8") as f:
+                for line in f:
+                    if not line.strip():
+                        continue
+                    try:
+                        e = Entry.from_line(line)
+                    except (json.JSONDecodeError, KeyError, ValueError):
+                        break  # torn live tail: nothing after it is usable
+                    if e.seq > floor:
+                        out.append(e)
+                        floor = e.seq
+        return out
+
     # -- load / snapshot / restore -------------------------------------------
     @classmethod
-    def load(cls, path: str) -> "Journal":
+    def load(cls, path: str, faults=None) -> "Journal":
         """Read a JSONL journal back (for recovery). A torn final line —
         a daemon killed mid-append — is dropped, not replayed corrupt.
         The loaded ``entries`` are there to be replayed once (recover()
         releases them afterwards; the file stays the durable copy)."""
         j = cls(path=None)
+        j.faults = faults
         torn = False
         if os.path.exists(path):
             with open(path, encoding="utf-8") as f:
@@ -150,10 +240,17 @@ class Journal:
                         break  # torn tail from a mid-append kill
                     raise
         if torn:
-            # rewrite without the partial line so future appends stay valid
-            with open(path, "w", encoding="utf-8") as f:
+            # rewrite without the partial line so future appends stay
+            # valid — via tmp + atomic replace: a kill *during* the
+            # rewrite must not take the good prefix down with the torn
+            # tail (found by the crash-point sweep in tests/test_faults)
+            tmp = path + ".rewrite.tmp"
+            with open(tmp, "w", encoding="utf-8") as f:
                 for e in j.entries:
                     f.write(e.to_line() + "\n")
+            if faults is not None:
+                faults.crashpoint("journal.load.rewrite")
+            os.replace(tmp, path)
         j._seq = j.entries[-1].seq if j.entries else -1
         j.path = path
         j.retain = False  # from here on the file is the source of truth
@@ -162,10 +259,19 @@ class Journal:
 
     def snapshot(self, directory: str) -> str:
         """Atomic snapshot of the full entry history up to ``seq`` (ckpt.py
-        idiom: write to ``.tmp``, manifest last, one ``os.rename``)."""
+        idiom: write to ``.tmp``, manifest last, one ``os.rename``).
+
+        Idempotent per seq: if ``snap_<seq+1>`` already exists it is
+        complete (it can only appear via the final rename) and holds the
+        identical append-only history, so it is returned as-is — the old
+        rmtree-then-rename left a window where a kill destroyed the only
+        good snapshot (found by the crash-point sweep)."""
         final = os.path.join(directory, f"snap_{self.seq + 1:08d}")
+        if os.path.exists(final):
+            return final
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
+        self._fault("journal.snapshot.start")
         if not self.retain and self.path is not None:
             # disk is the source of truth for a file-backed journal; after
             # a compaction the history is split between the latest snapshot
@@ -178,24 +284,36 @@ class Journal:
             if prev is None:
                 shutil.copyfile(self.path, dst)
             else:
-                with open(dst, "wb") as out:
+                # concat prefix snapshot + live tail, dropping tail lines
+                # whose seq the prefix already covers: a tail that still
+                # holds pre-compaction entries (e.g. a kill between
+                # snapshot and truncate, then Journal.resume) must not
+                # snapshot the same seq twice (double-applied compaction,
+                # found by the crash-point sweep)
+                with open(os.path.join(prev, "manifest.json")) as f:
+                    prev_seq = int(json.load(f)["seq"])
+                with open(dst, "w", encoding="utf-8") as out:
                     with open(os.path.join(prev, "entries.jsonl"),
-                              "rb") as f:
+                              encoding="utf-8") as f:
                         shutil.copyfileobj(f, out)
-                    with open(self.path, "rb") as f:
-                        shutil.copyfileobj(f, out)
+                    with open(self.path, encoding="utf-8") as f:
+                        for line in f:
+                            if (line.strip() and
+                                    Entry.from_line(line).seq > prev_seq):
+                                out.write(line)
         else:
             with open(os.path.join(tmp, "entries.jsonl"), "w",
                       encoding="utf-8") as f:
                 for e in self.entries:
                     f.write(e.to_line() + "\n")
+        self._fault("journal.snapshot.entries")
         manifest = {"seq": self.seq, "n_entries": self.seq + 1,
                     "time": time.time()}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
+        self._fault("journal.snapshot.manifest")
         os.rename(tmp, final)
+        self._fault("journal.snapshot.rename")
         return final
 
     def compact(self) -> str:
@@ -209,8 +327,10 @@ class Journal:
         if self.snapshot_dir is None:
             raise ValueError("compact() requires snapshot_dir")
         final = self.snapshot(self.snapshot_dir)
+        self._fault("journal.compact.snapshotted")
         self._fh.close()
         self._fh = open(self.path, "w", encoding="utf-8")  # truncate
+        self._fault("journal.compact.truncated")
         self._compacted = True
         self._since_compact = 0
         return final

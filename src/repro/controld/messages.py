@@ -71,6 +71,7 @@ class Reserve:
     policy_params: dict = dataclasses.field(default_factory=dict)
     instance_hint: int = -1
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +81,7 @@ class Free:
     KIND = "free"
     token: str = ""
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +102,7 @@ class ReserveFabric:
     policy_params: dict = dataclasses.field(default_factory=dict)
     reserved_fraction: float = 0.25
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +118,7 @@ class Register:
     lane_bits: int = 0
     weight: float = 1.0
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +140,7 @@ class RegisterBatch:
     lane_bits: tuple = ()
     weights: tuple = ()
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +151,7 @@ class Deregister:
     token: str = ""
     member_id: int = 0
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +167,7 @@ class DeregisterBatch:
     token: str = ""
     member_ids: tuple = ()
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,6 +183,7 @@ class SendState:
     rate: float = 1.0
     healthy: bool = True
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,6 +202,7 @@ class SendStateBatch:
     rates: tuple = ()
     healthy: tuple = ()
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,6 +215,7 @@ class Tick:
     current_event: int = 0
     gc_event: int = -1
     trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +225,61 @@ class Status:
     KIND = "status"
     token: str = ""
     trace: str = ""
+    req: str = ""
+
+
+# -- HA / replication control messages (DESIGN.md §Controld-HA) ---------------
+@dataclasses.dataclass(frozen=True)
+class ReplicateEntries:
+    """Leader -> standby WAL shipment: a contiguous batch of journal
+    entries (``[{"seq", "kind", "payload"}, ...]``) the standby must
+    append to its own journal and apply through the replay path. An
+    *empty* batch is a probe: the reply's ``ReplicaAck`` tells the
+    leader where the standby's journal ends (bootstrap / catch-up).
+    ``generation`` is the leader's lease generation — a standby rejects
+    shipments from a stale generation (fencing a partitioned
+    ex-leader)."""
+
+    KIND = "replicate_entries"
+    leader: str = ""
+    generation: int = 0
+    entries: tuple = ()
+    trace: str = ""
+    req: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaAck:
+    """Standby -> leader acknowledgement, carried in the
+    ``ReplicateEntries`` reply's ``data`` (wire form round-tripped via
+    ``to_wire``/``from_wire``): ``ack_seq`` is the last journal seq the
+    standby holds; ``need_from`` (>= 0) asks the leader to re-ship from
+    that seq when the batch was non-contiguous with the standby's
+    journal."""
+
+    KIND = "replica_ack"
+    node: str = ""
+    ack_seq: int = -1
+    need_from: int = -1
+    generation: int = 0
+    trace: str = ""
+    req: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseClaim:
+    """Leadership announcement / fencing: a node that claimed the lease
+    (``generation`` from the arbiter) tells a peer. A leader receiving a
+    claim with a *newer* generation steps down to standby immediately —
+    a partitioned ex-leader must stop accepting mutations the moment it
+    hears from its successor, even before its next arbiter read."""
+
+    KIND = "lease_claim"
+    node: str = ""
+    generation: int = 0
+    expires: float = 0.0
+    trace: str = ""
+    req: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,11 +297,16 @@ MESSAGE_TYPES = {
     cls.KIND: cls
     for cls in (Reserve, Free, ReserveFabric, Register, RegisterBatch,
                 Deregister, DeregisterBatch, SendState, SendStateBatch,
-                Tick, Status)
+                Tick, Status, ReplicateEntries, ReplicaAck, LeaseClaim)
 }
+#: HA control-plane kinds: handled by the HA layer (``controld.ha``),
+#: never journaled as session state — replication carries journal
+#: entries, it must not *generate* them
+HA_KINDS = frozenset(
+    {ReplicateEntries.KIND, ReplicaAck.KIND, LeaseClaim.KIND})
 #: kinds that mutate daemon state and therefore must be journaled
 MUTATING_KINDS = frozenset(
-    k for k in MESSAGE_TYPES if k != Status.KIND)
+    k for k in MESSAGE_TYPES if k != Status.KIND and k not in HA_KINDS)
 
 
 # -- canonical dict form ------------------------------------------------------

@@ -20,9 +20,12 @@ journal's total order requires; no lock needed.
 from __future__ import annotations
 
 import dataclasses
+import random
 import selectors
 import socket
 import threading
+import time
+import uuid
 from typing import Optional
 
 import numpy as np
@@ -35,6 +38,44 @@ from repro.telemetry.registry import SIZE_BUCKETS, MetricsRegistry
 class TransportError(RuntimeError):
     """The transport failed (connection, framing) — distinct from a protocol
     rejection, which arrives as ``Reply(ok=False)``."""
+
+
+#: marker prefix standbys use to reject client mutations — the failover
+#: transport treats it as "try another endpoint", not a protocol error
+NOT_LEADER = "NOT_LEADER"
+
+
+class RetryPolicy:
+    """Capped exponential backoff with deterministic (seeded) jitter.
+
+    ``delays()`` yields the sleep before each retry round: ``base_s``
+    doubling (``multiplier``) up to ``cap_s``, each scaled by a jitter
+    factor uniform in ``[1-jitter, 1+jitter]`` drawn from a seeded RNG —
+    reruns with the same seed retry on the identical schedule (the
+    chaos-scenario determinism gate). ``max_elapsed_s``/``max_attempts``
+    bound the loop (0 = unbounded on that axis)."""
+
+    def __init__(self, base_s: float = 0.05, cap_s: float = 1.0,
+                 multiplier: float = 2.0, jitter: float = 0.5,
+                 max_elapsed_s: float = 30.0, max_attempts: int = 0,
+                 seed: int = 0):
+        self.base_s = float(base_s)
+        self.cap_s = float(cap_s)
+        self.multiplier = float(multiplier)
+        self.jitter = max(0.0, min(float(jitter), 1.0))
+        self.max_elapsed_s = float(max_elapsed_s)
+        self.max_attempts = int(max_attempts)
+        self.seed = int(seed)
+
+    def delays(self):
+        rng = random.Random(self.seed)
+        delay = self.base_s
+        n = 0
+        while self.max_attempts <= 0 or n < self.max_attempts:
+            scale = 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
+            yield min(delay, self.cap_s) * scale
+            delay = min(delay * self.multiplier, self.cap_s)
+            n += 1
 
 
 class InProcTransport:
@@ -267,14 +308,75 @@ class SocketServer:
             pass
 
 
-class SocketClient:
-    """Blocking request/reply client over one connection."""
+def _reconnect_counter(metrics: Optional[MetricsRegistry]):
+    if metrics is None:
+        return None
+    return metrics.counter(
+        "controld_client_reconnects",
+        "Client reconnect attempts after a lost connection/endpoint.")
 
-    def __init__(self, host: str, port: int, timeout_s: float = 10.0):
+
+class SocketClient:
+    """Blocking request/reply client over one connection.
+
+    With a ``RetryPolicy`` the client *reconnects* on connection loss —
+    capped exponential backoff + jitter — and resends the request on the
+    fresh connection instead of surfacing a raw socket error to every
+    caller. Resends are safe iff requests are idempotent: stamp request
+    ids (``ControldClient`` does) so the daemon dedups a resend whose
+    original reply was lost. Reconnect attempts are counted on the
+    ``controld_client_reconnects`` counter when ``metrics`` is given."""
+
+    def __init__(self, host: str, port: int, timeout_s: float = 10.0,
+                 retry: Optional[RetryPolicy] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 sleep=time.sleep):
+        self.host, self.port = host, port
+        self.timeout_s = timeout_s
+        self.retry = retry
+        self.sleep = sleep
+        self.reconnects = 0
+        self._mx_reconnects = _reconnect_counter(metrics)
         self._sock = socket.create_connection((host, port),
                                               timeout=timeout_s)
 
+    def _reconnect(self) -> None:
+        self.reconnects += 1
+        if self._mx_reconnects is not None:
+            self._mx_reconnects.inc()
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._sock = socket.create_connection((self.host, self.port),
+                                              timeout=self.timeout_s)
+
+    def _with_retry(self, attempt):
+        try:
+            return attempt()
+        except TransportError as e:
+            if self.retry is None:
+                raise
+            last = e
+        t0 = time.monotonic()
+        for delay in self.retry.delays():
+            if (self.retry.max_elapsed_s > 0
+                    and time.monotonic() - t0 > self.retry.max_elapsed_s):
+                break
+            self.sleep(delay)
+            try:
+                self._reconnect()
+                return attempt()
+            except (TransportError, OSError) as e:
+                last = e
+                continue
+        raise TransportError(
+            f"socket retries to {self.host}:{self.port} exhausted: {last}")
+
     def call(self, msg) -> M.Reply:
+        return self._with_retry(lambda: self._call_once(msg))
+
+    def _call_once(self, msg) -> M.Reply:
         try:
             self._sock.sendall(M.pack_frame(M.to_wire(msg)))
             wire = M.read_frame(lambda n: _recv_exactly(self._sock, n))
@@ -287,8 +389,13 @@ class SocketClient:
     def call_many(self, msgs) -> list[M.Reply]:
         """Pipelined burst: write every frame, then read the replies in
         request order — one wire round trip for the whole batch instead of
-        one per message (the selector server answers frames as they land)."""
+        one per message (the selector server answers frames as they land).
+        With a ``RetryPolicy`` a dropped connection resends the *whole*
+        burst on a fresh one (idempotent via request ids)."""
         msgs = list(msgs)
+        return self._with_retry(lambda: self._call_many_once(msgs))
+
+    def _call_many_once(self, msgs) -> list[M.Reply]:
         try:
             self._sock.sendall(
                 b"".join(M.pack_frame(M.to_wire(m)) for m in msgs))
@@ -309,6 +416,127 @@ class SocketClient:
             pass
 
 
+class FailoverTransport:
+    """Client-side failover across an ordered set of HA endpoints.
+
+    ``endpoints`` are live transports or zero-arg factories (factories
+    are re-invoked to reconnect after a failure — a live transport is
+    reused as-is, the in-proc case). Each attempt round tries every
+    endpoint once starting from the last known-good one; a
+    ``TransportError`` (dead node) or a ``NOT_LEADER`` rejection (warm
+    standby not yet promoted) moves to the next. Between rounds the
+    transport backs off per ``retry`` (capped exponential + seeded
+    jitter) using ``sleep`` — pass a virtual clock's ``advance`` for
+    simulated time — and invokes ``on_retry`` (the simnet hook that
+    steps the HA cluster so a standby can claim the lapsed lease).
+
+    Correctness contract: messages MUST carry request ids
+    (``ControldClient`` stamps them) — a resend whose original reply was
+    lost mid-failover is deduped by the (new) leader, never
+    double-applied."""
+
+    def __init__(self, endpoints, retry: Optional[RetryPolicy] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 sleep=time.sleep, clock=time.monotonic, on_retry=None):
+        if not endpoints:
+            raise ValueError("FailoverTransport needs >= 1 endpoint")
+        self.endpoints = list(endpoints)
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.sleep = sleep
+        self.clock = clock
+        self.on_retry = on_retry
+        self.reconnects = 0
+        self.failovers = 0  # times the answering endpoint changed
+        self._mx_reconnects = _reconnect_counter(metrics)
+        self._live = [ep if not callable(ep) else None
+                      for ep in self.endpoints]
+        self._primary = 0
+
+    def _get(self, i: int):
+        t = self._live[i]
+        if t is None:
+            try:
+                self._live[i] = t = self.endpoints[i]()
+            except OSError as e:
+                # a factory's connect refusal is an endpoint failure, not
+                # a caller error — the round moves to the next endpoint
+                raise TransportError(
+                    f"endpoint {i} connect failed: {e}") from e
+        return t
+
+    def _drop(self, i: int) -> None:
+        t = self._live[i]
+        if t is not None and callable(self.endpoints[i]):
+            try:
+                t.close()
+            except Exception:
+                pass
+            self._live[i] = None
+        self.reconnects += 1
+        if self._mx_reconnects is not None:
+            self._mx_reconnects.inc()
+
+    @staticmethod
+    def _not_leader(reply: M.Reply) -> bool:
+        return (not reply.ok) and reply.error.startswith(NOT_LEADER)
+
+    def _attempt_round(self, fn):
+        """One pass over the endpoints: (result, error). ``result`` is
+        None when every endpoint was dead or not-leader."""
+        n = len(self.endpoints)
+        last = None
+        for k in range(n):
+            i = (self._primary + k) % n
+            try:
+                out = fn(self._get(i))
+            except TransportError as e:
+                last = e
+                self._drop(i)
+                continue
+            first = out[0] if isinstance(out, list) else out
+            if isinstance(first, M.Reply) and self._not_leader(first):
+                last = TransportError(f"endpoint {i}: {first.error}")
+                continue
+            if i != self._primary:
+                self.failovers += 1
+                self._primary = i
+            return out, None
+        return None, last
+
+    def _call_with_failover(self, fn):
+        out, err = self._attempt_round(fn)
+        if err is None:
+            return out
+        t0 = self.clock()
+        for delay in self.retry.delays():
+            if (self.retry.max_elapsed_s > 0
+                    and self.clock() - t0 > self.retry.max_elapsed_s):
+                break
+            self.sleep(delay)
+            if self.on_retry is not None:
+                self.on_retry()
+            out, err = self._attempt_round(fn)
+            if err is None:
+                return out
+        raise TransportError(f"no live leader among "
+                             f"{len(self.endpoints)} endpoints: {err}")
+
+    def call(self, msg) -> M.Reply:
+        return self._call_with_failover(lambda t: t.call(msg))
+
+    def call_many(self, msgs) -> list[M.Reply]:
+        msgs = list(msgs)
+        return self._call_with_failover(lambda t: t.call_many(msgs))
+
+    def close(self) -> None:
+        for t in self._live:
+            if t is not None:
+                try:
+                    t.close()
+                except Exception:
+                    pass
+
+
 class ControldError(RuntimeError):
     """A protocol rejection surfaced by the high-level client."""
 
@@ -319,16 +547,32 @@ class ControldClient:
 
     Setting ``client.trace`` to a trace id (``telemetry.trace.trace_id``)
     stamps every subsequent outgoing message with it — the daemon links its
-    handling spans to that id. Clear it (``""``) to stop propagating."""
+    handling spans to that id. Clear it (``""``) to stop propagating.
 
-    def __init__(self, transport):
+    Every *mutating* message is also stamped with a client-unique request
+    id (``req``) — the idempotency key the daemon dedups on, which is what
+    makes transport-level resends (reconnect, failover) exactly-once: the
+    id is minted per logical call, so however many times the transport
+    retries the same message object, the daemon applies it at most once
+    and replays the same reply. ``client_id`` defaults to a random tag;
+    pass a fixed one for deterministic journals (simnet does)."""
+
+    def __init__(self, transport, client_id: Optional[str] = None):
         self.transport = transport
         self.trace = ""
+        self.client_id = (uuid.uuid4().hex[:8] if client_id is None
+                          else str(client_id))
+        self._req_n = 0
 
     def _stamp(self, msg):
+        patch = {}
         if self.trace and not getattr(msg, "trace", ""):
-            return dataclasses.replace(msg, trace=self.trace)
-        return msg
+            patch["trace"] = self.trace
+        if (self.client_id and msg.KIND in M.MUTATING_KINDS
+                and not getattr(msg, "req", "")):
+            patch["req"] = f"{self.client_id}:{self._req_n}"
+            self._req_n += 1
+        return dataclasses.replace(msg, **patch) if patch else msg
 
     def _call(self, msg) -> dict:
         reply = self.transport.call(self._stamp(msg))

@@ -97,7 +97,8 @@ class ServingEngine:
             # the control plane as a service: the engine is one tenant of a
             # ControlDaemon; replicas are leased members of its reservation
             from repro.controld import (ControlDaemon, ControldClient,
-                                        InProcTransport)
+                                        FailoverTransport, InProcTransport,
+                                        RetryPolicy)
             self.trace = None
             if serve_cfg.trace:
                 from repro.telemetry.trace import TraceBuffer
@@ -109,7 +110,13 @@ class ServingEngine:
                 n_instances=1, lease_s=serve_cfg.lease_s,
                 max_members=max(64, serve_cfg.n_replicas), journal=None,
                 trace=self.trace)
-            self.client = ControldClient(InProcTransport(self.daemon))
+            # the client failover path: mutating calls are request-id
+            # stamped (idempotent resend) and retried with capped backoff
+            # through FailoverTransport — the identical machinery an HA
+            # deployment uses, here over the single in-proc endpoint
+            self.client = ControldClient(FailoverTransport(
+                [InProcTransport(self.daemon)],
+                retry=RetryPolicy(max_elapsed_s=5.0, seed=0)))
             self.token = self.client.reserve(
                 policy=serve_cfg.controld_policy)["token"]
             self.client.register_batch(self.token,

@@ -78,6 +78,22 @@ def _restart_daemon_mid_run(sim, step: int) -> None:
         sim.restart_daemon()
 
 
+def _leader_failover(sim, step: int) -> None:
+    """The HA chaos script: mute a CN so its lease is mid-drain (epoch
+    switches in flight), then SIGKILL the controld leader two windows
+    later — the warm standby must take over within ~one lease term,
+    resume byte-identical, and finish the drain; the CN re-registers
+    against the *successor* in the final third."""
+    lo, hi = sim.cfg.steps // 3, (2 * sim.cfg.steps) // 3
+    if step == lo:
+        sim.muted.add(1)
+    elif step == lo + 2:
+        sim.kill_leader()
+    elif step == hi:
+        sim.muted.discard(1)
+        sim.reregister(1)
+
+
 SCENARIOS: dict[str, Scenario] = {
     "baseline": Scenario(
         name="baseline",
@@ -151,6 +167,19 @@ SCENARIOS: dict[str, Scenario] = {
                     "traffic unaffected",
         on_step=_restart_daemon_mid_run,
         overrides=dict(controld=True, timeout_windows=30, reweight_every=3),
+    ),
+    "leader_failover": Scenario(
+        name="leader_failover",
+        description="controld leader SIGKILLed mid-run, under load, while "
+                    "a CN lease is draining: the WAL-shipped warm standby "
+                    "promotes within ~one lease term (client-driven, "
+                    "idempotent resend), resumes byte-identical, and the "
+                    "plant keeps forwarding on the programmed tables — "
+                    "gated on takeover time, resume digest, and zero lost "
+                    "bundles (DESIGN.md §Controld-HA)",
+        on_step=_leader_failover,
+        overrides=dict(controld=True, ha=True, timeout_windows=30,
+                       reweight_every=2),
     ),
     "farm_1k": Scenario(
         name="farm_1k",

@@ -102,6 +102,16 @@ class SimConfig:
     controld_policy_params: dict = dataclasses.field(default_factory=dict)
     lease_s: Optional[float] = None          # default: 10 nominal windows
 
+    # controld HA mode (requires controld=True): the CP is an HACluster of
+    # warm standbys behind a FailoverTransport whose backoff sleeps *advance
+    # the virtual clock* — killing the leader (scenario hook or
+    # ha_kill_every) fast-forwards sim time by ~one lease term while the
+    # retrying client drives a standby's promotion (DESIGN.md §Controld-HA).
+    ha: bool = False
+    ha_nodes: int = 2
+    ha_term_s: Optional[float] = None        # default: 6 nominal windows
+    ha_kill_every: int = 0                   # soak leg: kill leader every N windows
+
     # observability: metrics_every > 0 enables a MetricsRegistry over the
     # run (E2E latency histogram, queue-fill gauges, window/packet totals)
     # and — when metrics_path is set — appends one JSONL time-series row
@@ -157,6 +167,10 @@ class SimReport:
     leases_expired: int = 0
     heartbeats_rejected: int = 0
     engine: str = "host"           # which engine produced this report
+    # HA-mode failover accounting (zero outside cfg.ha)
+    ha_failovers: int = 0
+    ha_revivals: int = 0
+    ha_failover_durations: list = dataclasses.field(default_factory=list)
 
     @property
     def packets_per_sec(self) -> float:
@@ -243,6 +257,15 @@ class Simulator:
         self.daemon_restarts = 0
         self.restart_digest_mismatches = 0
         self.heartbeats_rejected = 0
+        # HA-mode state (cfg.ha): the cluster, kill/promotion bookkeeping
+        self.cluster = None
+        self.ha_failovers = 0
+        self.ha_revivals = 0
+        self.ha_digest_mismatches = 0
+        self.ha_failover_durations: list[float] = []
+        self._ha_last_failover_s = 0.0
+        self._ha_kill_t: Optional[float] = None
+        self._ha_pre_kill_digest: Optional[str] = None
         if cfg.controld:
             self._start_controld()
         else:
@@ -348,6 +371,16 @@ class Simulator:
                   "Resident set size at scrape time (soak growth gate; "
                   "machine state, excluded from engine-parity checks)."
                   ).set_function(_rss_bytes)
+        if self.cluster is not None:
+            # soak failover leg: analyze_soak gates bounded failover
+            # duration and no post-failover RSS/pending slope change
+            reg.gauge("controld_ha_failovers",
+                      "Leader failovers completed so far."
+                      ).set_function(lambda: float(self.ha_failovers))
+            reg.gauge("controld_ha_last_failover_s",
+                      "Duration of the most recent leader failover in sim "
+                      "seconds (0 before the first)."
+                      ).set_function(lambda: self._ha_last_failover_s)
         if self.cfg.metrics_path:
             self._ts_writer = TimeSeriesWriter(self.cfg.metrics_path, reg)
 
@@ -374,23 +407,59 @@ class Simulator:
     # -- controld mode: the CP is a *service* the CNs talk to ------------------
     def _lease_s(self) -> float:
         cfg = self.cfg
-        return (cfg.lease_s if cfg.lease_s is not None
-                else 10.0 * cfg.window_period_s(cfg.triggers_per_step))
+        if cfg.lease_s is not None:
+            return cfg.lease_s
+        base = 10.0 * cfg.window_period_s(cfg.triggers_per_step)
+        if cfg.ha:
+            # a CN lease must comfortably outlive a leader failover
+            # (~1.25x the leadership term): the outage advances virtual
+            # time, and a shorter CN lease would lapse farm-wide on
+            # every takeover
+            base = max(base, 2.5 * self._ha_term_s())
+        return base
+
+    def _ha_term_s(self) -> float:
+        cfg = self.cfg
+        return (cfg.ha_term_s if cfg.ha_term_s is not None
+                else 6.0 * cfg.window_period_s(cfg.triggers_per_step))
 
     def _start_controld(self) -> None:
         """Stand up a ControlDaemon on the virtual clock; every CN registers
         as a client of its instance's reservation (one tenant per virtual LB
-        instance) and will heartbeat at window boundaries."""
+        instance) and will heartbeat at window boundaries. HA mode swaps the
+        single daemon for an HACluster behind a FailoverTransport whose
+        retry sleeps advance the virtual clock — a retrying heartbeat alone
+        drives a standby's lease claim and promotion."""
         from repro.controld import (ControlDaemon, ControldClient,
-                                    InProcTransport, Journal)
+                                    FailoverTransport, HACluster,
+                                    InProcTransport, Journal, RetryPolicy)
         cfg = self.cfg
-        daemon = ControlDaemon(
-            n_instances=cfg.n_instances, clock=self.clock.now,
-            lease_s=self._lease_s(),
-            epoch_horizon=max(16, 8 * cfg.triggers_per_step),
-            max_members=max(64, 4 * cfg.n_members),
-            journal=Journal(), trace=self.trace)
-        client = ControldClient(InProcTransport(daemon))
+        if cfg.ha:
+            term = self._ha_term_s()
+            self.cluster = HACluster(
+                n_nodes=cfg.ha_nodes, clock=self.clock.now, term_s=term,
+                daemon_kwargs=dict(
+                    n_instances=cfg.n_instances, lease_s=self._lease_s(),
+                    epoch_horizon=max(16, 8 * cfg.triggers_per_step),
+                    max_members=max(64, 4 * cfg.n_members)))
+            # backoff well under the lease term so promotion overshoot is
+            # a fraction of the 1.25x-term failover gate; sleeps advance
+            # virtual time (the outage costs sim seconds, not wall time)
+            retry = RetryPolicy(base_s=term / 16.0, cap_s=term / 8.0,
+                                max_elapsed_s=60.0 * term, seed=cfg.seed)
+            transport = FailoverTransport(
+                self.cluster.client_endpoints(), retry=retry,
+                sleep=self.clock.advance, clock=self.clock.now)
+            client = ControldClient(transport, client_id=f"sim{cfg.seed}")
+            daemon = self.cluster.leader().daemon
+        else:
+            daemon = ControlDaemon(
+                n_instances=cfg.n_instances, clock=self.clock.now,
+                lease_s=self._lease_s(),
+                epoch_horizon=max(16, 8 * cfg.triggers_per_step),
+                max_members=max(64, 4 * cfg.n_members),
+                journal=Journal(), trace=self.trace)
+            client = ControldClient(InProcTransport(daemon))
         policies = cfg.controld_policy
         if isinstance(policies, str):
             policies = [policies] * cfg.n_instances
@@ -441,6 +510,48 @@ class Simulator:
         self._bind_daemon(recovered, ControldClient(InProcTransport(recovered)))
         # recompile the routing tables from the recovered managers
         self._dp_cache = DataPlaneCache(self.managers, backend=cfg.backend)
+
+    def kill_leader(self) -> None:
+        """SIGKILL the HA leader (scenario hook / soak leg). Promotion is
+        client-driven: this window's heartbeats retry against the standbys
+        until the lease lapses and one claims it — ``_ha_after_window``
+        then audits the takeover and rebinds the sim to the successor."""
+        assert self.cluster is not None, "kill_leader needs controld HA mode"
+        leader = self.cluster.leader()
+        if leader is None:
+            return  # previous kill still failing over
+        self._ha_pre_kill_digest = leader.daemon.state_digest()
+        self._ha_kill_t = self.clock.now()
+        leader.kill()
+
+    def _ha_after_window(self) -> None:
+        """Detect a promotion that this window's client traffic drove:
+        audit the successor's resume digest against the dead leader's last
+        digest (byte-identical or a violation), record the failover
+        duration, rebind managers/CPs/routing to the promoted daemon, and
+        revive the corpse as a fresh standby (full-backlog catch-up)."""
+        lead = self.cluster.leader()
+        if lead is None or lead.daemon is self.daemon:
+            return
+        self.ha_failovers += 1
+        dur = 0.0
+        if self._ha_kill_t is not None and lead.promoted_at is not None:
+            dur = lead.promoted_at - self._ha_kill_t
+        self.ha_failover_durations.append(dur)
+        self._ha_last_failover_s = dur
+        lead.record_failover(dur)
+        if (self._ha_pre_kill_digest is not None
+                and lead.promoted_digest != self._ha_pre_kill_digest):
+            self.ha_digest_mismatches += 1
+        self._ha_kill_t = None
+        self._ha_pre_kill_digest = None
+        self._bind_daemon(lead.daemon, self.client)
+        self._dp_cache = DataPlaneCache(self.managers,
+                                        backend=self.cfg.backend)
+        for node in self.cluster.nodes:
+            if not node.alive:
+                self.cluster.revive(node)
+                self.ha_revivals += 1
 
     # -- data plane cache (rebuild only after an epoch-state change) ----------
     def dataplane(self) -> DataPlane:
@@ -672,7 +783,13 @@ class Simulator:
                                        timed_out=new_t)
 
         if cfg.controld:
+            if (self.cluster is not None and cfg.ha_kill_every
+                    and (step_idx + 1) % cfg.ha_kill_every == 0
+                    and step_idx + 1 < cfg.steps):
+                self.kill_leader()
             self._controld_window(step_idx, fill, busy_s, accepted)
+            if self.cluster is not None:
+                self._ha_after_window()
             self.queue_fill_trace.append(
                 (self.clock.now(), [round(float(f), 4) for f in fill]))
             self._purge_vanished(step_idx)
@@ -793,6 +910,20 @@ class Simulator:
             violations.append(
                 f"{self.restart_digest_mismatches} daemon restarts did not "
                 "replay to byte-identical state")
+        if self.cluster is not None:
+            if self.ha_digest_mismatches:
+                violations.append(
+                    f"{self.ha_digest_mismatches} failovers resumed from a "
+                    "digest differing from the dead leader's last state")
+            limit = 1.25 * self._ha_term_s()
+            slow = [d for d in self.ha_failover_durations if d > limit]
+            if slow:
+                violations.append(
+                    f"{len(slow)} failovers exceeded 1.25x the lease term "
+                    f"(worst {max(slow):.3f}s vs limit {limit:.3f}s)")
+            if self._ha_kill_t is not None:
+                violations.append(
+                    "leader killed but no standby promoted by run end")
         lossless = (self.wan.n_lost == 0 and self.daq_uplinks.n_lost == 0
                     and self.member_links.n_lost == 0
                     and self.farm.n_dropped == 0 and self.discarded == 0)
@@ -830,6 +961,10 @@ class Simulator:
             per_member_segments=dict(sorted(self.per_member_segments.items())),
             violations=violations,
             daemon_restarts=self.daemon_restarts,
+            ha_failovers=self.ha_failovers,
+            ha_revivals=self.ha_revivals,
+            ha_failover_durations=[round(d, 6)
+                                   for d in self.ha_failover_durations],
             leases_expired=(sum(s.counters["leases_expired"]
                                 for s in self.daemon.sessions.values())
                             if self.daemon is not None else 0),

@@ -1,0 +1,379 @@
+"""controld HA: lease arbiter semantics, WAL-shipped warm standbys,
+client-driven failover, idempotent resend across takeover, and the
+leader_failover chaos gate."""
+import dataclasses
+
+import pytest
+
+from repro.controld import (ControldClient, ControldError, FailoverTransport,
+                            FileLeaseStore, HACluster, Journal, LeaseStore,
+                            NodeTransport, RetryPolicy, SocketClient,
+                            SocketServer, TransportError)
+from repro.controld import messages as M
+from repro.controld.replication import STALE_GENERATION
+from repro.controld.transport import NOT_LEADER
+from repro.simnet import Simulator, get_scenario
+from repro.testing.faults import FaultInjector, FrozenClock, InjectedCrash
+
+DKW = dict(n_instances=1, lease_s=1e9, epoch_horizon=64, max_members=16)
+
+
+def _cluster(clock, term_s=1.0, n_nodes=2, store=None, **kw):
+    d = dict(DKW)
+    d.update(kw)
+    return HACluster(n_nodes=n_nodes, clock=clock, term_s=term_s,
+                     store=store, daemon_kwargs=d)
+
+
+def _setup(client, n_members=4):
+    token = client.reserve(policy="proportional")["token"]
+    for m in range(n_members):
+        client.register(token, member_id=m, node_id=m, lane_bits=1)
+    client.tick(current_event=0)
+    return token
+
+
+class TestLeaseArbiter:
+    def test_claim_free_then_renewal_keeps_generation(self):
+        clk = FrozenClock()
+        store = LeaseStore(term_s=1.0, clock=clk)
+        got = store.claim("a")
+        assert got.holder == "a" and got.generation == 1
+        clk.advance(0.5)
+        renewed = store.claim("a")
+        assert renewed.generation == 1 and renewed.expires == 1.5
+
+    def test_held_lease_blocks_rival_until_expiry(self):
+        clk = FrozenClock()
+        store = LeaseStore(term_s=1.0, clock=clk)
+        store.claim("a")
+        assert store.claim("b") is None          # still held
+        clk.advance(1.0)                          # expires <= now: lapsed
+        got = store.claim("b")
+        assert got.holder == "b" and got.generation == 2
+
+    def test_release_frees_without_generation_bump(self):
+        clk = FrozenClock()
+        store = LeaseStore(term_s=1.0, clock=clk)
+        store.claim("a")
+        store.release("a")
+        st = store.read()
+        assert st.holder == "" and st.generation == 1
+        # next claim is an ownership change: generation bumps
+        assert store.claim("b").generation == 2
+
+    def test_release_by_non_holder_is_a_noop(self):
+        clk = FrozenClock()
+        store = LeaseStore(term_s=1.0, clock=clk)
+        store.claim("a")
+        store.release("b")
+        assert store.read().holder == "a"
+
+    def test_file_store_shared_between_processes(self, tmp_path):
+        clk = FrozenClock()
+        path = str(tmp_path / "lease.json")
+        a = FileLeaseStore(path, term_s=1.0, clock=clk)
+        b = FileLeaseStore(path, term_s=1.0, clock=clk)
+        a.claim("a")
+        # the rival store reads the same file: blocked, then takes over
+        assert b.read().holder == "a"
+        assert b.claim("b") is None
+        clk.advance(1.5)
+        got = b.claim("b")
+        assert got.holder == "b" and got.generation == 2
+        assert a.read().generation == 2
+
+    def test_file_store_tolerates_garbage(self, tmp_path):
+        path = str(tmp_path / "lease.json")
+        with open(path, "w") as f:
+            f.write("{not json")
+        store = FileLeaseStore(path, term_s=1.0, clock=FrozenClock())
+        st = store.read()
+        assert st.holder == "" and st.generation == 0
+        assert store.claim("a").generation == 1
+
+
+class TestReplication:
+    def test_standby_digest_tracks_leader(self):
+        clk = FrozenClock()
+        cluster = _cluster(clk)
+        leader = cluster.leader()
+        client = ControldClient(NodeTransport(leader), client_id="t")
+        token = _setup(client)
+        for k in range(8):
+            client.send_state(token, k % 4, fill=0.25 + 0.05 * k)
+        (standby,) = cluster.standbys()
+        assert leader.daemon.journal.seq == standby.daemon.journal.seq
+        assert (leader.daemon.state_digest()
+                == standby.daemon.state_digest())
+        assert leader.replicator.lag() == 0
+
+    def test_standby_rejects_mutations_with_not_leader(self):
+        cluster = _cluster(FrozenClock())
+        (standby,) = cluster.standbys()
+        reply = NodeTransport(standby).call(M.Reserve())
+        assert not reply.ok and NOT_LEADER in reply.error
+        # reads still answer everywhere (Status is not mutating)
+        st = NodeTransport(standby).call(M.Status())
+        assert st.ok and st.data["ha"]["role"] == "standby"
+
+    def test_status_reports_ha_identity(self):
+        cluster = _cluster(FrozenClock())
+        leader = cluster.leader()
+        st = NodeTransport(leader).call(M.Status())
+        assert st.data["ha"] == {"node": "cd0", "role": "leader",
+                                 "generation": 1}
+
+    def test_dead_standby_skipped_then_caught_up_on_revive(self):
+        clk = FrozenClock()
+        cluster = _cluster(clk)
+        leader = cluster.leader()
+        client = ControldClient(NodeTransport(leader), client_id="t")
+        token = _setup(client)
+        (standby,) = cluster.standbys()
+        standby.kill()
+        # a dead standby must not freeze the leader
+        for k in range(6):
+            client.send_state(token, k % 4, fill=0.5)
+        assert not leader.replicator.peers["cd1"].alive
+        # revive = fresh empty journal; attach streams the full backlog
+        cluster.revive(standby)
+        assert standby.daemon.journal.seq == leader.daemon.journal.seq
+        assert (standby.daemon.state_digest()
+                == leader.daemon.state_digest())
+        assert leader.replicator.lag() == 0
+
+    def test_stale_generation_shipment_fenced(self):
+        clk = FrozenClock()
+        cluster = _cluster(clk)
+        node1 = cluster.nodes[1]
+        node1.generation = 5  # saw a newer leader
+        reply = NodeTransport(node1).call(
+            M.ReplicateEntries(leader="cd0", generation=1, entries=()))
+        assert not reply.ok and STALE_GENERATION in reply.error
+
+
+class TestFailover:
+    def _failover_client(self, cluster, clk, client_id="t"):
+        retry = RetryPolicy(base_s=0.2, cap_s=0.5, max_elapsed_s=120.0,
+                            seed=0)
+        ft = FailoverTransport(cluster.client_endpoints(), retry=retry,
+                               sleep=clk.advance, clock=clk)
+        return ControldClient(ft, client_id=client_id)
+
+    def test_retrying_client_alone_drives_takeover(self):
+        clk = FrozenClock()
+        cluster = _cluster(clk, term_s=1.0)
+        client = self._failover_client(cluster, clk)
+        token = _setup(client)
+        pre_kill = cluster.leader().daemon.state_digest()
+        cluster.kill_leader()
+        # no external coordinator: the retrying heartbeat promotes cd1
+        out = client.send_state(token, 0, fill=0.5)
+        assert out["lease_expires"] > 0
+        successor = cluster.leader()
+        assert successor.node_id == "cd1"
+        assert successor.generation == 2       # ownership change fenced
+        assert successor.promotions == 1
+        # the successor resumed from the dead leader's exact state
+        assert successor.promoted_digest == pre_kill
+
+    def test_session_survives_takeover(self):
+        clk = FrozenClock()
+        cluster = _cluster(clk, term_s=1.0)
+        client = self._failover_client(cluster, clk)
+        token = _setup(client)
+        cluster.kill_leader()
+        # the token minted by the dead leader is honoured by the successor
+        for k in range(4):
+            client.send_state(token, k, fill=0.25)
+        client.tick(current_event=1)
+        assert cluster.leader().daemon.sessions[token].started
+
+    def test_partitioned_ex_leader_steps_down(self):
+        clk = FrozenClock()
+        cluster = _cluster(clk, term_s=1.0)
+        old = cluster.leader()
+        # the leader goes silent (no renewals) without dying; its lease
+        # lapses and the standby claims it
+        clk.advance(1.5)
+        cluster.nodes[1].step()
+        assert cluster.nodes[1].role == "leader"
+        assert cluster.nodes[1].generation == 2
+        # the ex-leader's next mutating message makes it re-check the
+        # arbiter, discover the loss, and answer NOT_LEADER
+        reply = NodeTransport(old).call(M.Reserve())
+        assert not reply.ok and NOT_LEADER in reply.error
+        assert old.role == "standby"
+
+    def test_file_lease_store_drives_in_proc_failover(self, tmp_path):
+        clk = FrozenClock()
+        store = FileLeaseStore(str(tmp_path / "lease.json"), term_s=1.0,
+                               clock=clk)
+        cluster = _cluster(clk, term_s=1.0, store=store)
+        client = self._failover_client(cluster, clk)
+        token = _setup(client)
+        cluster.kill_leader()
+        client.send_state(token, 0, fill=0.5)
+        assert cluster.leader().node_id == "cd1"
+        assert store.read().holder == "cd1"
+
+
+class TestIdempotentResend:
+    """SendStateBatch (or any mutation) racing leader death must be
+    fully-applied-or-fully-absent, and the client's stamped request id
+    must make the resend against the successor safe either way."""
+
+    def _primed(self, clk, crash_at):
+        cluster = _cluster(clk, term_s=1.0)
+        leader = cluster.leader()
+        client = ControldClient(NodeTransport(leader), client_id="t")
+        token = _setup(client)
+        leader.faults = FaultInjector(seed=0, crash_at=crash_at)
+        return cluster, leader, token
+
+    def _promote_standby(self, cluster, clk):
+        clk.advance(1.5)
+        (standby,) = cluster.standbys()
+        standby.step()
+        assert standby.role == "leader"
+        return standby
+
+    def test_crash_before_ship_is_fully_absent_and_resend_applies_once(self):
+        clk = FrozenClock()
+        cluster, leader, token = self._primed(
+            clk, {"ha.leader.before_ship": 1})
+        msg = M.SendStateBatch(token=token, member_ids=(0, 1, 2, 3),
+                               fills=(0.9, 0.9, 0.9, 0.9),
+                               rates=(1.0,) * 4, healthy=(True,) * 4,
+                               req="t:99")
+        seq_before = leader.daemon.journal.seq
+        with pytest.raises(InjectedCrash):
+            NodeTransport(leader).call(msg)
+        # the leader journaled it but died before shipping: the batch is
+        # fully absent from the surviving replica
+        leader.kill()
+        successor = self._promote_standby(cluster, clk)
+        assert successor.daemon.journal.seq == seq_before
+        # the resend applies exactly once on the successor
+        reply = NodeTransport(successor).call(msg)
+        assert reply.ok
+        assert successor.daemon.journal.seq == seq_before + 1
+        sess = successor.daemon.sessions[token]
+        assert float(sess.lanes.fill[0]) == pytest.approx(0.9)
+
+    def test_crash_after_ship_is_fully_applied_and_resend_dedupes(self):
+        clk = FrozenClock()
+        cluster, leader, token = self._primed(
+            clk, {"ha.leader.after_ship": 1})
+        msg = M.SendStateBatch(token=token, member_ids=(0, 1, 2, 3),
+                               fills=(0.8, 0.8, 0.8, 0.8),
+                               rates=(1.0,) * 4, healthy=(True,) * 4,
+                               req="t:77")
+        with pytest.raises(InjectedCrash):
+            NodeTransport(leader).call(msg)
+        leader.kill()
+        successor = self._promote_standby(cluster, clk)
+        # the shipment landed before the crash: fully applied on the
+        # survivor, and the req-id cache (rebuilt by the replay-path
+        # apply) answers the resend WITHOUT a second application
+        seq_applied = successor.daemon.journal.seq
+        assert float(successor.daemon.sessions[token]
+                     .lanes.fill[0]) == pytest.approx(0.8)
+        reply = NodeTransport(successor).call(msg)
+        assert reply.ok
+        assert successor.daemon.journal.seq == seq_applied
+
+    def test_lapsed_lease_rejection_stamp_survives_takeover(self):
+        clk = FrozenClock()
+        cluster = _cluster(clk, term_s=1.0, lease_s=5.0)
+        leader = cluster.leader()
+        client = ControldClient(NodeTransport(leader), client_id="t")
+        token = _setup(client)
+        clk.advance(20.0)  # every CN lease lapses
+        with pytest.raises(ControldError) as e_leader:
+            client.send_state(token, 0, fill=0.5)
+        assert "lease lapsed at" in str(e_leader.value)
+        leader.kill()
+        successor = self._promote_standby(cluster, clk)
+        with pytest.raises(ControldError) as e_succ:
+            ControldClient(NodeTransport(successor),
+                           client_id="t2").send_state(token, 0, fill=0.5)
+        # identical lapsed-at stamp: the lease table replicated exactly
+        stamp = str(e_leader.value).split(" (now")[0]
+        assert stamp in str(e_succ.value)
+
+
+class TestSocketHANode:
+    def test_ha_node_serves_a_socket_endpoint(self):
+        from repro.controld import ControlDaemon
+        clk = FrozenClock()
+        store = LeaseStore(term_s=1e9, clock=clk)
+        from repro.controld.ha import HANode
+        node = HANode("cd0", ControlDaemon(clock=clk, journal=Journal(),
+                                           **DKW), store, clock=clk)
+        node.step()
+        assert node.role == "leader"
+        server = SocketServer(node)
+        host, port = server.start()
+        try:
+            client = ControldClient(SocketClient(host, port), client_id="t")
+            token = _setup(client, n_members=2)
+            out = client.send_state(token, 0, fill=0.5)
+            assert out["lease_expires"] > 0
+            assert client.status()["ha"]["role"] == "leader"
+            client.transport.close()
+        finally:
+            server.stop()
+
+
+class TestLeaderFailoverScenario:
+    def test_chaos_gates_pass_under_leader_kill(self):
+        sc = get_scenario("leader_failover")
+        sim = Simulator(sc.build_config(steps=45), dataclasses.replace(sc))
+        r = sim.run()
+        assert r.violations == []
+        assert r.ha_failovers >= 1
+        assert sim.ha_revivals >= 1
+        # zero lost bundles: the data plane kept forwarding throughout
+        assert r.bundles_completed == r.bundles_sent
+        assert r.bundles_timed_out == 0
+        # takeover bounded by ~one lease term
+        term = sim._ha_term_s()
+        assert all(d <= 1.25 * term for d in r.ha_failover_durations)
+        # after the post-failover revive, replication is current again
+        lead = sim.cluster.leader()
+        assert lead.replicator.lag() == 0
+
+    def test_failover_run_matches_never_killed_control(self):
+        sc = get_scenario("leader_failover")
+        chaos = Simulator(sc.build_config(steps=45),
+                          dataclasses.replace(sc)).run()
+
+        def control_hook(sim, step):
+            # same workload shape (mute + drain + re-register), no kill
+            lo, hi = sim.cfg.steps // 3, 2 * sim.cfg.steps // 3
+            if step == lo:
+                sim.muted.add(1)
+            if step == hi:
+                sim.muted.discard(1)
+                sim.reregister(1)
+
+        control = Simulator(sc.build_config(steps=45),
+                            dataclasses.replace(sc, on_step=control_hook)
+                            ).run()
+        assert control.violations == [] and control.ha_failovers == 0
+        # the kill is invisible to delivery: both runs complete everything
+        assert chaos.bundles_completed == chaos.bundles_sent
+        assert control.bundles_completed == control.bundles_sent
+        assert chaos.bundles_sent == control.bundles_sent
+
+    def test_deterministic_failover_schedule(self):
+        sc = get_scenario("leader_failover")
+        a = Simulator(sc.build_config(steps=30), dataclasses.replace(sc))
+        ra = a.run()
+        b = Simulator(sc.build_config(steps=30), dataclasses.replace(sc))
+        rb = b.run()
+        assert ra.ha_failovers == rb.ha_failovers
+        assert ra.ha_failover_durations == rb.ha_failover_durations
+        assert (a.daemon.state_digest() == b.daemon.state_digest())
